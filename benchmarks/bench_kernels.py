@@ -1,0 +1,44 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) + jnp twins per batch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.kernels import ref as kref
+from repro.kernels.ops import apply_partitioner, count_sketch, dispatch_slots
+from repro.core import Histogram, kip_update, uniform_partitioner
+from repro.data.generators import zipf_keys
+
+
+def run(n: int = 8192):
+    rows = []
+    stream = zipf_keys(n, num_keys=2_000, exponent=1.2, seed=0)
+    hist = Histogram.exact(stream).top(64)
+    kip = kip_update(uniform_partitioner(16), hist)
+    keys = jnp.asarray(stream[:n], jnp.int32)
+    tables = kip.tables()
+
+    jit_ref = jax.jit(lambda k: kref.partition_apply_ref(
+        k, tables.heavy_keys, tables.heavy_parts, tables.host_to_part,
+        num_hosts=kip.num_hosts))
+    jit_ref(keys).block_until_ready()
+    rows.append(("kernel/partition_apply_jnp", timer(
+        lambda: jit_ref(keys).block_until_ready()), f"{n} keys"))
+    # pallas interpret mode is NOT a performance path on CPU; correctness only
+    out = apply_partitioner(keys, tables, num_hosts=kip.num_hosts)
+    ok = bool(jnp.all(out == jit_ref(keys)))
+    rows.append(("kernel/partition_apply_pallas_matches", float(ok), "interpret=True"))
+
+    jit_cms = jax.jit(lambda k: kref.sketch_update_ref(k, jnp.ones(n, bool), depth=4, width=2048))
+    jit_cms(keys).block_until_ready()
+    rows.append(("kernel/sketch_update_jnp", timer(
+        lambda: jit_cms(keys).block_until_ready()), f"{n} keys, 4x2048"))
+
+    dest = jnp.asarray(np.random.default_rng(0).integers(0, 16, n), jnp.int32)
+    jit_d = jax.jit(lambda d: kref.dispatch_count_ref(d, jnp.ones(n, bool), num_parts=16))
+    jit_d(dest)[0].block_until_ready()
+    rows.append(("kernel/dispatch_count_jnp", timer(
+        lambda: jit_d(dest)[0].block_until_ready()), f"{n} records, 16 parts"))
+    return rows

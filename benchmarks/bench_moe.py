@@ -1,0 +1,67 @@
+"""Beyond-paper — KIP expert placement for MoE (the in-model DR).
+
+Simulates skewed routing (Zipf expert popularity, drifting) and measures
+EP-shard load imbalance + expert migrations for: static placement, greedy
+rebuild (Redist-analog), and KIP placement."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.moe.kip_placement import PlacementController
+
+E, SHARDS, STEPS = 128, 16, 40
+
+
+def _loads(rng, step):
+    ranks = rng.zipf(1.4, size=20_000)
+    ranks = ranks[ranks <= E] - 1
+    # drift: rotate expert popularity every 10 steps
+    shift = (step // 10) * 17
+    return np.bincount((ranks + shift) % E, minlength=E).astype(float)
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    series = [_loads(rng, s) for s in range(STEPS)]
+
+    # static identity placement
+    ctl = PlacementController(E, SHARDS, trigger=10**9)  # never updates
+    static_imb = [
+        (lambda sl: sl.max() / sl.mean())(ctl.shard_loads(l / l.sum())) for l in series
+    ]
+
+    # KIP placement
+    ctl = PlacementController(E, SHARDS, trigger=1.1)
+    kip_imb, moved = [], 0
+    for l in series:
+        ctl.observe(l)
+        changed, _, perm = ctl.maybe_update()
+        moved += int((perm != np.arange(E)).sum())
+        sl = ctl.shard_loads(l / l.sum())
+        kip_imb.append(sl.max() / sl.mean())
+
+    rows.append(("moe/imbalance_static", float(np.mean(static_imb)), "128e/16shards"))
+    rows.append(("moe/imbalance_kip", float(np.mean(kip_imb)), ""))
+    rows.append(("moe/imbalance_reduction", float(1 - np.mean(kip_imb) / np.mean(static_imb)),
+                 "capacity-factor/ICI saving at fixed drop rate"))
+    rows.append(("moe/experts_moved_total", float(moved),
+                 f"over {STEPS} steps (migration = expert-weight all-to-all)"))
+    assert np.mean(kip_imb) < np.mean(static_imb)
+
+    # beyond paper^2: heavy-expert replication (16 extra physical slots)
+    from repro.moe.kip_placement import replicated_assignment
+
+    rep_imb = []
+    for l in series:
+        owner, shard_of = replicated_assignment(l, SHARDS, replicas=16)
+        rel = l / max(l.sum(), 1e-12)
+        counts = np.bincount(owner, minlength=E)
+        eff = (rel / counts)[owner]
+        sl = np.zeros(SHARDS)
+        np.add.at(sl, shard_of, eff)
+        rep_imb.append(sl.max() / sl.mean())
+    rows.append(("moe/imbalance_kip_replicated", float(np.mean(rep_imb)),
+                 "+16 replica slots: beats the single-expert floor"))
+    assert np.mean(rep_imb) < np.mean(kip_imb)
+    return rows

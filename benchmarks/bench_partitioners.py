@@ -1,0 +1,60 @@
+"""Fig. 2 — load imbalance vs. #partitions for each partitioning method,
+and KIP with lambda in {1, 2, 3, 4}.  ZIPF exponent 1, averaged runs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core import Histogram, kip_update, load_imbalance, make_baseline, uniform_partitioner
+from repro.data.generators import zipf_keys
+
+METHODS = ["hash", "readj", "redist", "scan", "mixed", "kip", "kip_tight"]
+PARALLELISM = [4, 8, 16, 32, 64]
+
+
+def _build(method: str, hist: Histogram, n: int, lam: float = 2.0):
+    if method == "kip":
+        return kip_update(uniform_partitioner(n), hist.top(int(lam * n)))
+    if method == "kip_tight":  # beyond-paper waterfilled host re-binning
+        return kip_update(uniform_partitioner(n), hist.top(int(lam * n)), tight=True)
+    update, prev = make_baseline(method, n)
+    return update(prev, hist.top(int(lam * n)), n)
+
+
+def run(reps: int = 5, n_records: int = 200_000, num_keys: int = 100_000):
+    rows = []
+    for n in PARALLELISM:
+        imb: dict[str, list] = {m: [] for m in METHODS}
+        for rep in range(reps):
+            stream = zipf_keys(n_records, num_keys=num_keys, exponent=1.0, seed=rep)
+            hist = Histogram.exact(stream)
+            for m in METHODS:
+                part = _build(m, hist, n)
+                imb[m].append(load_imbalance(part, stream))
+        floor = max(1.0, n * Histogram.exact(
+            zipf_keys(n_records, num_keys=num_keys, exponent=1.0, seed=0)).freqs[0])
+        for m in METHODS:
+            rows.append((f"fig2/imbalance/{m}/N={n}", float(np.mean(imb[m])),
+                         f"floor={floor:.2f}"))
+        # paper's headline ordering: KIP best (paper evaluates N in this
+        # range; at N=64 the floor N*f1=5.3 dominates every method and
+        # kip_tight is the one that stays nearest it)
+        if n <= 32:
+            others = min(np.mean(imb[m]) for m in METHODS if not m.startswith("kip"))
+            assert np.mean(imb["kip"]) <= others + 0.05
+        assert np.mean(imb["kip_tight"]) <= np.mean(imb["kip"]) + 0.02
+    # lambda sweep (Fig 2 right)
+    for lam in [1.0, 2.0, 3.0, 4.0]:
+        vals = []
+        for rep in range(reps):
+            stream = zipf_keys(n_records, num_keys=num_keys, exponent=1.0, seed=10 + rep)
+            part = _build("kip", Histogram.exact(stream), 32, lam)
+            vals.append(load_imbalance(part, stream))
+        rows.append((f"fig2/kip_lambda/{lam}", float(np.mean(vals)), "N=32"))
+    # KIP update cost (paper: cheaper than alternatives)
+    stream = zipf_keys(n_records, num_keys=num_keys, exponent=1.0, seed=0)
+    hist = Histogram.exact(stream).top(64)
+    for m in ["kip", "readj", "redist", "scan", "mixed"]:
+        us = timer(lambda m=m: _build(m, hist, 32))
+        rows.append((f"fig2/update_cost/{m}", us, "us/update"))
+    return rows

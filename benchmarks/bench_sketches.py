@@ -1,0 +1,41 @@
+"""§4 / extended paper — sketch accuracy vs. memory: the paper found
+sketches either inaccurate or memory-hungry and used a counter heuristic."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core import CounterSketch, CountMinSketch, Histogram, LossyCounting, SpaceSaving
+from repro.data.generators import zipf_keys
+
+
+def _recall(est: Histogram, exact: Histogram, k: int) -> float:
+    a = set(est.top(k).keys.tolist())
+    b = set(exact.top(k).keys.tolist())
+    return len(a & b) / max(len(b), 1)
+
+
+def run(n: int = 200_000, num_keys: int = 50_000, k: int = 40):
+    rows = []
+    stream = zipf_keys(n, num_keys=num_keys, exponent=1.1, seed=0)
+    exact = Histogram.exact(stream)
+    sketches = {
+        "counter_heuristic": CounterSketch(capacity=256),
+        "spacesaving": SpaceSaving(capacity=256),
+        "lossy_counting": LossyCounting(epsilon=1 / 256),
+        "cms_small": CountMinSketch(depth=4, width=256),
+        "cms_big": CountMinSketch(depth=4, width=8192),
+    }
+    for name, sk in sketches.items():
+        if name == "spacesaving" or name == "lossy_counting":
+            sk.update(stream)  # sequential reference implementations
+        else:
+            for i in range(0, n, 10_000):
+                sk.update(stream[i : i + 10_000])
+        rows.append((f"sketch/recall@{k}/{name}", _recall(sk.histogram(), exact, k), ""))
+        rows.append((f"sketch/memory_items/{name}", float(sk.memory_items), ""))
+    # batch update throughput of the DRW heuristic (the paper's hot path)
+    cs = CounterSketch(capacity=256)
+    us = timer(lambda: cs.update(stream[:10_000]))
+    rows.append(("sketch/update_10k_records", us, "us (counter heuristic)"))
+    return rows

@@ -1,0 +1,45 @@
+"""Fig. 4 — load imbalance + total processing time for 10M-record ZIPF jobs
+as a function of the Zipf exponent, DR on vs. off (35 partitions).
+
+Reproduces the paper's finding: DR helps at moderate exponents; at ~1 the
+distribution is barely skewed, at large exponents the single heaviest key
+dominates and no partitioner can help."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import stage_time
+from repro.core import Histogram, kip_update, load_imbalance, uniform_partitioner
+from repro.data.generators import zipf_keys
+
+N_PARTS = 35
+WORKERS = 35
+# Regime note: the paper sweeps exponents 1..2 over 1M keys; with our 100K
+# key universe the heaviest key's mass f1 crosses 1/N around exponent ~1.0,
+# so the same three regimes (no skew / moderate: DR wins / single-key
+# dominated: nothing helps) appear shifted to [0.6, 2.0].
+EXPONENTS = [0.6, 0.8, 1.0, 1.2, 1.6, 2.0]
+
+
+def run(n_records: int = 500_000, num_keys: int = 100_000):
+    rows = []
+    speedups = {}
+    for exp in EXPONENTS:
+        keys = zipf_keys(n_records, num_keys=num_keys, exponent=exp, seed=int(exp * 10))
+        uhp = uniform_partitioner(N_PARTS)
+        hist = Histogram.exact(keys[: n_records // 10]).top(4 * N_PARTS)  # 10% sample
+        kip = kip_update(uhp, hist, eps=0.003)
+        t_hash = stage_time(uhp, keys, workers=WORKERS)
+        t_dr = stage_time(kip, keys, workers=WORKERS)
+        speedups[exp] = t_hash / t_dr
+        rows.append((f"fig4/imbalance_hash/exp={exp}", load_imbalance(uhp, keys), ""))
+        rows.append((f"fig4/imbalance_dr/exp={exp}", load_imbalance(kip, keys), ""))
+        rows.append((f"fig4/speedup/exp={exp}", speedups[exp], "stage-time model"))
+    # DR is most beneficial at moderate skew (paper Fig. 4): the peak sits
+    # strictly inside the sweep, not at either end
+    peak = max(speedups, key=speedups.get)
+    assert peak not in (EXPONENTS[0], EXPONENTS[-1]), speedups
+    assert speedups[peak] > 1.2, speedups
+    rows.append(("fig4/peak_speedup", speedups[peak],
+                 f"at exp={peak}; paper: 1.5-2.0 at moderate exponents"))
+    return rows

@@ -1,0 +1,90 @@
+"""Fig. 7/8 — web-crawl use case: fetch lists partitioned by host with a
+heavy-tailed host distribution, and the NER streaming app (heavy per-record
+processing, large keyed states).
+
+The paper reduces crawl round 7 from 69.1 to 24.9 minutes (2.8x) and the
+NER app by ~6x (heavy processing amplifies balance gains)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import stage_time
+from repro.core import Histogram, kip_update, load_imbalance, uniform_partitioner
+from repro.data.generators import host_skew_keys
+
+WORKERS = 8
+
+
+def _host_costs(keys: np.ndarray, seed: int, sigma: float) -> np.ndarray:
+    """Per-record cost driven by the record's HOST: content-management tech
+    (dynamic rendering, doc length) is a property of the site, so cost skew
+    is keyed — exactly why host partitioning amplifies imbalance (§6)."""
+    rng = np.random.default_rng(seed)
+    uniq = np.unique(keys)
+    mult = rng.lognormal(mean=0.0, sigma=sigma, size=len(uniq))
+    lut = dict(zip(uniq.tolist(), mult.tolist()))
+    return np.fromiter((lut[k] for k in keys.tolist()), np.float64, len(keys))
+
+
+def _weighted_hist(keys: np.ndarray, cost: np.ndarray, top: int) -> Histogram:
+    uniq, inv = np.unique(keys, return_inverse=True)
+    w = np.zeros(len(uniq))
+    np.add.at(w, inv, cost)
+    return Histogram.from_counts(uniq, w).top(top)
+
+
+def run(n_pages: int = 200_000):
+    rows = []
+    # --- crawl rounds: host universe + dynamic-content skew grow per round
+    speedups = []
+    for rnd in range(1, 8):
+        vals = []
+        for seed in range(3):
+            giant_mass = min(0.1 + 0.06 * rnd, 0.5)
+            keys = host_skew_keys(n_pages, num_hosts=64 + 128 * rnd, giants=16,
+                                  giant_mass=giant_mass, seed=7 * rnd + seed)
+            cost = _host_costs(keys, seed=7 * rnd + seed, sigma=0.9)
+            n = 3 * WORKERS
+            uhp = uniform_partitioner(n)
+            # DR measures work, not records: cost-weighted histogram (the
+            # DRW sample observes per-record processing time)
+            hist = _weighted_hist(keys[: n_pages // 5], cost[: n_pages // 5], 6 * n)
+            kip = kip_update(uhp, hist, eps=0.003)
+            t_hash = stage_time(uhp, keys, workers=WORKERS, record_cost=cost,
+                                per_partition_overhead_us=500.0)
+            t_dr = stage_time(kip, keys, workers=WORKERS, record_cost=cost,
+                              per_partition_overhead_us=500.0)
+            vals.append(t_hash / t_dr)
+            if rnd == 7 and seed == 0:
+                rows.append(("fig7/balance_hash/round=7", load_imbalance(uhp, keys), ""))
+                rows.append(("fig7/balance_dr/round=7", load_imbalance(kip, keys), ""))
+        speedups.append(float(np.mean(vals)))
+        rows.append((f"fig8/crawl_speedup/round={rnd}", speedups[-1], "mean of 3 seeds"))
+    rows.append(("fig8/mean_crawl_speedup", float(np.mean(speedups)),
+                 "paper: 69.1 -> 24.9 min (2.8x) at round 7; qualitative — "
+                 "absolute gain depends on executor scheduling specifics"))
+    assert np.mean(speedups) > 1.08, speedups
+    assert max(speedups) > 1.2, speedups
+
+    # --- NER app: streaming (pinned operators), heavy host-keyed records.
+    # The paper reports ~6x; a linear straggler model reproduces the
+    # direction and the all-partition-configs consistency, not the
+    # magnitude (their gain also includes GC/memory pressure on the huge
+    # windowed states, which we do not model) — noted in EXPERIMENTS.md.
+    keys = host_skew_keys(40_000, num_hosts=1024, giants=64, giant_mass=0.5, seed=42)
+    cost = _host_costs(keys, seed=5, sigma=0.8)  # NLP cost ~ doc length, per domain
+    ner = []
+    for parts_per_worker in [1, 2, 4]:
+        n = parts_per_worker * 6
+        uhp = uniform_partitioner(n)
+        kip = kip_update(uhp, _weighted_hist(keys[:8000], cost[:8000], 6 * n), eps=0.003)
+        t_hash = stage_time(uhp, keys, workers=6, record_cost=cost,
+                            per_partition_overhead_us=500.0, pinned=True)
+        t_dr = stage_time(kip, keys, workers=6, record_cost=cost,
+                          per_partition_overhead_us=500.0, pinned=True)
+        ner.append(t_hash / t_dr)
+        rows.append((f"fig8/ner_speedup/parts={n}", t_hash / t_dr,
+                     "paper: ~6x for all partition configs (streaming, pinned state)"))
+    assert all(s > 1.05 for s in ner), ner
+    assert max(ner) > 1.25, ner
+    return rows

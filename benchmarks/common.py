@@ -1,0 +1,60 @@
+"""Shared benchmark utilities + the stage-time cost model.
+
+The cost model mirrors the paper's Spark evaluation: a stage completes when
+its slowest worker finishes, workers process partitions one after another
+(over-partitioning => scheduling overhead per partition), and each record
+costs per-record work (the NLP/NER tasks make this heavy and key-dependent).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Partitioner
+
+
+def stage_time(
+    partitioner: Partitioner,
+    keys: np.ndarray,
+    *,
+    workers: int,
+    per_record_us: float = 1.0,
+    per_partition_overhead_us: float = 5_000.0,
+    record_cost: np.ndarray | None = None,
+    pinned: bool = False,
+) -> float:
+    """Simulated stage completion time (us) under the straggler model.
+
+    ``pinned=False``: batch semantics — partitions are tasks, scheduled
+    greedily (longest first) onto free workers (Spark dynamic scheduling).
+    ``pinned=True``: streaming semantics — long-running operator instances,
+    partition p is pinned to worker ``p % workers`` (the paper: "Flink
+    deploys long-running tasks that cannot be scheduled one after another").
+    """
+    parts = partitioner.lookup_np(keys.astype(np.int32))
+    n = partitioner.num_partitions
+    if record_cost is None:
+        loads = np.bincount(parts, minlength=n).astype(np.float64) * per_record_us
+    else:
+        loads = np.zeros(n)
+        np.add.at(loads, parts, record_cost * per_record_us)
+    loads += per_partition_overhead_us
+    w = np.zeros(workers)
+    if pinned:
+        for p in range(n):
+            w[p % workers] += loads[p]
+    else:
+        order = np.argsort(-loads)
+        for p in order:
+            w[w.argmin()] += loads[p]
+    return float(w.max())
+
+
+def timer(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (value column is the figure's
+metric: imbalance ratio / speedup / us, per the row name)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "bench_partitioners",   # Fig 2
+    "bench_migration",      # Fig 3
+    "bench_spark_like",     # Fig 4
+    "bench_overpartition",  # Fig 5
+    "bench_streaming",      # Fig 6
+    "bench_webcrawl",       # Fig 7/8
+    "bench_sketches",       # §4 + extended paper
+    "bench_moe",            # beyond paper: KIP expert placement
+    "bench_kernels",        # Pallas hot paths
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if only and only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name}/FAILED,0,{type(e).__name__}: {e}")
+            continue
+        for row_name, value, derived in rows:
+            print(f"{row_name},{value:.6g},{derived}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark module(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serve a small model with batched requests + DR session routing.
+
+Requests carry session keys (hot tenants appear); the DRScheduler routes
+sessions to replicas with KIP and migrates sessions (KV caches) at
+checkpoints when tenants heat up.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "gemma-2b",
+        "--requests", "12",
+        "--max-new", "6",
+        "--slots", "3",
+        "--replicas", "3",
+    ] + sys.argv[1:]
+    raise SystemExit(subprocess.call(args))

@@ -1,0 +1,55 @@
+"""Dynamic Repartitioning (DR) — the paper's core contribution in JAX.
+
+Public surface:
+
+* partitioners: :func:`uniform_partitioner`, :func:`kip_update`,
+  :class:`Partitioner`, :class:`PartitionerTables`
+* histograms/sketches: :class:`Histogram`, :class:`CounterSketch`,
+  :class:`SpaceSaving`, :class:`LossyCounting`, :class:`CountMinSketch`
+* migration: :func:`plan_migration`, :class:`MigrationPlan`
+* runtime: :class:`repro.core.streaming.StreamingJob` (micro-batch DR loop),
+  :mod:`repro.core.shuffle` (device keyed all-to-all)
+"""
+from repro.core.baselines import make_baseline, mixed_update, readj_update, redist_update, scan_update
+from repro.core.histogram import (
+    CounterSketch,
+    CountMinSketch,
+    Histogram,
+    LossyCounting,
+    SpaceSaving,
+    local_topk_histogram,
+)
+from repro.core.migration import MigrationPlan, migration_capacity, plan_migration
+from repro.core.partitioner import (
+    Partitioner,
+    PartitionerTables,
+    expected_loads,
+    kip_update,
+    load_imbalance,
+    lookup_device,
+    uniform_partitioner,
+)
+
+__all__ = [
+    "CounterSketch",
+    "CountMinSketch",
+    "Histogram",
+    "LossyCounting",
+    "MigrationPlan",
+    "Partitioner",
+    "PartitionerTables",
+    "SpaceSaving",
+    "expected_loads",
+    "kip_update",
+    "load_imbalance",
+    "local_topk_histogram",
+    "lookup_device",
+    "make_baseline",
+    "migration_capacity",
+    "mixed_update",
+    "plan_migration",
+    "readj_update",
+    "redist_update",
+    "scan_update",
+    "uniform_partitioner",
+]

@@ -1,0 +1,149 @@
+"""Dynamic Repartitioning Master — the central DR authority.
+
+Lives in the launcher ("Driver") process.  Per micro-batch it:
+
+1. merges the DRW local histograms into the global counter sketch
+   (EWMA over past histograms — drift-respecting),
+2. evaluates the trigger: planned-imbalance improvement vs. migration cost
+   ("the gains for repartitioning should exceed state migration costs"),
+3. on trigger, runs KIPUPDATE and hands the new partitioner tables to the
+   runtime to swap at the safe point (micro-batch boundary / checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.histogram import CounterSketch, Histogram
+from repro.core.partitioner import Partitioner, expected_loads, kip_update
+
+__all__ = ["DRConfig", "DRMaster", "DRDecision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DRConfig:
+    lam: float = 2.0                 # histogram scale factor: B = lam * N
+    eps: float = 0.01                # KIP load slack
+    ewma_alpha: float = 0.5          # weight of the newest histogram
+    sketch_capacity: int = 512       # DRM counter sketch size
+    sketch_decay: float = 0.9
+    imbalance_trigger: float = 1.2   # repartition when measured imb exceeds
+    migration_cost_weight: float = 1.0  # batches of gain a migration must pay for
+    min_batches_between: int = 1     # safe-point spacing (1 = every boundary)
+    mode: str = "stream"             # "stream" | "batch" (replay-once)
+    tight: bool = True               # waterfilled host re-binning (beyond-paper;
+                                     # False = faithful Algorithm 1 packing)
+
+
+@dataclasses.dataclass(frozen=True)
+class DRDecision:
+    repartition: bool
+    partitioner: Partitioner
+    planned_imbalance: float
+    measured_imbalance: float
+    est_migration: float
+    reason: str
+
+
+class DRMaster:
+    def __init__(self, initial: Partitioner, config: DRConfig = DRConfig()):
+        self.config = config
+        self.partitioner = initial
+        self.sketch = CounterSketch(config.sketch_capacity, decay=config.sketch_decay)
+        self.batches_seen = 0
+        self.last_repartition = -(10**9)
+        self.history: list[dict] = []
+
+    # -- DRW ingestion ------------------------------------------------------
+    def observe(self, hist_keys: np.ndarray, hist_counts: np.ndarray,
+                total_records: float | None = None) -> None:
+        """Merge stacked worker histograms [W, K] into the DRM sketch.
+
+        ``total_records`` is the true number of records the workers saw
+        (top-k summaries undercount the tail mass)."""
+        k = np.asarray(hist_keys).reshape(-1)
+        c = np.asarray(hist_counts).reshape(-1).astype(np.float64)
+        m = (k >= 0) & (c > 0)
+        if m.any():
+            keys, inv = np.unique(k[m], return_inverse=True)
+            counts = np.zeros(len(keys))
+            np.add.at(counts, inv, c[m])
+            self.sketch.update_counts(keys.astype(np.int64), counts, total=total_records)
+
+    # -- decision -----------------------------------------------------------
+    def decide(self, loads: np.ndarray, state_rows: float = 0.0) -> DRDecision:
+        """Called at each safe point with measured per-partition loads."""
+        cfg = self.config
+        self.batches_seen += 1
+        n = self.partitioner.num_partitions
+        loads = np.asarray(loads, np.float64)
+        measured = float(loads.max() / max(loads.mean(), 1e-12)) if loads.sum() else 1.0
+
+        hist = self.sketch.histogram(top_b=int(cfg.lam * n))
+        if len(hist) == 0:
+            return self._no(measured, "no-histogram")
+        if self.batches_seen - self.last_repartition < cfg.min_batches_between:
+            return self._no(measured, "safe-point-spacing")
+        if cfg.mode == "batch" and self.last_repartition > 0:
+            return self._no(measured, "batch-replayed-once")
+        if measured < cfg.imbalance_trigger:
+            return self._no(measured, "balanced")
+
+        # fixed heavy-table width => stable jit signatures across swaps
+        cap = max(self.partitioner.heavy_keys.shape[0], int(np.ceil(cfg.lam * n / 128.0) * 128))
+        candidate = kip_update(self.partitioner, hist, eps=cfg.eps, heavy_capacity=cap,
+                               tight=cfg.tight)
+        planned = expected_loads(candidate, hist)
+        planned_imb = float(planned.max() * n)
+        gain = measured - planned_imb
+        # migration cost estimate: heavy keys that change partition carry
+        # state proportional to their frequency
+        old_p = self.partitioner.lookup_np(hist.keys.astype(np.int32))
+        new_p = candidate.lookup_np(hist.keys.astype(np.int32))
+        est_migration = float(hist.freqs[old_p != new_p].sum())
+        cost = cfg.migration_cost_weight * est_migration
+        if gain <= cost:
+            return DRDecision(False, self.partitioner, planned_imb, measured, est_migration,
+                              f"gain {gain:.3f} <= cost {cost:.3f}")
+        self.partitioner = candidate
+        self.last_repartition = self.batches_seen
+        d = DRDecision(True, candidate, planned_imb, measured, est_migration, "repartition")
+        self.history.append(dataclasses.asdict(d) | {"batch": self.batches_seen})
+        return d
+
+    def _no(self, measured: float, reason: str) -> DRDecision:
+        return DRDecision(False, self.partitioner, measured, measured, 0.0, reason)
+
+    # -- checkpoint integration ----------------------------------------------
+    def snapshot(self) -> dict:
+        p = self.partitioner
+        return {
+            "num_partitions": p.num_partitions,
+            "heavy_keys": p.heavy_keys,
+            "heavy_parts": p.heavy_parts,
+            "host_to_part": p.host_to_part,
+            "seed": p.seed,
+            "sketch_keys": self.sketch._keys,
+            "sketch_counts": self.sketch._counts,
+            "sketch_floor": np.float64(self.sketch._floor),
+            "sketch_total": np.float64(self.sketch.total),
+            "batches_seen": np.int64(self.batches_seen),
+        }
+
+    @classmethod
+    def restore(cls, snap: dict, config: DRConfig = DRConfig()) -> "DRMaster":
+        p = Partitioner(
+            int(snap["num_partitions"]),
+            np.asarray(snap["heavy_keys"]),
+            np.asarray(snap["heavy_parts"]),
+            np.asarray(snap["host_to_part"]),
+            int(snap["seed"]),
+        )
+        drm = cls(p, config)
+        drm.sketch._keys = np.asarray(snap["sketch_keys"])
+        drm.sketch._counts = np.asarray(snap["sketch_counts"])
+        drm.sketch._floor = float(snap["sketch_floor"])
+        drm.sketch.total = float(snap["sketch_total"])
+        drm.batches_seen = int(snap["batches_seen"])
+        return drm

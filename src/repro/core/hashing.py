@@ -1,0 +1,56 @@
+"""Hash primitives shared by host (numpy) and device (jnp) code paths.
+
+The paper's weighted hash partitioner first maps keys to one of ``H >> N``
+virtual *hosts* by uniform hashing, then maps hosts to partitions via a small
+routing table.  We use a murmur3-style 32-bit finalizer (``fmix32``) as the
+uniform hash; it is written against a generic array namespace so the exact
+same bit pattern is produced by numpy on the host (DRM planning) and by jnp
+on device (shuffle hot path and Pallas kernels).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fmix32", "hash_to_host", "DEFAULT_NUM_HOSTS", "KEY_SENTINEL"]
+
+# Number of virtual hosts H.  H >> N for every realistic partition count and
+# a power of two so the modulo lowers to a mask on TPU.
+DEFAULT_NUM_HOSTS = 4096
+
+# int32 padding sentinel for fixed-width heavy-key tables (larger than any
+# real key; keys are required to be non-negative int32).
+KEY_SENTINEL = np.int32(2**31 - 1)
+
+
+def fmix32(x, xp=jnp):
+    """murmur3 32-bit finalizer — a full-avalanche integer mixer.
+
+    Works on uint32 arrays for either ``xp=numpy`` or ``xp=jax.numpy`` with
+    identical results.
+    """
+    x = xp.asarray(x).astype(xp.uint32)
+    x = x ^ (x >> xp.uint32(16))
+    x = x * xp.uint32(0x85EBCA6B)
+    x = x ^ (x >> xp.uint32(13))
+    x = x * xp.uint32(0xC2B2AE35)
+    x = x ^ (x >> xp.uint32(16))
+    return x
+
+
+def hash_to_host(keys, num_hosts: int, seed: int = 0, xp=jnp):
+    """Uniformly hash ``keys`` (int) to ``[0, num_hosts)``.
+
+    ``num_hosts`` should be a power of two (masked, not modulo, on TPU).
+    """
+    k = xp.asarray(keys).astype(xp.uint32) ^ xp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF)
+    h = fmix32(k, xp=xp)
+    if num_hosts & (num_hosts - 1) == 0:
+        return (h & xp.uint32(num_hosts - 1)).astype(xp.int32)
+    return (h % xp.uint32(num_hosts)).astype(xp.int32)
+
+
+def hash_mod(keys, n: int, seed: int = 0, xp=jnp):
+    """Plain uniform-hash-partitioner assignment: fmix32(key) mod n."""
+    k = xp.asarray(keys).astype(xp.uint32) ^ xp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF)
+    return (fmix32(k, xp=xp) % xp.uint32(n)).astype(xp.int32)

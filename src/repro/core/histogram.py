@@ -1,0 +1,354 @@
+"""Approximate key-frequency histograms (DRW sampling + DRM merging).
+
+The paper gathers the top ``B = lambda * N`` keys in a global histogram
+``Hist`` whose entries carry *relative* frequencies (all key frequencies,
+including keys not in Hist, sum to 1).  Workers build small local summaries
+during normal routing work; the master merges them and keeps a record of past
+histograms so partitioning decisions respect concept drift.
+
+Host-side sketches implemented here:
+
+* :class:`CounterSketch`   — the paper's counter-based heuristic (their
+  extended-paper algorithm is reconstructed as a mergeable SpaceSaving-style
+  counter table with multiplicative decay for drift).
+* :class:`SpaceSaving`     — Metwally et al. (baseline in the paper).
+* :class:`LossyCounting`   — Manku & Motwani (baseline in the paper).
+* :class:`CountMinSketch`  — classic sketch baseline (the paper found sketches
+  either inaccurate or memory-hungry; we reproduce that comparison).
+
+Device-side: :func:`local_topk_histogram` — an exact, sort-based top-k of a
+single micro-batch computed inside jit (the DRW hook); the Pallas
+``sketch_update`` kernel provides the CMS hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import fmix32
+
+__all__ = [
+    "Histogram",
+    "CounterSketch",
+    "SpaceSaving",
+    "LossyCounting",
+    "CountMinSketch",
+    "local_topk_histogram",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Histogram:
+    """Top-B histogram with *relative* frequencies, sorted descending.
+
+    ``keys[i]`` has estimated frequency ``freqs[i]`` (fraction of all input).
+    ``sum(freqs) <= 1``; the remainder is the untracked tail mass.
+    """
+
+    keys: np.ndarray  # int64[B]
+    freqs: np.ndarray  # float64[B], descending
+    total_weight: float  # absolute number of records observed
+
+    def __post_init__(self):
+        assert self.keys.shape == self.freqs.shape
+        if len(self.freqs) > 1:
+            assert np.all(np.diff(self.freqs) <= 1e-12), "freqs must be descending"
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    @property
+    def tail_mass(self) -> float:
+        return max(0.0, 1.0 - float(self.freqs.sum()))
+
+    def top(self, b: int) -> "Histogram":
+        return Histogram(self.keys[:b], self.freqs[:b], self.total_weight)
+
+    @staticmethod
+    def from_counts(keys, counts, total: float | None = None) -> "Histogram":
+        keys = np.asarray(keys, dtype=np.int64)
+        counts = np.asarray(counts, dtype=np.float64)
+        order = np.argsort(-counts, kind="stable")
+        keys, counts = keys[order], counts[order]
+        total = float(counts.sum()) if total is None else float(total)
+        freqs = counts / max(total, 1e-30)
+        return Histogram(keys, freqs, total)
+
+    @staticmethod
+    def exact(key_stream: np.ndarray) -> "Histogram":
+        keys, counts = np.unique(np.asarray(key_stream), return_counts=True)
+        return Histogram.from_counts(keys, counts)
+
+    @staticmethod
+    def merge(hists: Sequence["Histogram"], top_b: int | None = None) -> "Histogram":
+        """DRM merge of per-worker local histograms (weight = records seen)."""
+        if not hists:
+            return Histogram(np.zeros(0, np.int64), np.zeros(0), 0.0)
+        acc: dict[int, float] = {}
+        total = 0.0
+        for h in hists:
+            total += h.total_weight
+            w = h.total_weight
+            for k, f in zip(h.keys.tolist(), h.freqs.tolist()):
+                acc[k] = acc.get(k, 0.0) + f * w
+        merged = Histogram.from_counts(
+            np.fromiter(acc.keys(), np.int64, len(acc)),
+            np.fromiter(acc.values(), np.float64, len(acc)),
+            total=total,
+        )
+        return merged.top(top_b) if top_b is not None else merged
+
+    def ewma(self, newer: "Histogram", alpha: float, top_b: int | None = None) -> "Histogram":
+        """Drift-respecting blend: keep a record of past histograms.
+
+        ``alpha`` is the weight of the *new* histogram; old mass decays by
+        ``1 - alpha`` so heavy keys must persist to stay isolated.
+        """
+        acc: dict[int, float] = {}
+        for k, f in zip(self.keys.tolist(), self.freqs.tolist()):
+            acc[k] = acc.get(k, 0.0) + (1.0 - alpha) * f
+        for k, f in zip(newer.keys.tolist(), newer.freqs.tolist()):
+            acc[k] = acc.get(k, 0.0) + alpha * f
+        keys = np.fromiter(acc.keys(), np.int64, len(acc))
+        vals = np.fromiter(acc.values(), np.float64, len(acc))
+        order = np.argsort(-vals, kind="stable")
+        out = Histogram(keys[order], vals[order], newer.total_weight)
+        return out.top(top_b) if top_b is not None else out
+
+
+# ---------------------------------------------------------------------------
+# Host-side sketches
+# ---------------------------------------------------------------------------
+
+
+class CounterSketch:
+    """The DRW counter-based heuristic (paper §4 / extended paper).
+
+    A fixed table of ``capacity`` (key, count) pairs.  Batches are counted
+    exactly (vectorized ``np.unique``) and merged with the SpaceSaving merge
+    rule: evicted keys donate their count to the minimum-count floor so the
+    estimate stays an over-approximation.  A multiplicative ``decay`` applied
+    per batch makes the summary drift-respecting: keys that stop being heavy
+    fade out within a few micro-batches.
+    """
+
+    def __init__(self, capacity: int, decay: float = 1.0):
+        assert capacity > 0 and 0.0 < decay <= 1.0
+        self.capacity = capacity
+        self.decay = decay
+        self._keys = np.zeros(0, np.int64)
+        self._counts = np.zeros(0, np.float64)
+        self._floor = 0.0  # SpaceSaving-style minimum for unseen keys
+        self.total = 0.0
+
+    def update(self, key_batch: np.ndarray) -> None:
+        keys, counts = np.unique(np.asarray(key_batch, np.int64), return_counts=True)
+        self.update_counts(keys, counts.astype(np.float64))
+
+    def update_counts(self, keys: np.ndarray, counts: np.ndarray,
+                      total: float | None = None) -> None:
+        """``total``: true number of records the counts were sampled from
+        (a top-k summary undercounts the tail; without the true total the
+        relative frequencies would be inflated by 1/coverage)."""
+        if self.decay < 1.0:
+            self._counts *= self.decay
+            self._floor *= self.decay
+            self.total *= self.decay
+        self.total += float(counts.sum()) if total is None else float(total)
+        # merge exact batch counts into the summary
+        all_keys = np.concatenate([self._keys, np.asarray(keys, np.int64)])
+        new_mask = np.concatenate(
+            [np.zeros(len(self._keys), bool), np.ones(len(keys), bool)]
+        )
+        all_counts = np.concatenate([self._counts, np.asarray(counts, np.float64)])
+        # keys new to the summary enter at floor + their batch count
+        all_counts = all_counts + np.where(new_mask, self._floor, 0.0)
+        uniq, inv = np.unique(all_keys, return_inverse=True)
+        merged = np.zeros(len(uniq))
+        np.add.at(merged, inv, all_counts)
+        # a key present both in summary and batch was given the floor once: ok
+        dup = np.zeros(len(uniq))
+        np.add.at(dup, inv, new_mask & np.isin(all_keys, self._keys))
+        merged -= dup * self._floor
+        if len(uniq) > self.capacity:
+            order = np.argsort(-merged, kind="stable")
+            keep = order[: self.capacity]
+            self._floor = float(merged[order[self.capacity]])
+            self._keys, self._counts = uniq[keep], merged[keep]
+        else:
+            self._keys, self._counts = uniq, merged
+
+    def histogram(self, top_b: int | None = None) -> Histogram:
+        h = Histogram.from_counts(self._keys, self._counts, total=max(self.total, 1e-30))
+        return h.top(top_b) if top_b is not None else h
+
+    @property
+    def memory_items(self) -> int:
+        return len(self._keys)
+
+
+class SpaceSaving:
+    """Metwally et al. stream-summary (sequential reference implementation)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.counts: dict[int, float] = {}
+        self.total = 0.0
+
+    def update(self, key_batch: np.ndarray) -> None:
+        for k in np.asarray(key_batch).tolist():
+            self.total += 1.0
+            if k in self.counts:
+                self.counts[k] += 1.0
+            elif len(self.counts) < self.capacity:
+                self.counts[k] = 1.0
+            else:
+                mk = min(self.counts, key=self.counts.get)
+                mv = self.counts.pop(mk)
+                self.counts[k] = mv + 1.0
+
+    def histogram(self, top_b: int | None = None) -> Histogram:
+        if not self.counts:
+            return Histogram(np.zeros(0, np.int64), np.zeros(0), 0.0)
+        h = Histogram.from_counts(
+            np.fromiter(self.counts.keys(), np.int64, len(self.counts)),
+            np.fromiter(self.counts.values(), np.float64, len(self.counts)),
+            total=max(self.total, 1e-30),
+        )
+        return h.top(top_b) if top_b is not None else h
+
+    @property
+    def memory_items(self) -> int:
+        return len(self.counts)
+
+
+class LossyCounting:
+    """Manku & Motwani lossy counting with bucket width ceil(1/eps)."""
+
+    def __init__(self, epsilon: float):
+        self.epsilon = epsilon
+        self.width = int(np.ceil(1.0 / epsilon))
+        self.counts: dict[int, float] = {}
+        self.deltas: dict[int, float] = {}
+        self.total = 0.0
+        self._bucket = 1
+
+    def update(self, key_batch: np.ndarray) -> None:
+        for k in np.asarray(key_batch).tolist():
+            self.total += 1.0
+            if k in self.counts:
+                self.counts[k] += 1.0
+            else:
+                self.counts[k] = 1.0
+                self.deltas[k] = self._bucket - 1
+            if int(self.total) % self.width == 0:
+                self._prune()
+                self._bucket += 1
+
+    def _prune(self) -> None:
+        dead = [k for k, c in self.counts.items() if c + self.deltas[k] <= self._bucket]
+        for k in dead:
+            del self.counts[k]
+            del self.deltas[k]
+
+    def histogram(self, top_b: int | None = None) -> Histogram:
+        if not self.counts:
+            return Histogram(np.zeros(0, np.int64), np.zeros(0), 0.0)
+        h = Histogram.from_counts(
+            np.fromiter(self.counts.keys(), np.int64, len(self.counts)),
+            np.fromiter(self.counts.values(), np.float64, len(self.counts)),
+            total=max(self.total, 1e-30),
+        )
+        return h.top(top_b) if top_b is not None else h
+
+    @property
+    def memory_items(self) -> int:
+        return len(self.counts)
+
+
+class CountMinSketch:
+    """Count-min sketch + candidate set, vectorized over batches.
+
+    The device hot path for row updates is the Pallas ``sketch_update``
+    kernel; this host class mirrors it bit-exactly (same fmix32-row hashing)
+    and adds the top-k candidate tracking the kernel leaves to the host.
+    """
+
+    def __init__(self, depth: int, width: int, candidates: int = 256):
+        self.depth, self.width = depth, width
+        self.table = np.zeros((depth, width), np.float64)
+        self.total = 0.0
+        self.k = candidates
+        self._cand: dict[int, float] = {}
+
+    def _rows(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, np.int64)
+        cols = np.stack(
+            [fmix32((keys ^ (d * 0x9E3779B9)) & 0xFFFFFFFF, xp=np) % self.width
+             for d in range(self.depth)]
+        )  # [depth, n]
+        return cols
+
+    def update(self, key_batch: np.ndarray) -> None:
+        keys, counts = np.unique(np.asarray(key_batch, np.int64), return_counts=True)
+        self.total += float(counts.sum())
+        cols = self._rows(keys)
+        for d in range(self.depth):
+            np.add.at(self.table[d], cols[d], counts)
+        est = self.estimate(keys)
+        for k, e in zip(keys.tolist(), est.tolist()):
+            self._cand[k] = e
+        if len(self._cand) > self.k:
+            keep = sorted(self._cand.items(), key=lambda kv: -kv[1])[: self.k]
+            self._cand = dict(keep)
+
+    def estimate(self, keys: np.ndarray) -> np.ndarray:
+        cols = self._rows(keys)
+        ests = np.stack([self.table[d, cols[d]] for d in range(self.depth)])
+        return ests.min(axis=0)
+
+    def histogram(self, top_b: int | None = None) -> Histogram:
+        if not self._cand:
+            return Histogram(np.zeros(0, np.int64), np.zeros(0), 0.0)
+        keys = np.fromiter(self._cand.keys(), np.int64, len(self._cand))
+        h = Histogram.from_counts(keys, self.estimate(keys), total=max(self.total, 1e-30))
+        return h.top(top_b) if top_b is not None else h
+
+    @property
+    def memory_items(self) -> int:
+        return self.depth * self.width + len(self._cand)
+
+
+# ---------------------------------------------------------------------------
+# Device-side (inside jit) exact top-k of one micro-batch — the DRW hook.
+# ---------------------------------------------------------------------------
+
+
+def local_topk_histogram(keys: jnp.ndarray, valid: jnp.ndarray, k: int):
+    """Exact top-k (key, count) of one padded key batch, inside jit.
+
+    Returns ``(topk_keys i32[k], topk_counts i32[k], total i32)``; unused
+    slots carry key ``-1`` and count ``0``.  Sort-based: O(n log n) on device,
+    no host round trip — this is the "measure during normal work" DRW hook.
+    """
+    n = keys.shape[0]
+    big = jnp.int64(2**62) if keys.dtype == jnp.int64 else jnp.int32(2**31 - 1)
+    masked = jnp.where(valid, keys, big)
+    s = jnp.sort(masked)
+    # run-length encode: position where a new key starts
+    start = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    seg_id = jnp.cumsum(start) - 1  # [n] segment index per element
+    counts = jnp.zeros((n,), jnp.int32).at[seg_id].add(
+        jnp.where(masked != big, 1, 0).astype(jnp.int32)
+    )
+    seg_keys = jnp.zeros((n,), s.dtype).at[seg_id].max(jnp.where(start, s, -big))
+    k = min(k, n)  # small batches: cannot have more segments than records
+    top_counts, idx = jax.lax.top_k(counts, k)
+    top_keys = seg_keys[idx]
+    top_keys = jnp.where(top_counts > 0, top_keys, -1)
+    total = jnp.sum(valid.astype(jnp.int32))
+    return top_keys.astype(keys.dtype), top_counts, total

@@ -1,0 +1,78 @@
+"""State-migration planning for partitioner swaps (stream) and replay (batch).
+
+When the DRM swaps partitioners at a safe point, every live key whose
+partition changed must have its operator state moved.  The planner produces:
+
+* the per-key move list (old partition -> new partition),
+* the [N, N] transfer matrix in state-bytes (feeds the capacity-padded
+  all-to-all in ``repro.core.state``),
+* the *relative state migration* metric of the paper's Fig. 3
+  (moved state / total state).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partitioner import Partitioner
+
+__all__ = ["MigrationPlan", "plan_migration", "migration_capacity"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    keys: np.ndarray          # int64[M] keys that move
+    src: np.ndarray           # int32[M]
+    dst: np.ndarray           # int32[M]
+    weights: np.ndarray       # float64[M] state size per moved key
+    transfer: np.ndarray      # float64[N, N] bytes moved src->dst
+    relative_migration: float # moved / total state weight
+
+    @property
+    def num_moves(self) -> int:
+        return len(self.keys)
+
+
+def plan_migration(
+    old: Partitioner,
+    new: Partitioner,
+    live_keys: np.ndarray,
+    state_weights: np.ndarray | None = None,
+) -> MigrationPlan:
+    """Diff two partitioners over the live key set."""
+    live_keys = np.asarray(live_keys, np.int64)
+    if state_weights is None:
+        state_weights = np.ones(len(live_keys))
+    state_weights = np.asarray(state_weights, np.float64)
+    assert live_keys.shape == state_weights.shape
+
+    src = old.lookup_np(live_keys.astype(np.int32))
+    dst = new.lookup_np(live_keys.astype(np.int32))
+    moved = src != dst
+    n = max(old.num_partitions, new.num_partitions)
+    transfer = np.zeros((n, n))
+    np.add.at(transfer, (src[moved], dst[moved]), state_weights[moved])
+    total = float(state_weights.sum())
+    rel = float(state_weights[moved].sum() / total) if total > 0 else 0.0
+    return MigrationPlan(
+        keys=live_keys[moved],
+        src=src[moved].astype(np.int32),
+        dst=dst[moved].astype(np.int32),
+        weights=state_weights[moved],
+        transfer=transfer,
+        relative_migration=rel,
+    )
+
+
+def migration_capacity(plan: MigrationPlan, row_bytes: float = 1.0, slack: float = 1.25) -> int:
+    """Static per-(src,dst) lane capacity for the all-to-all state exchange.
+
+    XLA collectives need static shapes: size each lane to the largest
+    planned transfer times ``slack`` (rounded up to a multiple of 8 rows).
+    """
+    if plan.transfer.size == 0:
+        return 8
+    peak = float(plan.transfer.max()) / max(row_bytes, 1e-12)
+    cap = int(np.ceil(peak * slack / 8.0) * 8)
+    return max(cap, 8)

@@ -1,0 +1,264 @@
+"""Partitioning functions: UHP and the Key Isolator Partitioner (KIP).
+
+A partitioner is represented by three small device-friendly tables so the
+per-record lookup is fully vectorized (and has a Pallas kernel twin in
+``repro.kernels.partition_apply``):
+
+* ``heavy_keys``  int32[B]  sorted ascending, padded with ``KEY_SENTINEL``
+* ``heavy_parts`` int32[B]  explicit partition of each heavy key
+* ``host_to_part`` int32[H] weighted-hash routing: key -> host -> partition
+
+``kip_update`` implements Algorithm 1 (KIPUPDATE) from the paper: heavy keys
+try (1) their previous partition, (2) their plain-hash location, (3) the
+least-loaded partition; hosts are then greedily re-binned so no partition
+exceeds ``MAXLOAD = max(1/N, Hist[1].freq) + eps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL, hash_to_host
+from repro.core.histogram import Histogram
+
+__all__ = ["PartitionerTables", "Partitioner", "uniform_partitioner", "kip_update"]
+
+
+class PartitionerTables(NamedTuple):
+    """The jit-traversable device representation of a partitioner."""
+
+    heavy_keys: jax.Array  # int32[B] sorted, padded with KEY_SENTINEL
+    heavy_parts: jax.Array  # int32[B]
+    host_to_part: jax.Array  # int32[H]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioner:
+    """Host-side partitioner object (numpy tables + metadata)."""
+
+    num_partitions: int
+    heavy_keys: np.ndarray  # int32[B] sorted ascending (sentinel padded)
+    heavy_parts: np.ndarray  # int32[B]
+    host_to_part: np.ndarray  # int32[H]
+    seed: int = 0
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self.host_to_part)
+
+    @property
+    def num_heavy(self) -> int:
+        return int((self.heavy_keys != KEY_SENTINEL).sum())
+
+    def tables(self) -> PartitionerTables:
+        return PartitionerTables(
+            jnp.asarray(self.heavy_keys),
+            jnp.asarray(self.heavy_parts),
+            jnp.asarray(self.host_to_part),
+        )
+
+    # -- lookups ----------------------------------------------------------
+    def lookup_np(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized host-side partition lookup (planning / benchmarks)."""
+        keys = np.asarray(keys, np.int32)
+        hosts = hash_to_host(keys, self.num_hosts, self.seed, xp=np)
+        part = self.host_to_part[hosts]
+        if self.num_heavy:
+            idx = np.searchsorted(self.heavy_keys, keys)
+            idx = np.minimum(idx, len(self.heavy_keys) - 1)
+            hit = self.heavy_keys[idx] == keys
+            part = np.where(hit, self.heavy_parts[idx], part)
+        return part.astype(np.int32)
+
+    def heavy_map(self) -> dict[int, int]:
+        m = self.heavy_keys != KEY_SENTINEL
+        return dict(zip(self.heavy_keys[m].tolist(), self.heavy_parts[m].tolist()))
+
+
+def lookup_device(tables: PartitionerTables, keys: jax.Array, num_hosts: int, seed: int = 0) -> jax.Array:
+    """jnp twin of :meth:`Partitioner.lookup_np` (used inside jit)."""
+    keys = keys.astype(jnp.int32)
+    hosts = hash_to_host(keys, num_hosts, seed, xp=jnp)
+    part = tables.host_to_part[hosts]
+    if tables.heavy_keys.shape[0] == 0:  # no explicit routing table
+        return part.astype(jnp.int32)
+    idx = jnp.clip(jnp.searchsorted(tables.heavy_keys, keys), 0, tables.heavy_keys.shape[0] - 1)
+    hit = tables.heavy_keys[idx] == keys
+    return jnp.where(hit, tables.heavy_parts[idx], part).astype(jnp.int32)
+
+
+def _pad_heavy(keys: np.ndarray, parts: np.ndarray, capacity: int):
+    """Sort by key and sentinel-pad heavy tables to fixed width."""
+    order = np.argsort(keys, kind="stable")
+    keys, parts = keys[order], parts[order]
+    pad = capacity - len(keys)
+    assert pad >= 0, f"heavy table overflow: {len(keys)} > {capacity}"
+    keys = np.concatenate([keys, np.full(pad, KEY_SENTINEL, np.int32)])
+    parts = np.concatenate([parts, np.zeros(pad, np.int32)])
+    return keys.astype(np.int32), parts.astype(np.int32)
+
+
+def uniform_partitioner(
+    num_partitions: int,
+    num_hosts: int = DEFAULT_NUM_HOSTS,
+    seed: int = 0,
+    heavy_capacity: int = 0,
+) -> Partitioner:
+    """UHP — the Spark/Flink default: hash(key) mod N (host table = h mod N)."""
+    host_to_part = (np.arange(num_hosts, dtype=np.int64) % num_partitions).astype(np.int32)
+    hk, hp = _pad_heavy(np.zeros(0, np.int32), np.zeros(0, np.int32), heavy_capacity)
+    return Partitioner(num_partitions, hk, hp, host_to_part, seed)
+
+
+def kip_update(
+    prev: Partitioner,
+    hist: Histogram,
+    num_partitions: int | None = None,
+    eps: float = 0.01,
+    heavy_capacity: int | None = None,
+    tight: bool = False,
+) -> Partitioner:
+    """Algorithm 1 — KIPUPDATE(KI, HASH, H, Hist, N, eps).
+
+    ``prev`` is KI (the partitioner of the previous stage); its
+    ``host_to_part`` also serves as the HASH host mapping when probing a
+    heavy key's fallback location.  ``num_partitions`` may differ from
+    ``prev.num_partitions`` (elastic resize uses this).
+    """
+    n = int(num_partitions or prev.num_partitions)
+    h = prev.num_hosts
+    seed = prev.seed
+    b = len(hist)
+    cap = heavy_capacity if heavy_capacity is not None else max(b, prev.heavy_keys.shape[0])
+
+    keys = hist.keys.astype(np.int64)
+    freqs = hist.freqs.astype(np.float64)
+
+    # line 1: allowed load level
+    top_freq = float(freqs[0]) if b else 0.0
+    maxload = max(1.0 / n, top_freq) + eps
+    # line 2: average load carried by one host (tail mass spread over hosts)
+    hostload = max(0.0, 1.0 - float(freqs.sum())) / h
+
+    load = np.zeros(n, np.float64)
+    prev_heavy = prev.heavy_map()
+    # previous assignment of each heavy key under KI
+    prev_part = prev.lookup_np(keys.astype(np.int32))
+    # the pure-hash (future non-heavy) location under the previous host map
+    hash_host = hash_to_host(keys.astype(np.int32), h, seed, xp=np)
+    hash_part = prev.host_to_part[hash_host]
+    if n < prev.num_partitions:  # elastic shrink: fold removed partitions
+        prev_part = prev_part % n
+        hash_part = hash_part % n
+        prev_heavy = {k: p % n for k, p in prev_heavy.items()}
+
+    heavy_parts = np.zeros(b, np.int32)
+    for i in range(b):  # Hist is ordered by decreasing frequency
+        f = freqs[i]
+        p = int(prev_heavy.get(int(keys[i]), prev_part[i]))  # line 4: KI(k)
+        if load[p] < maxload - f:  # line 5
+            heavy_parts[i] = p
+            load[p] += f
+            continue
+        p = int(hash_part[i])  # line 7: HASH(k)
+        if load[p] < maxload - f:  # line 8
+            heavy_parts[i] = p
+            load[p] += f
+            continue
+        p = int(np.argmin(load))  # line 10: lowest-load partition
+        heavy_parts[i] = p
+        load[p] += f
+
+    # lines 11-13: add host loads under the previous host->partition mapping
+    host_to_part = prev.host_to_part.copy()
+    if n < prev.num_partitions:
+        host_to_part = host_to_part % n
+    hosts_per_part = np.bincount(host_to_part, minlength=n).astype(np.float64)
+    load = load + hostload * hosts_per_part
+
+    # lines 14-15: greedy bin packing — move hosts off overloaded partitions
+    if tight and hostload > 0:
+        # Beyond-paper 'tight' mode: Algorithm 1 only rebins hosts when a
+        # partition exceeds MAXLOAD, which for f1 >> 1/N leaves the tail
+        # spread untouched.  Waterfill instead: equalize total loads at the
+        # level L solving sum_p max(0, L - heavy_load[p]) = tail_mass, and
+        # move the minimal number of hosts toward per-partition quotas.
+        heavy_only = load - hostload * hosts_per_part
+        tail_mass = hostload * h
+        lo, hi = heavy_only.min(), heavy_only.max() + tail_mass + hostload
+        for _ in range(60):  # bisection on the waterline
+            mid = 0.5 * (lo + hi)
+            if np.maximum(0.0, mid - heavy_only).sum() > tail_mass:
+                hi = mid
+            else:
+                lo = mid
+        quota = np.maximum(0.0, hi - heavy_only) / hostload
+        quota = np.floor(quota).astype(int)
+        # distribute leftover host slots to lowest-load partitions
+        leftover = h - quota.sum()
+        order = np.argsort(heavy_only + quota * hostload)
+        for i in range(leftover):
+            quota[order[i % n]] += 1
+        hosts_of = [list(np.where(host_to_part == p)[0]) for p in range(n)]
+        surplus = []
+        for p in range(n):
+            while len(hosts_of[p]) > quota[p]:
+                surplus.append(hosts_of[p].pop())
+        for p in range(n):
+            while len(hosts_of[p]) < quota[p] and surplus:
+                hh = surplus.pop()
+                host_to_part[hh] = p
+                hosts_of[p].append(hh)
+        hosts_per_part = np.bincount(host_to_part, minlength=n).astype(np.float64)
+        load = heavy_only + hostload * hosts_per_part
+    elif hostload > 0:
+        order_src = np.argsort(-load, kind="stable")
+        # hosts grouped per partition for O(H) moves
+        hosts_of = [np.where(host_to_part == p)[0].tolist() for p in range(n)]
+        dst_iter = 0
+        dsts = np.argsort(load, kind="stable").tolist()
+        for p in order_src.tolist():
+            while load[p] > maxload and hosts_of[p]:
+                # first partition with room for one more host
+                while dst_iter < len(dsts) and (
+                    dsts[dst_iter] == p or load[dsts[dst_iter]] >= maxload - hostload
+                ):
+                    dst_iter += 1
+                if dst_iter >= len(dsts):
+                    break  # nowhere below the bound: leave residual imbalance
+                q = dsts[dst_iter]
+                hh = hosts_of[p].pop()
+                host_to_part[hh] = q
+                hosts_of[q].append(hh)
+                load[p] -= hostload
+                load[q] += hostload
+
+    hk, hp = _pad_heavy(keys.astype(np.int32), heavy_parts, max(cap, b))
+    return Partitioner(n, hk, hp, host_to_part.astype(np.int32), seed)
+
+
+# ---------------------------------------------------------------------------
+# Balance metrics (paper's evaluation currency)
+# ---------------------------------------------------------------------------
+
+
+def load_imbalance(partitioner: Partitioner, key_stream: np.ndarray) -> float:
+    """max(load) / mean(load) over the actual key stream (paper Fig. 2/3)."""
+    parts = partitioner.lookup_np(np.asarray(key_stream, np.int32))
+    loads = np.bincount(parts, minlength=partitioner.num_partitions)
+    return float(loads.max() / max(loads.mean(), 1e-12))
+
+
+def expected_loads(partitioner: Partitioner, hist: Histogram) -> np.ndarray:
+    """Planner's view of per-partition load given a histogram."""
+    n = partitioner.num_partitions
+    load = np.zeros(n)
+    parts = partitioner.lookup_np(hist.keys.astype(np.int32))
+    np.add.at(load, parts, hist.freqs)
+    hosts_per_part = np.bincount(partitioner.host_to_part, minlength=n)
+    load += hist.tail_mass / partitioner.num_hosts * hosts_per_part
+    return load

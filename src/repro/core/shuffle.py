@@ -1,0 +1,194 @@
+"""Device-side keyed shuffle: the DDPS stage boundary on a JAX mesh.
+
+One shuffle step, executed under ``shard_map`` over the ``data`` axis:
+
+1. every worker evaluates the partitioner on its local keys
+   (Pallas ``partition_apply`` on TPU, jnp twin elsewhere — bit-identical),
+2. records are bucketed into a capacity-padded ``[W, cap]`` send buffer
+   (slots from ``dispatch_count``; overflow is counted, never silently lost),
+3. ``jax.lax.all_to_all`` exchanges the buffers,
+4. the DRW hook emits the local top-k histogram + global per-partition loads
+   (a ``psum`` — reusing normal DDPS communication, as the paper requires).
+
+Partitions may outnumber workers (over-partitioning, paper Fig. 5);
+``worker = partition % W``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.hashing import KEY_SENTINEL
+from repro.core.histogram import local_topk_histogram
+from repro.core.partitioner import PartitionerTables, lookup_device
+from repro.kernels import ref as kref
+
+__all__ = ["ShuffleResult", "make_shuffle_step", "make_migrate_step"]
+
+
+class ShuffleResult(NamedTuple):
+    keys: jax.Array       # int32[W, W*cap]   received keys per worker (sentinel padded)
+    values: jax.Array     # f32[W, W*cap, D]  received payloads
+    valid: jax.Array      # bool[W, W*cap]
+    part: jax.Array       # int32[W, W*cap]   destination partition of each record
+    loads: jax.Array      # int32[N]          global per-partition record counts
+    hist_keys: jax.Array  # int32[W, K]       DRW local top-k keys
+    hist_counts: jax.Array  # int32[W, K]
+    overflow: jax.Array   # int32[]           records dropped for capacity globally
+
+
+def _bucketize(keys, vals, valid, dest_part, num_workers, capacity):
+    """[n] records -> [W, cap] send buffers; returns buffers + overflow."""
+    w = dest_part % num_workers
+    slot, _ = kref.dispatch_count_ref(w, valid, num_parts=num_workers)
+    ok = valid & (slot >= 0) & (slot < capacity)
+    overflow = jnp.sum(valid & (slot >= capacity))
+    # out-of-range rows are dropped by scatter mode='drop'
+    s = jnp.where(ok, slot, capacity)
+    buf_keys = jnp.full((num_workers, capacity), KEY_SENTINEL, jnp.int32)
+    buf_keys = buf_keys.at[w, s].set(keys, mode="drop")
+    buf_part = jnp.zeros((num_workers, capacity), jnp.int32).at[w, s].set(dest_part, mode="drop")
+    buf_vals = jnp.zeros((num_workers, capacity) + vals.shape[1:], vals.dtype)
+    buf_vals = buf_vals.at[w, s].set(vals, mode="drop")
+    buf_valid = jnp.zeros((num_workers, capacity), bool).at[w, s].set(ok, mode="drop")
+    return buf_keys, buf_vals, buf_valid, buf_part, overflow
+
+
+def make_shuffle_step(
+    mesh: Mesh,
+    *,
+    num_partitions: int,
+    capacity: int,
+    hist_k: int = 64,
+    num_hosts: int,
+    seed: int = 0,
+    axis: str = "data",
+):
+    """Build the jitted shuffle step for a fixed mesh/capacity."""
+    num_workers = mesh.shape[axis]
+
+    def _local(tables, keys, vals, valid):
+        # keys [n] local records of this worker
+        tables = PartitionerTables(*tables)
+        dest = lookup_device(tables, keys, num_hosts, seed)
+        dest = jnp.where(valid, dest, 0)
+        bk, bv, bva, bp, overflow = _bucketize(keys, vals, valid, dest, num_workers, capacity)
+        # exchange: row j of the buffer goes to worker j
+        rk = jax.lax.all_to_all(bk, axis, 0, 0, tiled=True)
+        rv = jax.lax.all_to_all(bv, axis, 0, 0, tiled=True)
+        rva = jax.lax.all_to_all(bva, axis, 0, 0, tiled=True)
+        rp = jax.lax.all_to_all(bp, axis, 0, 0, tiled=True)
+        # DRW: sample local keys during normal work (no extra pass)
+        hk, hc, _ = local_topk_histogram(keys, valid, hist_k)
+        # global per-partition loads (normal DDPS comms: one psum)
+        my_loads = jnp.zeros(num_partitions, jnp.int32).at[dest].add(valid.astype(jnp.int32))
+        loads = jax.lax.psum(my_loads, axis)
+        overflow = jax.lax.psum(overflow, axis)
+        return (
+            rk.reshape(-1)[None],
+            rv.reshape(num_workers * capacity, -1)[None],
+            rva.reshape(-1)[None],
+            rp.reshape(-1)[None],
+            loads,
+            hk[None],
+            hc[None],
+            overflow,
+        )
+
+    mapped = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(
+            (P(), P(), P()),  # partitioner tables replicated
+            P(axis),  # keys sharded over workers
+            P(axis),
+            P(axis),
+        ),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def step(tables: PartitionerTables, keys, vals, valid) -> ShuffleResult:
+        rk, rv, rva, rp, loads, hk, hc, ov = mapped(tuple(tables), keys, vals, valid)
+        return ShuffleResult(rk, rv, rva, rp, loads, hk, hc, ov)
+
+    return step
+
+
+def make_migrate_step(
+    mesh: Mesh,
+    *,
+    state_capacity: int,
+    num_hosts: int,
+    seed: int = 0,
+    axis: str = "data",
+):
+    """Jitted operator-state migration for a partitioner swap.
+
+    Each worker re-evaluates old vs. new partitioner on its stored keys and
+    ships rows whose worker changed through an all-to-all sized to the full
+    state table (correctness-first; §Perf shrinks this with the histogram
+    bound).  Returns the new state table + relative-migration metric.
+    """
+    num_workers = mesh.shape[axis]
+
+    def _local(new_tables, state_keys, state_vals):
+        # state tables arrive stacked [1, S] / [1, S, D] per shard
+        state_keys, state_vals = state_keys[0], state_vals[0]
+        new_tables = PartitionerTables(*new_tables)
+        me = jax.lax.axis_index(axis)
+        valid = state_keys != KEY_SENTINEL
+        dest = lookup_device(new_tables, state_keys, num_hosts, seed) % num_workers
+        dest = jnp.where(valid, dest, me)  # padding stays put
+        moving = valid & (dest != me)
+        moved_w = jnp.sum(moving)
+        total_w = jax.lax.psum(jnp.sum(valid), axis)
+
+        bk, bv, bva, _, overflow = _bucketize(
+            jnp.where(moving, state_keys, KEY_SENTINEL),
+            state_vals,
+            moving,
+            jnp.where(moving, dest, me),
+            num_workers,
+            state_capacity,
+        )
+        rk = jax.lax.all_to_all(bk, axis, 0, 0, tiled=True)
+        rv = jax.lax.all_to_all(bv, axis, 0, 0, tiled=True)
+        rva = jax.lax.all_to_all(bva, axis, 0, 0, tiled=True)
+
+        kept_keys = jnp.where(moving, KEY_SENTINEL, state_keys)
+        kept_valid = valid & ~moving
+        moved_total = jax.lax.psum(moved_w, axis)
+        overflow = jax.lax.psum(overflow, axis)
+        return (
+            kept_keys[None],
+            state_vals[None],
+            kept_valid[None],
+            rk.reshape(-1)[None],
+            rv.reshape(num_workers * state_capacity, -1)[None],
+            rva.reshape(-1)[None],
+            moved_total,
+            total_w,
+            overflow,
+        )
+
+    mapped = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=((P(), P(), P()), P(axis), P(axis)),
+        out_specs=(P(axis),) * 6 + (P(), P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def migrate(new_tables, state_keys, state_vals):
+        return mapped(tuple(new_tables), state_keys, state_vals)
+
+    return migrate

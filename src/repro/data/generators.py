@@ -1,0 +1,95 @@
+"""Synthetic workload generators mirroring the paper's datasets.
+
+* ``zipf_keys``      — the ZIPF dataset: parametrized Zipfian key streams
+  (100K distinct items, exponent 1..3 in the paper).
+* ``drifting_zipf``  — LFM-like stream: Zipfian with the identity of the
+  heavy keys re-drawn over time (concept drift), matching the Fig. 3
+  protocol ("replacing keys with randomly generated strings in each round").
+* ``host_skew_keys`` — web-crawl-like: few giant hosts, heavy-tailed rest
+  (the §6 fetch-list workload).
+* ``lm_token_stream``— token batches for the LM data pipeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["zipf_keys", "drifting_zipf", "host_skew_keys", "lm_token_stream"]
+
+
+def _zipf_probs(num_keys: int, exponent: float) -> np.ndarray:
+    ranks = np.arange(1, num_keys + 1, dtype=np.float64)
+    p = ranks ** (-exponent)
+    return p / p.sum()
+
+
+def zipf_keys(
+    n: int,
+    num_keys: int = 100_000,
+    exponent: float = 1.0,
+    seed: int = 0,
+    key_space: int = 2**30,
+) -> np.ndarray:
+    """Sample ``n`` keys from a Zipf(num_keys, exponent) distribution.
+
+    Key identities are scattered over ``key_space`` via a random permutation
+    so rank order is uncorrelated with key value (as with hashed word
+    tokens in the paper's MurmurHash3 setup).
+    """
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(num_keys, exponent)
+    ranks = rng.choice(num_keys, size=n, p=probs)
+    ids = rng.choice(key_space, size=num_keys, replace=False)
+    return ids[ranks].astype(np.int64)
+
+
+def drifting_zipf(
+    num_batches: int,
+    batch_size: int,
+    num_keys: int = 10_000,
+    exponent: float = 1.0,
+    drift_every: int = 5,
+    drift_fraction: float = 0.3,
+    seed: int = 0,
+):
+    """Yield ``num_batches`` key batches; every ``drift_every`` batches a
+    ``drift_fraction`` of the heaviest ranks get brand-new key identities.
+    """
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(num_keys, exponent)
+    ids = rng.choice(2**30, size=num_keys, replace=False).astype(np.int64)
+    for b in range(num_batches):
+        if b > 0 and b % drift_every == 0:
+            k = max(1, int(drift_fraction * num_keys))
+            swap = rng.choice(num_keys, size=k, replace=False)
+            ids[swap] = rng.choice(2**30, size=k, replace=False)
+        ranks = rng.choice(num_keys, size=batch_size, p=probs)
+        yield ids[ranks].copy()
+
+
+def host_skew_keys(
+    n: int,
+    num_hosts: int = 64,
+    giants: int = 4,
+    giant_mass: float = 0.6,
+    seed: int = 0,
+) -> np.ndarray:
+    """Web-crawl fetch-list keys: ``giants`` hosts own ``giant_mass`` of all
+    pages; the rest follow Zipf(1.2) — the §6 distribution shape.
+    """
+    rng = np.random.default_rng(seed)
+    tail = _zipf_probs(num_hosts - giants, 1.2) * (1.0 - giant_mass)
+    head = np.full(giants, giant_mass / giants)
+    probs = np.concatenate([head, tail])
+    ids = rng.choice(2**30, size=num_hosts, replace=False)
+    return ids[rng.choice(num_hosts, size=n, p=probs)].astype(np.int64)
+
+
+def lm_token_stream(
+    n_batches: int, batch: int, seq: int, vocab: int, seed: int = 0, exponent: float = 1.1
+):
+    """Zipfian token-id batches for LM training examples/smoke tests."""
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(min(vocab, 50_000), exponent)
+    for _ in range(n_batches):
+        toks = rng.choice(len(probs), size=(batch, seq), p=probs)
+        yield toks.astype(np.int32)

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+The wrappers pad inputs to kernel block multiples, pick interpret mode
+automatically (Pallas interprets on CPU; compiled on TPU), and expose
+numpy-friendly signatures used by the shuffle/runtime layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch_count import BLK as DISPATCH_BLK, dispatch_count
+from repro.kernels.partition_apply import KEY_LANES, KEY_ROWS, partition_apply
+from repro.kernels.sketch_update import sketch_update
+
+_PART_BLK = KEY_LANES * KEY_ROWS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+    return x, n
+
+
+def apply_partitioner(keys: jax.Array, tables, *, num_hosts: int, seed: int = 0) -> jax.Array:
+    """Partition ids for ``keys`` using PartitionerTables (Pallas hot path)."""
+    padded, n = _pad_to(keys.astype(jnp.int32), _PART_BLK)
+    b = tables.heavy_keys.shape[0]
+    bpad = (-b) % KEY_LANES
+    hk = jnp.concatenate([tables.heavy_keys, jnp.full(bpad, 2**31 - 1, jnp.int32)]) if bpad else tables.heavy_keys
+    hp = jnp.concatenate([tables.heavy_parts, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_parts
+    out = partition_apply(
+        padded, hk, hp, tables.host_to_part,
+        seed=seed, num_hosts=num_hosts, interpret=_interpret(),
+    )
+    return out[:n]
+
+
+def count_sketch(keys: jax.Array, valid: jax.Array | None = None, *, depth: int = 4, width: int = 2048) -> jax.Array:
+    """float32[depth, width] CMS of the batch (Pallas hot path)."""
+    if valid is None:
+        valid = jnp.ones(keys.shape[0], bool)
+    k, n = _pad_to(keys.astype(jnp.int32), _PART_BLK)
+    v, _ = _pad_to(valid.astype(jnp.int32), _PART_BLK)
+    return sketch_update(k, v.astype(bool), depth=depth, width=width, interpret=_interpret())
+
+
+def dispatch_slots(dest: jax.Array, valid: jax.Array | None = None, *, num_parts: int):
+    """(slot[n], counts[num_parts]) for building the all-to-all send buffer."""
+    if valid is None:
+        valid = jnp.ones(dest.shape[0], bool)
+    d, n = _pad_to(dest.astype(jnp.int32), DISPATCH_BLK)
+    v, _ = _pad_to(valid.astype(jnp.int32), DISPATCH_BLK)
+    slot, counts = dispatch_count(d, v.astype(bool), num_parts=num_parts, interpret=_interpret())
+    return slot[:n], counts

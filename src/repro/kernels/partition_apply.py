@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: per-record partition lookup (the shuffle hot path).
+
+For every key the partitioner computes::
+
+    host = fmix32(key ^ seed) & (H - 1)
+    part = heavy_parts[i]            if key == heavy_keys[i] for some i
+         = host_to_part[host]        otherwise
+
+TPU adaptation (vs. the JVM per-record hash-map of the paper): the heavy
+table (B <= 1024 keys) and the host routing table (H = 4096) are pinned in
+VMEM for the whole kernel; lookups are expressed as one-hot matmuls so they
+lower to MXU/VPU ops instead of dynamic gathers.
+
+VMEM budget per grid step (block = 256 keys, H = 4096, B = 1024):
+  host one-hot  256*4096*4B = 4.0 MiB
+  heavy one-hot 256*1024*4B = 1.0 MiB
+  tables        (B*2 + H)*4B ~ 24 KiB          => ~5.1 MiB < 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# keys are processed in [KEY_ROWS, 128] tiles (lane dim = 128, TPU-native).
+KEY_LANES = 128
+KEY_ROWS = 2  # 256 keys per grid step
+
+
+def _fmix32(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _kernel(keys_ref, heavy_keys_ref, heavy_parts_ref, host_ref, out_ref, *, seed: int, num_hosts: int):
+    keys2d = keys_ref[...]  # [KEY_ROWS, 128] int32
+    blk = KEY_ROWS * KEY_LANES
+    keys = keys2d.reshape(blk)
+
+    # ---- weighted hash: key -> host -> partition ----
+    mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
+    host = (mixed & jnp.uint32(num_hosts - 1)).astype(jnp.int32)
+    host_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, num_hosts), 1)
+    onehot_host = (host[:, None] == host_iota).astype(jnp.float32)  # [blk, H]
+    table = host_ref[...].reshape(num_hosts).astype(jnp.float32)
+    part_tail = jax.lax.dot_general(
+        onehot_host, table[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+    # ---- explicit heavy-key routing ----
+    hk = heavy_keys_ref[...].reshape(-1)  # [B] sorted, sentinel padded
+    hp = heavy_parts_ref[...].reshape(-1).astype(jnp.float32)
+    eq = (keys[:, None] == hk[None, :]).astype(jnp.float32)  # [blk, B]
+    hit = jnp.sum(eq, axis=1) > 0.0
+    part_heavy = jax.lax.dot_general(
+        eq, hp[:, None], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0]
+
+    part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
+    out_ref[...] = part.reshape(KEY_ROWS, KEY_LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "num_hosts", "interpret"))
+def partition_apply(
+    keys: jax.Array,  # int32[n], n % 256 == 0
+    heavy_keys: jax.Array,  # int32[B] sorted, sentinel padded; B % 128 == 0
+    heavy_parts: jax.Array,  # int32[B]
+    host_to_part: jax.Array,  # int32[H]
+    *,
+    seed: int = 0,
+    num_hosts: int = 4096,
+    interpret: bool = True,
+) -> jax.Array:
+    n = keys.shape[0]
+    blk = KEY_ROWS * KEY_LANES
+    assert n % blk == 0, f"pad keys to a multiple of {blk}"
+    assert num_hosts & (num_hosts - 1) == 0, "H must be a power of two"
+    b = heavy_keys.shape[0]
+    keys2d = keys.reshape(n // KEY_LANES, KEY_LANES)
+
+    grid = (n // blk,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, seed=seed, num_hosts=num_hosts),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((KEY_ROWS, KEY_LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((KEY_ROWS, KEY_LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // KEY_LANES, KEY_LANES), jnp.int32),
+        interpret=interpret,
+    )(keys2d, heavy_keys[None, :], heavy_parts[None, :], host_to_part[None, :])
+    return out.reshape(n)

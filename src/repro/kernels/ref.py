@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (no blocking, no pallas_call)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _fmix32(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def partition_apply_ref(keys, heavy_keys, heavy_parts, host_to_part, *, seed=0, num_hosts=4096):
+    keys = keys.astype(jnp.int32)
+    mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
+    host = (mixed & jnp.uint32(num_hosts - 1)).astype(jnp.int32)
+    part = host_to_part[host]
+    idx = jnp.clip(jnp.searchsorted(heavy_keys, keys), 0, heavy_keys.shape[0] - 1)
+    hit = heavy_keys[idx] == keys
+    return jnp.where(hit, heavy_parts[idx], part).astype(jnp.int32)
+
+
+def sketch_update_ref(keys, valid, *, depth=4, width=2048):
+    keys = keys.astype(jnp.uint32)
+    rows = []
+    for d in range(depth):
+        seed_d = (d * 0x9E3779B9) & 0xFFFFFFFF
+        col = (_fmix32(keys ^ jnp.uint32(seed_d)) % jnp.uint32(width)).astype(jnp.int32)
+        row = jnp.zeros(width, jnp.float32).at[col].add(valid.astype(jnp.float32))
+        rows.append(row)
+    return jnp.stack(rows)
+
+
+def dispatch_count_ref(dest, valid, *, num_parts):
+    dest = dest.astype(jnp.int32)
+    onehot = jax.nn.one_hot(dest, num_parts, dtype=jnp.float32) * valid[:, None].astype(jnp.float32)
+    prefix = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    slot = jnp.sum(prefix * onehot, axis=1).astype(jnp.int32)
+    slot = jnp.where(valid, slot, -1)
+    counts = jnp.sum(onehot, axis=0).astype(jnp.int32)
+    return slot, counts

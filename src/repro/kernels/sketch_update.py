@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: count-min-sketch accumulation (DRW sampling hot path).
+
+Each grid step consumes a [2, 128] tile of keys and accumulates all ``depth``
+sketch rows held in VMEM across the (sequential) TPU grid::
+
+    for d in range(depth):
+        col = fmix32(key ^ seed_d) % width
+        sketch[d, col] += 1          # as one-hot matvec, no dynamic scatter
+
+The scatter-free formulation is the TPU-native rewrite of the per-record
+hash-map increments a JVM worker would do: a [block, width] one-hot reduced
+over the block dim lowers to an MXU matmul with a ones vector.
+
+VMEM budget (block = 256, width <= 4096, depth <= 8):
+  one-hot 256*4096*4B = 4 MiB; sketch 8*4096*4B = 128 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.partition_apply import KEY_LANES, KEY_ROWS, _fmix32
+
+
+def _kernel(keys_ref, valid_ref, out_ref, *, depth: int, width: int):
+    blk = KEY_ROWS * KEY_LANES
+    keys = keys_ref[...].reshape(blk)
+    valid = valid_ref[...].reshape(blk).astype(jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, width), 1)
+    acc = out_ref[...]
+    for d in range(depth):
+        seed_d = (d * 0x9E3779B9) & 0xFFFFFFFF
+        mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32(seed_d))
+        col = (mixed % jnp.uint32(width)).astype(jnp.int32)
+        onehot = (col[:, None] == col_iota).astype(jnp.float32) * valid[:, None]
+        row = jnp.sum(onehot, axis=0)  # [width]
+        acc = acc.at[d, :].add(row)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "width", "interpret"))
+def sketch_update(
+    keys: jax.Array,  # int32[n], n % 256 == 0
+    valid: jax.Array,  # bool[n]
+    *,
+    depth: int = 4,
+    width: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns the float32[depth, width] count-min sketch of the batch."""
+    n = keys.shape[0]
+    blk = KEY_ROWS * KEY_LANES
+    assert n % blk == 0, f"pad keys to a multiple of {blk}"
+    keys2d = keys.reshape(n // KEY_LANES, KEY_LANES)
+    valid2d = valid.astype(jnp.int32).reshape(n // KEY_LANES, KEY_LANES)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, depth=depth, width=width),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((KEY_ROWS, KEY_LANES), lambda i: (i, 0)),
+            pl.BlockSpec((KEY_ROWS, KEY_LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((depth, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((depth, width), jnp.float32),
+        interpret=interpret,
+    )(keys2d, valid2d)

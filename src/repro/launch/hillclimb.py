@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower the three selected cells with tagged
+optimization variants and record the roofline deltas.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import run_cell
+from repro.launch.sharding import ShardingOptions, default_options
+from repro.configs.registry import get_config
+
+# (arch, shape, tag, options-override builder)
+VARIANTS = [
+    # A. xlstm-125m x train_4k — worst roofline fraction (memory-bound)
+    ("xlstm-125m", "train_4k", "_hc_puredp",
+     lambda o: dataclasses.replace(o, pure_dp=True)),
+    ("xlstm-125m", "train_4k", "_hc_puredp_bf16",
+     lambda o: dataclasses.replace(o, pure_dp=True, recurrent_bf16=True)),
+    ("xlstm-125m", "train_4k", "_hc_puredp_bf16_unroll",
+     lambda o: dataclasses.replace(o, pure_dp=True, recurrent_bf16=True,
+                                   slstm_unroll=32)),
+    # B. stablelm-1.6b x train_4k — most collective-bound (TP/SP mismatch)
+    ("stablelm-1.6b", "train_4k", "_hc_puredp",
+     lambda o: dataclasses.replace(o, pure_dp=True)),
+    ("stablelm-1.6b", "train_4k", "_hc_puredp_pbf16",
+     lambda o: dataclasses.replace(o, pure_dp=True, attn_p_bf16=True)),
+    # C. llama4-maverick x train_4k — the paper-representative MoE cell
+    ("llama4-maverick-400b-a17b", "train_4k", "_hc_savemoe",
+     lambda o: dataclasses.replace(o, remat_policy="save_moe")),
+    ("llama4-maverick-400b-a17b", "train_4k", "_hc_savemoe_cf1",
+     lambda o: dataclasses.replace(o, remat_policy="save_moe", moe_cf=1.0)),
+    ("llama4-maverick-400b-a17b", "train_4k", "_hc_savemoe_cf1_pbf16",
+     lambda o: dataclasses.replace(o, remat_policy="save_moe", moe_cf=1.0,
+                                   attn_p_bf16=True)),
+]
+
+
+def main() -> None:
+    for arch, shape, tag, patch in VARIANTS:
+        opts = patch(default_options(get_config(arch)))
+        rec = run_cell(arch, shape, multi_pod=False, opts=opts, tag=tag, save_hlo=True)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[ok] {arch} x {shape} {tag}: c={r['compute_s']:.3f}s "
+                  f"m={r['memory_s']:.3f}s x={r['collective_s']:.3f}s "
+                  f"-> {r['bottleneck']} frac={r['roofline_fraction']:.3f} "
+                  f"useful={rec['useful_ratio']:.2f}", flush=True)
+        else:
+            print(f"[error] {arch} {tag} :: {rec.get('error')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh builders (functions, never module-level constants:
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) over ("data", "model").
+    Multi-pod: 2 pods = 512 chips (2, 16, 16) over ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n

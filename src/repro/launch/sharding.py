@@ -1,0 +1,320 @@
+"""Sharding rules: map param/batch/cache pytrees to NamedShardings.
+
+Strategy (DESIGN.md §6): DP over ("pod","data"), TP over "model" (heads /
+d_ff / vocab / experts), SP (sequence-sharded residuals) between blocks,
+FSDP over "data" for the weight matrices of the large archs, EP for MoE.
+Rules are (path-substring, spec) pairs matched against flattened pytree
+paths — later rules win.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import dp_axes_of
+from repro.models.modules import Policy
+
+TP = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    fsdp: bool = False          # shard big weight matrices over "data" too
+    sp: bool = True             # sequence-sharded residual stream (train/prefill)
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.bfloat16
+    moment_dtype: jnp.dtype = jnp.float32
+    remat: bool = True
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 2048
+    # §Perf hillclimb knobs (defaults = paper-faithful baseline config)
+    pure_dp: bool = False       # no TP: FSDP/ZeRO-3 over the whole mesh
+    attn_p_bf16: bool = False   # bf16 softmax-weights @ V (halves attn HBM)
+    recurrent_bf16: bool = False  # bf16 gate/qkv precompute in ssm/xlstm
+    remat_policy: str = "nothing"  # "nothing" | "save_moe" (skip MoE recompute)
+    moe_cf: float = 0.0         # capacity-factor override (0 = config value)
+    slstm_unroll: int = 1       # sLSTM steps per scan tick
+
+
+def default_options(cfg: ArchConfig) -> ShardingOptions:
+    big = cfg.param_count() > 20e9
+    huge = cfg.param_count() > 100e9
+    return ShardingOptions(
+        fsdp=big,
+        moment_dtype=jnp.bfloat16 if huge else jnp.float32,
+    )
+
+
+def make_policy(cfg: ArchConfig, mesh: Mesh | None, shape_kind: str,
+                opts: ShardingOptions) -> Policy:
+    if mesh is None:
+        return Policy()
+    tp = 1 if opts.pure_dp else mesh.shape[TP]
+    if opts.pure_dp:
+        dp = tuple(mesh.axis_names)  # the whole mesh is data-parallel
+    else:
+        dp = dp_axes_of(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    constrain = shape_kind in ("train", "prefill") and opts.sp
+
+    def shard(x, name):
+        if not constrain:
+            return x
+        if opts.pure_dp:
+            if name in ("act_btd", "logits") and x.ndim == 3:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dp_spec, None, None)))
+            return x
+        spec = {
+            "act_btd": P(dp_spec, TP, None),
+            "act_q": P(dp_spec, None, TP, None),
+            "act_kv": P(dp_spec, None, TP, None),
+            "ffn_hidden4": P(dp_spec, None, None, TP),
+            "ssm_inner": P(dp_spec, None, TP),
+            "logits": P(dp_spec, None, TP),
+        }.get(name)
+        if spec is None or len(spec) != x.ndim:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return Policy(
+        param_dtype=opts.param_dtype,
+        compute_dtype=opts.compute_dtype,
+        shard=shard,
+        tp=tp,
+        mesh=mesh,
+        dp_axes=dp,
+        tp_axis=TP,
+        remat=opts.remat,
+        attn_q_chunk=opts.attn_q_chunk,
+        attn_kv_chunk=opts.attn_kv_chunk,
+        attn_p_bf16=opts.attn_p_bf16,
+        recurrent_bf16=opts.recurrent_bf16,
+        remat_policy=opts.remat_policy,
+        moe_capacity_factor=opts.moe_cf,
+        slstm_unroll=opts.slstm_unroll,
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _param_rules(fsdp: bool, decode: bool = False):
+    """(path substring regex, rank -> PartitionSpec).  First match wins.
+
+    Decode mode: no FSDP (weight gathers per token are absurd); MoE expert
+    FFNs are F-sharded over the data axes instead (expert-TP, zero weight
+    movement — see moe_apply_replicated)."""
+    fs = "data" if (fsdp and not decode) else None
+    if decode:
+        moe_rules = [
+            (r"moe/router$", lambda r: P(*_pad(r, (None, None)))),
+            (r"moe/wi$", lambda r: P(*_pad(r, (TP, None, None, "data")))),
+            (r"moe/wo$", lambda r: P(*_pad(r, (TP, "data", None)))),
+            (r"moe/shared/wi$", lambda r: P(*_pad(r, (None, None, TP)))),
+            (r"moe/shared/wo$", lambda r: P(*_pad(r, (TP, None)))),
+        ]
+    else:
+        moe_rules = [
+            (r"moe/router$", lambda r: P(*_pad(r, (None, None)))),
+            (r"moe/wi$", lambda r: P(*_pad(r, (TP, fs, None, None)))),
+            (r"moe/wo$", lambda r: P(*_pad(r, (TP, None, fs)))),
+            (r"moe/shared/wi$", lambda r: P(*_pad(r, (fs, None, TP)))),
+            (r"moe/shared/wo$", lambda r: P(*_pad(r, (TP, fs)))),
+        ]
+    return moe_rules + [
+        # embeddings / unembedding: vocab over model (+ d over data FSDP)
+        (r"embed/tok$", lambda r: P(TP, fs)),
+        (r"lm_head$", lambda r: P(TP, fs)),
+        (r"dec_pos$", lambda r: P(None, TP)),
+        # attention (leading period axis optional)
+        (r"attn/wq$", lambda r: P(*_pad(r, (fs, TP, None)))),
+        (r"attn/wk$", lambda r: P(*_pad(r, (fs, None, None)))),
+        (r"attn/wv$", lambda r: P(*_pad(r, (fs, None, None)))),
+        (r"attn/wo$", lambda r: P(*_pad(r, (TP, None, fs)))),
+        # dense ffn
+        (r"ffn/wi$", lambda r: P(*_pad(r, (fs, None, TP)))),
+        (r"ffn/wo$", lambda r: P(*_pad(r, (TP, fs)))),
+        # mamba
+        (r"mamba/in_proj$", lambda r: P(*_pad(r, (fs, None, TP)))),
+        (r"mamba/conv_w$", lambda r: P(*_pad(r, (None, TP)))),
+        (r"mamba/conv_b$", lambda r: P(*_pad(r, (TP,)))),
+        (r"mamba/x_proj$", lambda r: P(*_pad(r, (TP, None)))),
+        (r"mamba/dt_proj$", lambda r: P(*_pad(r, (None, TP)))),
+        (r"mamba/dt_bias$", lambda r: P(*_pad(r, (TP,)))),
+        (r"mamba/a_log$", lambda r: P(*_pad(r, (TP, None)))),
+        (r"mamba/d_skip$", lambda r: P(*_pad(r, (TP,)))),
+        (r"mamba/out_proj$", lambda r: P(*_pad(r, (TP, fs)))),
+        # xlstm
+        (r"mlstm/up$", lambda r: P(*_pad(r, (fs, None, TP)))),
+        (r"mlstm/conv_[wb]$", lambda r: P(*_pad(r, (None, TP) if r >= 2 else (TP,)))),
+        (r"mlstm/w[qkv]$", lambda r: P(*_pad(r, (None, TP, None)))),
+        (r"mlstm/w_if$", lambda r: P(*_pad(r, (None, None, TP)))),
+        (r"mlstm/b_if$", lambda r: P(*_pad(r, (None, TP)))),
+        (r"mlstm/down$", lambda r: P(*_pad(r, (TP, None, fs)))),
+        (r"slstm/w$", lambda r: P(*_pad(r, (None, None, TP, None)))),
+        (r"slstm/r$", lambda r: P(*_pad(r, (None, TP, None, None)))),
+        (r"slstm/b$", lambda r: P(*_pad(r, (None, TP, None)))),
+        (r"slstm/down$", lambda r: P(*_pad(r, (TP, None, fs)))),
+        # norms + everything small: replicated
+        (r"", lambda r: P()),
+    ]
+
+
+def _pad(rank: int, spec: tuple) -> tuple:
+    """Left-pad a spec with None for the stacked period axis (if present)."""
+    if rank == len(spec):
+        return spec
+    assert rank == len(spec) + 1, f"rank {rank} vs spec {spec}"
+    return (None,) + spec
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_paths(v, f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _tree_paths(v, f"{prefix}{i}/")
+    elif tree is not None:
+        yield prefix.rstrip("/"), tree
+
+
+def param_shardings(params_abstract, mesh: Mesh, opts: ShardingOptions,
+                    decode: bool = False):
+    """NamedSharding pytree matching the abstract params."""
+    if opts.pure_dp:
+        return _pure_dp_shardings(params_abstract, mesh)
+    rules = _param_rules(opts.fsdp, decode)
+
+    def assign(path, leaf):
+        for pat, fn in rules:
+            if re.search(pat, path):
+                spec = fn(leaf.ndim)
+                # drop axes that do not divide evenly -> replicate that dim
+                fixed = []
+                for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+                    if ax is None:
+                        fixed.append(None)
+                        continue
+                    size = np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+                    fixed.append(ax if dim % size == 0 else None)
+                return NamedSharding(mesh, P(*fixed))
+        raise AssertionError(f"no rule for {path}")
+
+    flat = dict(_tree_paths(params_abstract))
+    specs = {k: assign(k, v) for k, v in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(*vals) if hasattr(tree, "_fields") else type(tree)(vals)
+        if tree is None:
+            return None
+        return specs[prefix.rstrip("/")]
+
+    return rebuild(params_abstract)
+
+
+def _pure_dp_shardings(params_abstract, mesh: Mesh):
+    """ZeRO-3/FSDP: every tensor sharded over the *whole* mesh along its
+    first evenly-divisible dim (GSPMD gathers at use, reduce-scatters
+    grads); small tensors replicate.  No TP => no head padding, no SP
+    collectives — the right regime for sub-~3B models (§Perf)."""
+    axes = tuple(mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def assign(leaf):
+        for i, dim in enumerate(leaf.shape):
+            if dim % n == 0:
+                spec = [None] * leaf.ndim
+                spec[i] = axes
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(assign, params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch_abstract, mesh: Mesh, axes: tuple | None = None):
+    dp = axes or dp_axes_of(mesh)
+
+    def assign(leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        # longest suffix of dp axes whose product divides the batch dim
+        use = list(dp)
+        while use and leaf.shape[0] % int(np.prod([mesh.shape[a] for a in use])):
+            use.pop(0)
+        if not use:
+            return NamedSharding(mesh, P())
+        spec = tuple(use) if len(use) > 1 else use[0]
+        return NamedSharding(mesh, P(spec, *(None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(assign, batch_abstract)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, batch: int):
+    """KV/SSM cache: batch over dp when divisible; heads/inner over model;
+    for batch=1 long-context cells the KV *sequence* is sharded over data."""
+    dp = dp_axes_of(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    tp = mesh.shape[TP]
+    batch_ok = batch % dpn == 0
+
+    def assign(path, leaf):
+        shape = leaf.shape
+        spec = [None] * leaf.ndim
+        # find batch dim: first dim equal to `batch` after optional stack axis
+        for i, dim in enumerate(shape):
+            if dim == batch and batch_ok and i <= 1:
+                spec[i] = dp_spec
+                break
+        if re.search(r"/(k|v)$", path) and leaf.ndim >= 4:
+            # [..., B, L, H, hd]
+            h_axis = leaf.ndim - 2
+            l_axis = leaf.ndim - 3
+            if shape[h_axis] % tp == 0:
+                spec[h_axis] = TP
+            if not batch_ok and shape[l_axis] % dpn == 0:
+                spec[l_axis] = dp_spec  # seq-sharded KV (long_500k)
+        elif re.search(r"(ssm|conv)$", path) and leaf.ndim >= 3:
+            # mamba states [..., B, *, di] — inner dim over model
+            if shape[-1] % tp == 0:
+                spec[-1] = TP
+        elif re.search(r"/(c|n|m|h)$", path) and leaf.ndim >= 3:
+            # xlstm states [..., B, H, ...]: heads over model
+            h_axis = 2 if shape[0] != batch else 1
+            if h_axis < leaf.ndim and shape[h_axis] % tp == 0:
+                spec[h_axis] = TP
+        return NamedSharding(mesh, P(*spec))
+
+    flat = dict(_tree_paths(cache_abstract))
+    specs = {k: assign(k, v) for k, v in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(*vals) if hasattr(tree, "_fields") else type(tree)(vals)
+        if tree is None:
+            return None
+        return specs[prefix.rstrip("/")]
+
+    return rebuild(cache_abstract)

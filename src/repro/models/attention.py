@@ -1,0 +1,384 @@
+"""Attention: GQA with TP head padding, RoPE/M-RoPE, chunked flash, caches.
+
+TP head layout
+--------------
+Sharding heads over a 16-way ``model`` axis requires head counts divisible
+by 16, which none of {8, 28, 40, 56} are.  We use an *exact* padded layout
+(see DESIGN.md §6):
+
+* q heads are padded to ``Hq_p`` with dead heads (zero wq columns; their
+  output hits zero wo rows, so the function value is unchanged),
+* kv heads are *replicated at activation level* to ``Hkv_p = max(kv, tp)``
+  via a static gather of the real kv projections (parameters stay real and
+  tied, so gradients sum over replicas — exactly GQA semantics),
+* a per-arch permutation groups each physical kv slot with the q heads of
+  its real kv head, making attention fully local along the model axis.
+
+Flash attention is q/kv-chunked with *static* block skipping for causal and
+sliding-window masks (python-level chunk loops inside the scanned period
+body), so the compiled FLOPs track the true masked workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import Array, Policy, apply_norm, init_norm, normal
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# head layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    hq: int          # real q heads
+    hkv: int         # real kv heads
+    hq_p: int        # physical q heads (multiple of tp)
+    hkv_p: int       # physical kv heads (multiple of tp, or real if >= tp)
+    q_map: tuple     # [hq_p] -> real q index or -1 (dead)
+    kv_map: tuple    # [hkv_p] -> real kv index
+    qps: int         # q heads per physical kv slot
+
+    @property
+    def dead_q(self) -> int:
+        return sum(1 for i in self.q_map if i < 0)
+
+
+def head_layout(hq: int, hkv: int, tp: int) -> HeadLayout:
+    if hkv >= tp:
+        assert hkv % tp == 0, f"kv heads {hkv} not a multiple of tp {tp}"
+        hkv_p = hkv
+    else:
+        assert tp % hkv == 0, f"tp {tp} not a multiple of kv heads {hkv}"
+        hkv_p = tp
+    r = hkv_p // hkv                       # physical slots per real kv head
+    qpr = hq // hkv                        # real q heads per real kv head
+    qps = int(np.ceil(qpr / r))            # q heads per physical slot
+    hq_p = hkv_p * qps
+    q_map = [-1] * hq_p
+    kv_map = [0] * hkv_p
+    for j in range(hkv):
+        for c in range(r):
+            s = j * r + c                  # physical kv slot
+            kv_map[s] = j
+            for t in range(qps):
+                rq = c * qps + t           # index within this kv head's q set
+                if rq < qpr:
+                    q_map[s * qps + t] = j * qpr + rq
+    return HeadLayout(hq, hkv, hq_p, hkv_p, tuple(q_map), tuple(kv_map), qps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(hd_rot: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd_rot, 2, dtype=np.float64) / hd_rot))
+
+
+def apply_rope(x: Array, pos: Array, *, theta: float, pct: float = 1.0,
+               mrope_sections: tuple | None = None) -> Array:
+    """x [B, S, H, hd]; pos int32 [B, S] (or [3, B, S] for M-RoPE).
+
+    Angles (position x frequency) are always f32; the rotation itself runs
+    in the activation dtype so backward cotangents (and their cross-shard
+    psums) stay bf16 — §Perf iteration C3 measured f32 rope upcasts forcing
+    f32 activation all-reduces through the whole residual backward."""
+    hd = x.shape[-1]
+    hd_rot = int(hd * pct) // 2 * 2
+    freqs = jnp.asarray(_rope_freqs(hd_rot, theta), jnp.float32)  # [hd_rot/2]
+    if mrope_sections is None:
+        angles = pos.astype(jnp.float32)[..., None] * freqs  # [B, S, hd_rot/2]
+    else:
+        # M-RoPE: split the frequency dim into (t, h, w) sections, each
+        # rotated by its own position stream (pos [3, B, S]).
+        secs = []
+        off = 0
+        for i, sec in enumerate(mrope_sections):
+            secs.append(pos[i].astype(jnp.float32)[..., None] * freqs[off : off + sec])
+            off += sec
+        angles = jnp.concatenate(secs, axis=-1)
+    dt = x.dtype
+    sin = jnp.sin(angles).astype(dt)[:, :, None, :]
+    cos = jnp.cos(angles).astype(dt)[:, :, None, :]
+    x1, x2 = x[..., : hd_rot // 2], x[..., hd_rot // 2 :hd_rot]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rot, x[..., hd_rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d: int, lay: HeadLayout, hd: int, *, qk_norm: bool, norm_kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    wq = normal(ks[0], (d, lay.hq_p, hd), d**-0.5, dtype)
+    dead = jnp.asarray(np.array(lay.q_map) < 0)
+    wq = jnp.where(dead[None, :, None], 0.0, wq)
+    p = {
+        "wq": wq,
+        "wk": normal(ks[1], (d, lay.hkv, hd), d**-0.5, dtype),
+        "wv": normal(ks[2], (d, lay.hkv, hd), d**-0.5, dtype),
+        "wo": normal(ks[3], (lay.hq_p, hd, d), (lay.hq_p * hd) ** -0.5, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_norm(norm_kind, hd, dtype)
+        p["k_norm"] = init_norm(norm_kind, hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention with static block skipping
+# ---------------------------------------------------------------------------
+
+
+def _block_visible(causal: bool, window: int, q0: int, q1: int, k0: int, k1: int) -> bool:
+    """May any (q, k) pair in this block attend?  (static, python ints)"""
+    if causal and k0 > q1 - 1:
+        return False
+    if window > 0 and k1 - 1 < q0 - window + 1:
+        return False
+    return True
+
+
+def flash_attention(
+    q: Array,   # [B, Sq, Hkv_p, qps, hd]
+    k: Array,   # [B, Sk, Hkv_p, hd]
+    v: Array,   # [B, Sk, Hkv_p, hd]
+    *,
+    causal: bool,
+    window: int = 0,          # 0 = unbounded
+    q_offset: int = 0,        # absolute position of q[0] (prefill chunks)
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    block_skip: bool = True,
+    p_bf16: bool = False,     # §Perf: bf16 softmax weights for the PV dot
+) -> Array:
+    b, sq, g, qps, hd = q.shape
+    sk = k.shape[1]
+    scale = hd**-0.5
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    nq, nk = -(-sq // qc), -(-sk // kc)
+    outs = []
+    for iq in range(nq):
+        q0, q1 = iq * qc, min((iq + 1) * qc, sq)
+        qb = q[:, q0:q1].astype(jnp.float32) * scale
+        acc = jnp.zeros((b, q1 - q0, g, qps, hd), jnp.float32)
+        m = jnp.full((b, q1 - q0, g, qps), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, q1 - q0, g, qps), jnp.float32)
+        for ik in range(nk):
+            k0, k1 = ik * kc, min((ik + 1) * kc, sk)
+            if block_skip and not _block_visible(causal, window, q0 + q_offset, q1 + q_offset, k0, k1):
+                continue
+            kb = k[:, k0:k1].astype(jnp.float32)
+            vb = v[:, k0:k1].astype(jnp.float32)
+            s = jnp.einsum("bqgph,bkgh->bqgpk", qb, kb)
+            qpos = (q_offset + q0 + jnp.arange(q1 - q0))[:, None]
+            kpos = (k0 + jnp.arange(k1 - k0))[None, :]
+            ok = jnp.ones((q1 - q0, k1 - k0), bool)
+            if causal:
+                ok &= kpos <= qpos
+            if window > 0:
+                ok &= kpos > qpos - window
+            s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            if p_bf16:
+                # p materializes in bf16 (stabilized exponents are <= 0 so
+                # values sit in [0, 1]); the row-sum accumulates in f32
+                p = jnp.exp((s - m_new[..., None]).astype(jnp.bfloat16))
+                l = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+                pv = jnp.einsum("bqgpk,bkgh->bqgph", p,
+                                vb.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+            else:
+                p = jnp.exp(s - m_new[..., None])
+                l = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bqgpk,bkgh->bqgph", p, vb)
+            acc = acc * corr[..., None] + pv
+            m = m_new
+        outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,        # [B, 1, Hkv_p, qps, hd]
+    k_cache: Array,  # [B, L, Hkv_p, hd]
+    v_cache: Array,
+    kv_pos: Array,   # int32 [B, L] absolute position held in each cache slot (-1 empty)
+    pos: Array,      # int32 [B] current decode position
+    *,
+    window: int = 0,
+) -> Array:
+    scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqgph,bkgh->bqgpk", qf, k_cache.astype(jnp.float32))
+    ok = (kv_pos >= 0) & (kv_pos[:, :] <= pos[:, None])
+    if window > 0:
+        ok &= kv_pos > (pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqgpk,bkgh->bqgph", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the attention block (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    p: dict,
+    x: Array,                 # [B, S, d]
+    lay: HeadLayout,
+    pol: Policy,
+    *,
+    pos: Array,               # [B, S] (or [3, B, S] for mrope)
+    causal: bool = True,
+    window: int = 0,
+    theta: float = 10_000.0,
+    rope_pct: float = 1.0,
+    rope_kind: str = "rope",
+    mrope_sections: tuple | None = None,
+    norm_kind: str = "rmsnorm",
+    cache: dict | None = None,   # {"k", "v", "pos", "offset"} for decode/prefill
+    xkv: Array | None = None,    # cross-attention source (whisper)
+    static_cache: bool = False,  # cache holds fixed K/V (cross-attn): never write
+) -> tuple[Array, dict | None]:
+    b, s, d = x.shape
+    hd = p["wq"].shape[-1]
+    cd = pol.compute_dtype
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q, norm_kind)
+    if rope_kind in ("rope", "mrope") and xkv is None and not static_cache:
+        q = apply_rope(q, pos, theta=theta, pct=rope_pct,
+                       mrope_sections=mrope_sections if rope_kind == "mrope" else None)
+    q = pol.shard(q, "act_q")
+    pos1 = pos if pos.ndim <= 2 else pos[0]  # [B, S] scalar positions
+    qg = q.reshape(b, s, lay.hkv_p, lay.qps, hd)
+
+    if static_cache:
+        # fixed cross-attention K/V (precomputed from the encoder)
+        if s > 1:
+            out = flash_attention(
+                qg, cache["k"], cache["v"], causal=False,
+                q_chunk=pol.attn_q_chunk, kv_chunk=pol.attn_kv_chunk,
+                block_skip=pol.attn_block_skip, p_bf16=pol.attn_p_bf16,
+            )
+        else:
+            # every (valid) cross position is visible regardless of dec pos
+            out = decode_attention(
+                qg, cache["k"], cache["v"], cache["pos"],
+                jnp.full((b,), 2**30, jnp.int32), window=0,
+            )
+        out = out.reshape(b, s, lay.hq_p, hd)
+        out = pol.shard(out, "act_q")
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+        return y, cache
+
+    src = x if xkv is None else xkv
+    k = jnp.einsum("bsd,djk->bsjk", src, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,djk->bsjk", src, p["wv"].astype(cd))
+
+    if "q_norm" in p:
+        k = apply_norm(p["k_norm"], k, norm_kind)
+
+    if rope_kind in ("rope", "mrope") and xkv is None:
+        k = apply_rope(k, pos, theta=theta, pct=rope_pct,
+                       mrope_sections=mrope_sections if rope_kind == "mrope" else None)
+
+    # replicate kv to the physical layout (static gather; params stay real)
+    kv_map = jnp.asarray(lay.kv_map, jnp.int32)
+    k = jnp.take(k, kv_map, axis=2)
+    v = jnp.take(v, kv_map, axis=2)
+    k = pol.shard(k, "act_kv")
+    v = pol.shard(v, "act_kv")
+
+    new_cache = None
+    if cache is None:
+        out = flash_attention(
+            qg, k, v, causal=causal, window=window,
+            q_chunk=pol.attn_q_chunk, kv_chunk=pol.attn_kv_chunk,
+            block_skip=pol.attn_block_skip, p_bf16=pol.attn_p_bf16,
+        )
+    elif s > 1:
+        # prefill: run flash over the fresh sequence, then store it
+        out = flash_attention(
+            qg, k, v, causal=causal, window=window,
+            q_chunk=pol.attn_q_chunk, kv_chunk=pol.attn_kv_chunk,
+            block_skip=pol.attn_block_skip, p_bf16=pol.attn_p_bf16,
+        )
+        new_cache = _cache_store_prefill(cache, k, v, window)
+    else:
+        # single-token decode against the cache
+        new_cache = _cache_append(cache, k, v, window)
+        out = decode_attention(
+            qg, new_cache["k"], new_cache["v"], new_cache["pos"],
+            pos1[:, 0], window=window,
+        )
+
+    out = out.reshape(b, s, lay.hq_p, hd)
+    out = pol.shard(out, "act_q")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV caches: full-length and ring-buffer (sliding window)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(b: int, max_len: int, lay: HeadLayout, hd: int, *, window: int = 0, dtype=jnp.bfloat16) -> dict:
+    length = min(window, max_len) if window > 0 else max_len
+    return {
+        "k": jnp.zeros((b, length, lay.hkv_p, hd), dtype),
+        "v": jnp.zeros((b, length, lay.hkv_p, hd), dtype),
+        "pos": jnp.full((b, length), -1, jnp.int32),
+        "offset": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cache_store_prefill(cache: dict, k: Array, v: Array, window: int) -> dict:
+    b, s = k.shape[:2]
+    length = cache["k"].shape[1]
+    if window > 0 and s > length:
+        # only the trailing window survives in a ring cache
+        k, v = k[:, -length:], v[:, -length:]
+        posv = jnp.arange(s - length, s, dtype=jnp.int32)
+        # ring layout: slot = pos % window
+        slots = posv % length
+        order = jnp.argsort(slots)
+        k, v, posv = k[:, order], v[:, order], posv[order]
+        pos = jnp.broadcast_to(posv[None], (b, length))
+        new = {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype),
+               "pos": pos, "offset": jnp.asarray(s, jnp.int32)}
+    else:
+        kpad = jnp.zeros_like(cache["k"]).at[:, :s].set(k.astype(cache["k"].dtype))
+        vpad = jnp.zeros_like(cache["v"]).at[:, :s].set(v.astype(cache["v"].dtype))
+        pos = jnp.full_like(cache["pos"], -1).at[:, :s].set(jnp.arange(s, dtype=jnp.int32)[None])
+        new = {"k": kpad, "v": vpad, "pos": pos, "offset": jnp.asarray(s, jnp.int32)}
+    return new
+
+
+def _cache_append(cache: dict, k: Array, v: Array, window: int) -> dict:
+    """Insert one decoded token (k/v [B, 1, H, hd]) at offset."""
+    off = cache["offset"]
+    length = cache["k"].shape[1]
+    slot = off % length if window > 0 else jnp.minimum(off, length - 1)
+    kc = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+    pos = cache["pos"].at[:, slot].set(off)
+    return {"k": kc, "v": vc, "pos": pos, "offset": off + 1}

@@ -1,0 +1,115 @@
+"""Model facade: family dispatch + abstract input specs for the dry-run.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of a given (arch x shape) cell — weak-type-correct,
+shardable, no device allocation.  Modality frontends are stubs: whisper
+receives precomputed frame embeddings, qwen2-vl precomputed patch
+embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.modules import Policy
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.encdec
+
+
+def init_params(cfg: ArchConfig, key, pol: Policy) -> dict:
+    if is_encdec(cfg):
+        return encdec.init_params(cfg, key, pol)
+    return transformer.init_params(cfg, key, pol)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, pol: Policy, inv_place=None):
+    if is_encdec(cfg):
+        return encdec.loss_fn(params, batch, cfg, pol, inv_place)
+    return transformer.loss_fn(params, batch, cfg, pol, inv_place)
+
+
+def prefill(params, batch, cfg: ArchConfig, pol: Policy, max_len: int, inv_place=None):
+    if is_encdec(cfg):
+        return encdec.prefill(params, batch, cfg, pol, max_len, inv_place)
+    return transformer.prefill(params, batch, cfg, pol, max_len, inv_place)
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, pol: Policy, inv_place=None):
+    if is_encdec(cfg):
+        return encdec.decode_step(params, cache, tokens, cfg, pol, inv_place)
+    return transformer.decode_step(params, cache, tokens, cfg, pol, inv_place)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, pol: Policy):
+    if is_encdec(cfg):
+        raise ValueError("enc-dec caches are produced by prefill()")
+    return transformer.init_cache(cfg, batch, max_len, pol)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for lowering
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, pol: Policy) -> dict:
+    """ShapeDtypeStruct batch for train/prefill of one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if is_encdec(cfg):
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_len, cfg.d_model), pol.compute_dtype)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), pol.compute_dtype)
+    if shape.kind != "train":
+        batch.pop("labels")
+        batch.pop("mask")
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, pol: Policy):
+    """(cache_specs, token_specs) for one serve_step cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if is_encdec(cfg):
+        from repro.models.attention import head_layout, init_kv_cache
+
+        lay = head_layout(cfg.num_heads, cfg.num_kv_heads, pol.tp)
+        kv = jax.eval_shape(
+            lambda: jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+                init_kv_cache(b, s, lay, cfg.head_dim, dtype=pol.compute_dtype),
+            )
+        )
+        xkv = jax.eval_shape(
+            lambda: jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+                {
+                    "k": jnp.zeros((b, cfg.enc_len, lay.hkv_p, cfg.head_dim), pol.compute_dtype),
+                    "v": jnp.zeros((b, cfg.enc_len, lay.hkv_p, cfg.head_dim), pol.compute_dtype),
+                    "pos": jnp.zeros((b, cfg.enc_len), jnp.int32),
+                    "offset": jnp.zeros((), jnp.int32),
+                },
+            )
+        )
+        cache = {"pos": jax.ShapeDtypeStruct((b,), jnp.int32), "blocks": kv,
+                 "xcaches": xkv}
+    else:
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s, pol))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return cache, tokens
+
+
+def abstract_params(cfg: ArchConfig, pol: Policy):
+    """Parameter ShapeDtypeStructs without allocating (jax.eval_shape)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k, pol), key)

@@ -1,0 +1,174 @@
+"""Minimal pure-JAX module substrate: param init, norms, embeddings, acts.
+
+Params are nested dicts of arrays.  ``init_*`` functions build real arrays
+(smoke tests); the dry-run wraps them in ``jax.eval_shape`` so full-scale
+models never allocate.  Sharding is injected from outside via a ``Shard``
+policy callback (the model code stays mesh-agnostic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+Shard = Callable[[Array, str], Array]  # (x, logical_name) -> constrained x
+
+
+def no_shard(x: Array, name: str) -> Array:
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """dtype + sharding policy threaded through the model."""
+
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    shard: Shard = no_shard
+    tp: int = 1                      # model-axis size (head padding target)
+    mesh: object = None              # jax Mesh (None = single-device ref paths)
+    dp_axes: tuple = ("data",)       # batch axes ("pod","data") multi-pod
+    tp_axis: str = "model"
+    remat: bool = False
+    attn_q_chunk: int = 2048
+    attn_kv_chunk: int = 2048
+    attn_block_skip: bool = True     # skip fully-masked kv blocks (static)
+    attn_p_bf16: bool = False        # softmax weights in bf16 for the PV dot
+    recurrent_bf16: bool = False     # bf16 gate/qkv precompute (ssm/xlstm)
+    slstm_unroll: int = 1            # steps per sLSTM scan tick (§Perf)
+    remat_policy: str = "nothing"    # "nothing" | "save_moe"
+    moe_capacity_factor: float = 0.0  # 0 = use config value
+
+    def cast(self, x: Array) -> Array:
+        return x.astype(self.compute_dtype)
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"w": jnp.zeros((d,), dtype)}  # gemma-style (1 + w)
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p: dict, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        nx = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (nx * (1.0 + p["w"].astype(jnp.float32))).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    nx = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (nx * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def pad_vocab(v: int, mult: int = 256) -> int:
+    return int(np.ceil(v / mult) * mult)
+
+
+def init_embed(key, vocab: int, d: int, dtype) -> dict:
+    vp = pad_vocab(vocab)
+    return {"tok": normal(key, (vp, d), d**-0.5, dtype)}
+
+
+def embed(p: dict, tokens: Array, *, scale: bool, d: int, pol: Policy) -> Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(pol.compute_dtype)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(d), pol.compute_dtype)
+    return x
+
+
+def unembed_logits(x: Array, w: Array, pol: Policy) -> Array:
+    """[..., d] @ [V, d]^T -> [..., V] (vocab sharded over model)."""
+    out = jnp.einsum("...d,vd->...v", x, w.astype(pol.compute_dtype))
+    return pol.shard(out, "logits")
+
+
+# ---------------------------------------------------------------------------
+# activations / ffn
+# ---------------------------------------------------------------------------
+
+
+def act_fn(kind: str):
+    if kind in ("swiglu",):
+        return jax.nn.silu
+    if kind in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def init_ffn(key, d: int, f: int, kind: str, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    gate = 2 if kind in ("swiglu", "geglu") else 1
+    return {
+        "wi": normal(k1, (d, gate, f), d**-0.5, dtype),
+        "wo": normal(k2, (f, d), f**-0.5, dtype),
+    }
+
+
+def apply_ffn(p: dict, x: Array, kind: str, pol: Policy) -> Array:
+    wi = p["wi"].astype(pol.compute_dtype)
+    h = jnp.einsum("bsd,dgf->bsgf", x, wi)
+    h = pol.shard(h, "ffn_hidden4")
+    a = act_fn(kind)
+    if wi.shape[1] == 2:  # gated
+        h = a(h[:, :, 0]) * h[:, :, 1]
+    else:
+        h = a(h[:, :, 0])
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(pol.compute_dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (huge-vocab safe: never materializes [B, S, V])
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    x: Array,            # [B, S, d] final hidden states
+    w_unembed: Array,    # [Vp, d]
+    labels: Array,       # int32[B, S]
+    mask: Array,         # bool/float [B, S]
+    pol: Policy,
+    vocab: int,
+    chunk: int = 512,
+    softcap: float = 0.0,
+) -> Array:
+    b, s, d = x.shape
+    vp = w_unembed.shape[0]
+    nchunk = max(1, s // chunk)
+    assert s % nchunk == 0
+    xc = x.reshape(b, nchunk, s // nchunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nchunk, s // nchunk).swapaxes(0, 1)
+    mc = mask.reshape(b, nchunk, s // nchunk).swapaxes(0, 1)
+    neg_inf = jnp.asarray(-1e30, jnp.float32)
+
+    def body(carry, inp):
+        xcb, lcb, mcb = inp
+        logits = unembed_logits(xcb, w_unembed, pol).astype(jnp.float32)
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logits = jnp.where(jnp.arange(vp) < vocab, logits, neg_inf)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lcb[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * mcb
+        return carry + jnp.sum(loss), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc, mc))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,128 @@
+"""Mamba-1 selective SSM block (Jamba's mixer), chunked for TPU memory.
+
+The selective scan is evaluated chunk-recurrently: an intra-chunk
+associative scan (parallel, [B, chunk, d_inner, d_state] working set) with
+the SSM state carried across chunks by ``lax.scan`` — the standard
+TPU-friendly evaluation that keeps the working set ~(chunk/seq) of the
+naive parallel scan.  Decode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import Array, Policy, normal
+
+
+def init_mamba(key, d: int, *, expand: int, d_state: int, d_conv: int, dtype) -> dict:
+    di = expand * d
+    dt_rank = -(-d // 16)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": normal(ks[0], (d, 2, di), d**-0.5, dtype),
+        "conv_w": normal(ks[1], (d_conv, di), d_conv**-0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": normal(ks[2], (di, dt_rank + 2 * d_state), di**-0.5, dtype),
+        "dt_proj": normal(ks[3], (dt_rank, di), dt_rank**-0.5, dtype),
+        "dt_bias": jnp.full((di,), np.log(np.expm1(0.01)), dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(a).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": normal(ks[4], (di, d), di**-0.5, dtype),
+    }
+
+
+def _ssm_inputs(p: dict, x: Array, pol: Policy, d_state: int):
+    """shared pre-scan computation: conv + projections -> (xc, dt, B, C, z)."""
+    cd = pol.compute_dtype
+    xz = jnp.einsum("bsd,dgi->bsgi", x, p["in_proj"].astype(cd))
+    xm, z = xz[:, :, 0], xz[:, :, 1]
+    return xm, z
+
+
+def _conv_causal(xm: Array, w: Array, b: Array, state: Array | None):
+    """depthwise causal conv; state [B, k-1, di] carries history for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xm.shape[0], k - 1, xm.shape[2]), xm.dtype)
+    else:
+        pad = state.astype(xm.dtype)
+    xp = jnp.concatenate([pad, xm], axis=1)
+    out = sum(xp[:, i : i + xm.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1) :]
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def _dt_b_c(p: dict, xc: Array, d_state: int, cd):
+    dbc = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"].astype(cd))
+    dt_rank = p["dt_proj"].shape[0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dbc[..., :dt_rank], p["dt_proj"].astype(cd))
+        + p["dt_bias"].astype(cd)[None, None]
+    )
+    bmat = dbc[..., dt_rank : dt_rank + d_state]
+    cmat = dbc[..., dt_rank + d_state :]
+    return dt, bmat, cmat
+
+
+def mamba_forward(p: dict, x: Array, pol: Policy, *, d_state: int, chunk: int = 256,
+                  state: dict | None = None):
+    """Train/prefill forward.  Returns (y, new_state) — state is the decode
+    carry {"conv": [B, k-1, di], "ssm": [B, di, d_state]}."""
+    b, s, d = x.shape
+    cd = pol.compute_dtype
+    xm, z = _ssm_inputs(p, x, pol, d_state)
+    xc, conv_state = _conv_causal(xm, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+                                  None if state is None else state["conv"])
+    xc = pol.shard(xc, "ssm_inner")
+    dt, bmat, cmat = _dt_b_c(p, xc, d_state, cd)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [di, ds]
+
+    c = min(chunk, s)
+    nchunk = -(-s // c)
+    assert s % c == 0, f"seq {s} not a multiple of mamba chunk {c}"
+    # reshape to chunks [n, B, c, ...]
+    def chunks(t):
+        return t.reshape(b, nchunk, c, *t.shape[2:]).swapaxes(0, 1)
+
+    xcs, dts, bs_, cs_ = map(chunks, (xc, dt, bmat, cmat))
+    h0 = (jnp.zeros((b, xc.shape[-1], d_state), jnp.float32)
+          if state is None else state["ssm"].astype(jnp.float32))
+
+    def body(h, inp):
+        xcb, dtb, bb, cb = inp  # [B, c, di], [B, c, di], [B, c, ds], [B, c, ds]
+        da = jnp.exp(dtb.astype(jnp.float32)[..., None] * a[None, None])  # [B,c,di,ds]
+        dbx = (dtb * xcb).astype(jnp.float32)[..., None] * bb.astype(jnp.float32)[:, :, None, :]
+        # intra-chunk associative scan: (A_prod, Bx_cum)
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        aprod, bxcum = jax.lax.associative_scan(op, (da, dbx), axis=1)
+        hs = aprod * h[:, None] + bxcum  # [B, c, di, ds]
+        y = jnp.einsum("bcis,bcs->bci", hs, cb.astype(jnp.float32))
+        h_new = hs[:, -1]
+        return h_new, y
+
+    h_out, ys = jax.lax.scan(body, h0, (xcs, dts, bs_, cs_))
+    y = ys.swapaxes(0, 1).reshape(b, s, -1).astype(cd)
+    y = y + xc * p["d_skip"].astype(cd)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd))
+    new_state = {"conv": conv_state.astype(cd), "ssm": h_out.astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba_decode(p: dict, x: Array, pol: Policy, *, d_state: int, state: dict):
+    """Single-token step: x [B, 1, d]."""
+    return mamba_forward(p, x, pol, d_state=d_state, chunk=1, state=state)
+
+
+def init_mamba_state(b: int, d: int, *, expand: int, d_state: int, d_conv: int, dtype=jnp.float32) -> dict:
+    di = expand * d
+    return {
+        "conv": jnp.zeros((b, d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((b, di, d_state), jnp.float32),
+    }

@@ -1,0 +1,361 @@
+"""Decoder-only LM assembled from the config's block pattern.
+
+Depth is evaluated as ``jax.lax.scan`` over *periods* (one period = the
+config's repeating block pattern, weights stacked ``[periods, ...]``), so
+compile time is flat in depth — essential for 62-layer dry-runs.  The
+optional non-repeating ``tail`` blocks run unscanned.
+
+One code path serves train / prefill / decode; caches (KV, ring-KV, SSM,
+xLSTM) are pytrees stacked along the period axis and threaded through the
+scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig, Block
+from repro.models.attention import (
+    HeadLayout,
+    attention_block,
+    head_layout,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.modules import (
+    Array,
+    Policy,
+    apply_ffn,
+    apply_norm,
+    chunked_softmax_xent,
+    embed,
+    init_embed,
+    init_ffn,
+    init_norm,
+    normal,
+    pad_vocab,
+    unembed_logits,
+)
+from repro.models.ssm import init_mamba, init_mamba_state, mamba_forward
+from repro.models.xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_forward,
+    slstm_forward,
+)
+from repro.moe.layer import init_moe, moe_apply, moe_apply_replicated, moe_ref
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, blk: Block, lay: HeadLayout, pol: Policy) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = pol.param_dtype
+    p: dict[str, Any] = {"ln1": init_norm(cfg.norm_kind, cfg.d_model, dt)}
+    if blk.mixer in ("attn", "local_attn"):
+        p["attn"] = init_attention(
+            ks[0], cfg.d_model, lay, cfg.head_dim,
+            qk_norm=cfg.qk_norm, norm_kind=cfg.norm_kind, dtype=dt,
+        )
+    elif blk.mixer == "mamba":
+        p["mamba"] = init_mamba(
+            ks[0], cfg.d_model, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state, d_conv=cfg.mamba_conv, dtype=dt,
+        )
+    elif blk.mixer == "mlstm":
+        p["mlstm"] = init_mlstm(ks[0], cfg.d_model, cfg.num_heads,
+                                _heads_p(cfg, pol), dtype=dt)
+    elif blk.mixer == "slstm":
+        p["slstm"] = init_slstm(ks[0], cfg.d_model, cfg.num_heads,
+                                _heads_p(cfg, pol), dtype=dt)
+    if blk.ffn == "dense":
+        p["ln2"] = init_norm(cfg.norm_kind, cfg.d_model, dt)
+        p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dt)
+    elif blk.ffn == "moe":
+        p["ln2"] = init_norm(cfg.norm_kind, cfg.d_model, dt)
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.moe, cfg.ffn_kind, dt)
+    return p
+
+
+def _heads_p(cfg: ArchConfig, pol: Policy) -> int:
+    h = cfg.num_heads
+    return h if h % pol.tp == 0 else int(np.ceil(h / pol.tp) * pol.tp)
+
+
+def init_params(cfg: ArchConfig, key, pol: Policy) -> dict:
+    lay = head_layout(cfg.num_heads, cfg.num_kv_heads, pol.tp)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, pol.param_dtype),
+        "final_norm": init_norm(cfg.norm_kind, cfg.d_model, pol.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal(
+            keys[1], (pad_vocab(cfg.vocab_size), cfg.d_model),
+            cfg.d_model**-0.5, pol.param_dtype,
+        )
+    # stacked period blocks: vmap init over the period axis
+    per = cfg.num_periods
+    blocks = {}
+    for j, blk in enumerate(cfg.pattern):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], j), per)
+        blocks[f"b{j}"] = jax.vmap(lambda k: _init_block(k, cfg, blk, lay, pol))(bkeys)
+    params["blocks"] = blocks
+    for j, blk in enumerate(cfg.tail):
+        params[f"tail{j}"] = _init_block(jax.random.fold_in(keys[3], j), cfg, blk, lay, pol)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, pol: Policy) -> dict:
+    """Decode caches stacked [periods, ...] per pattern position."""
+    lay = head_layout(cfg.num_heads, cfg.num_kv_heads, pol.tp)
+    per = cfg.num_periods
+    hp = _heads_p(cfg, pol)
+
+    def one(blk: Block) -> dict:
+        if blk.mixer == "attn":
+            return init_kv_cache(batch, max_len, lay, cfg.head_dim, window=0,
+                                 dtype=pol.compute_dtype)
+        if blk.mixer == "local_attn":
+            return init_kv_cache(batch, max_len, lay, cfg.head_dim, window=cfg.window,
+                                 dtype=pol.compute_dtype)
+        if blk.mixer == "mamba":
+            return init_mamba_state(batch, cfg.d_model, expand=cfg.mamba_expand,
+                                    d_state=cfg.mamba_d_state, d_conv=cfg.mamba_conv,
+                                    dtype=pol.compute_dtype)
+        if blk.mixer == "mlstm":
+            di = 2 * cfg.d_model
+            return init_mlstm_state(batch, hp, di // cfg.num_heads, di,
+                                    dtype=pol.compute_dtype)
+        if blk.mixer == "slstm":
+            return init_slstm_state(batch, hp, cfg.d_model // cfg.num_heads)
+        raise ValueError(blk.mixer)
+
+    cache: dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    cache["blocks"] = {
+        f"b{j}": _stack(one(blk), per) for j, blk in enumerate(cfg.pattern)
+    }
+    for j, blk in enumerate(cfg.tail):
+        cache[f"tail{j}"] = one(blk)
+    return cache
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    blk: Block, p: dict, x: Array, cfg: ArchConfig, lay: HeadLayout, pol: Policy,
+    *, pos, cache=None, inv_place=None,
+):
+    """Pre-norm residual block.  Returns (x, new_cache, moe_stats)."""
+    moe_stats = None
+    h = apply_norm(p["ln1"], x, cfg.norm_kind)
+    if blk.mixer in ("attn", "local_attn"):
+        window = cfg.window if blk.mixer == "local_attn" else 0
+        theta = cfg.rope_local_theta if (blk.mixer == "local_attn" and cfg.rope_local_theta) else cfg.rope_theta
+        sections = _mrope_sections(cfg) if cfg.rope_kind == "mrope" else None
+        y, new_cache = attention_block(
+            p["attn"], h, lay, pol, pos=pos, causal=True, window=window,
+            theta=theta, rope_pct=cfg.rope_pct, rope_kind=cfg.rope_kind,
+            mrope_sections=sections, norm_kind=cfg.norm_kind, cache=cache,
+        )
+    elif blk.mixer == "mamba":
+        y, new_cache = mamba_forward(p["mamba"], h, pol, d_state=cfg.mamba_d_state,
+                                     chunk=min(256, h.shape[1]), state=cache)
+    elif blk.mixer == "mlstm":
+        y, new_cache = mlstm_forward(p["mlstm"], h, pol, chunk=min(256, h.shape[1]),
+                                     state=cache)
+    elif blk.mixer == "slstm":
+        y, new_cache = slstm_forward(p["slstm"], h, pol, state=cache)
+    else:
+        raise ValueError(blk.mixer)
+    x = x + y
+    x = pol.shard(x, "act_btd")
+
+    if blk.ffn != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm_kind)
+        if blk.ffn == "dense":
+            y = apply_ffn(p["ffn"], h, cfg.ffn_kind, pol)
+        else:
+            if pol.mesh is None:
+                fn = moe_ref
+            elif h.shape[1] % pol.tp == 0 and h.shape[1] > 1:
+                fn = moe_apply          # train/prefill: seq shards over model
+            else:
+                fn = moe_apply_replicated  # decode: tokens replicated over EP
+            out = fn(p["moe"], h, cfg.moe, cfg.ffn_kind, pol, inv_place)
+            y = checkpoint_name(out.y, "moe_out")
+            moe_stats = (out.counts, out.overflow, out.aux_loss)
+        x = x + y
+        x = pol.shard(x, "act_btd")
+    return x, new_cache, moe_stats
+
+
+def _mrope_sections(cfg: ArchConfig) -> tuple:
+    half = int(cfg.head_dim * cfg.rope_pct) // 2
+    t = half // 4
+    rest = half - t
+    return (t, rest // 2, rest - rest // 2)
+
+
+def _positions(cfg: ArchConfig, b: int, s: int, offset) -> Array:
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + (
+        offset[:, None] if isinstance(offset, jax.Array) else offset
+    )
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[None], (3, b, s))  # t=h=w for text stub
+    return pos
+
+
+def backbone(
+    params: dict, x: Array, cfg: ArchConfig, pol: Policy,
+    *, pos, cache: dict | None = None, inv_place: Array | None = None,
+):
+    """Embedded input [B, S, d] -> final hidden [B, S, d].
+
+    Returns (x, new_cache, moe_counts [E] or None, moe_aux, overflow)."""
+    lay = head_layout(cfg.num_heads, cfg.num_kv_heads, pol.tp)
+    if inv_place is None and cfg.moe is not None:
+        inv_place = jnp.arange(cfg.moe.num_experts, dtype=jnp.int32)
+
+    def period_fn(x, per_params, per_cache):
+        stats = []
+        new_caches = {}
+        for j, blk in enumerate(cfg.pattern):
+            c = per_cache.get(f"b{j}") if per_cache else None
+            x, nc, ms = _apply_block(blk, per_params[f"b{j}"], x, cfg, lay, pol,
+                                     pos=pos, cache=c, inv_place=inv_place)
+            if nc is not None:
+                new_caches[f"b{j}"] = nc
+            if ms is not None:
+                stats.append(ms)
+        return x, new_caches, stats
+
+    if pol.remat:
+        if pol.remat_policy == "save_moe":
+            # §Perf: never re-run the expert all-to-all in the backward pass
+            policy = jax.checkpoint_policies.save_only_these_names("moe_out")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        period_fn = jax.checkpoint(period_fn, policy=policy)
+
+    def scan_body(carry, xs):
+        x = carry
+        per_params, per_cache = xs
+        x, new_caches, stats = period_fn(x, per_params, per_cache)
+        counts = (
+            sum(s[0] for s in stats) if stats else jnp.zeros((0,), jnp.float32)
+        )
+        over = sum((s[1] for s in stats), jnp.zeros((), jnp.float32))
+        aux = sum((s[2] for s in stats), jnp.zeros((), jnp.float32))
+        return x, (new_caches, counts, over, aux)
+
+    per_cache = cache["blocks"] if cache is not None else None
+    xs = (params["blocks"], per_cache)
+    x, (new_caches, counts, over, aux) = jax.lax.scan(scan_body, x, xs)
+
+    moe_counts = jnp.sum(counts, axis=0) if cfg.moe is not None else None
+    overflow = jnp.sum(over)
+    aux_loss = jnp.mean(aux) if cfg.moe is not None else jnp.zeros(())
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["blocks"] = new_caches
+
+    for j, blk in enumerate(cfg.tail):
+        c = cache.get(f"tail{j}") if cache is not None else None
+        x, nc, ms = _apply_block(blk, params[f"tail{j}"], x, cfg, lay, pol,
+                                 pos=pos, cache=c, inv_place=inv_place)
+        if new_cache is not None and nc is not None:
+            new_cache[f"tail{j}"] = nc
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    return x, new_cache, moe_counts, overflow, aux_loss
+
+
+# ---------------------------------------------------------------------------
+# top-level entry points (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: dict, cfg: ArchConfig, pol: Policy) -> Array:
+    x = embed(params["embed"], batch["tokens"], scale=cfg.embed_scale,
+              d=cfg.d_model, pol=pol)
+    if cfg.vision_tokens and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(pol.compute_dtype)
+        x = jnp.concatenate([v, x[:, v.shape[1] :]], axis=1)  # stub: patches replace prefix
+    x = pol.shard(x, "act_btd")
+    return x
+
+
+def _unembed_w(params, cfg: ArchConfig):
+    return params["lm_head"] if not cfg.tie_embeddings else params["embed"]["tok"]
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, pol: Policy,
+            inv_place: Array | None = None):
+    """Training loss.  batch: tokens, labels, mask int/bool [B, S]."""
+    x = _embed_inputs(params, batch, cfg, pol)
+    pos = _positions(cfg, *batch["tokens"].shape, 0)
+    x, _, counts, overflow, aux = backbone(params, x, cfg, pol, pos=pos,
+                                           inv_place=inv_place)
+    loss = chunked_softmax_xent(
+        x, _unembed_w(params, cfg), batch["labels"], batch["mask"], pol,
+        cfg.vocab_size, softcap=cfg.logit_softcap,
+    )
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    metrics = {"overflow": overflow}
+    if counts is not None:
+        metrics["expert_counts"] = counts
+    return loss, metrics
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, pol: Policy, max_len: int,
+            inv_place: Array | None = None):
+    """Fill caches for the prompt; return last-token logits + cache."""
+    b, s = batch["tokens"].shape
+    cache = init_cache(cfg, b, max_len, pol)
+    x = _embed_inputs(params, batch, cfg, pol)
+    pos = _positions(cfg, b, s, 0)
+    x, cache, counts, overflow, _ = backbone(params, x, cfg, pol, pos=pos,
+                                             cache=cache, inv_place=inv_place)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    logits = unembed_logits(x[:, -1:], _unembed_w(params, cfg), pol)
+    return logits, cache
+
+
+def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig, pol: Policy,
+                inv_place: Array | None = None):
+    """One token step.  tokens [B, 1].  Returns (logits [B, 1, V], cache)."""
+    b = tokens.shape[0]
+    x = embed(params["embed"], tokens, scale=cfg.embed_scale, d=cfg.d_model, pol=pol)
+    pos = _positions(cfg, b, 1, cache["pos"])
+    x, cache, counts, overflow, _ = backbone(params, x, cfg, pol, pos=pos,
+                                             cache=cache, inv_place=inv_place)
+    cache["pos"] = cache["pos"] + 1
+    logits = unembed_logits(x, _unembed_w(params, cfg), pol)
+    return logits, cache

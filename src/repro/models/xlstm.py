@@ -1,0 +1,247 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential scan) — arXiv:2405.04517.
+
+mLSTM is evaluated chunkwise (gated-linear-attention style): within a chunk
+the gate-weighted q/k/v products are dense [chunk, chunk] matrices; across
+chunks the matrix memory ``C``, normalizer ``n`` and stabilizer ``m`` are
+carried recurrently.  Exponential gating uses the paper's max-stabilizer so
+half-precision activations survive 500k-token contexts.
+
+sLSTM has no parallel form (by design — its recurrent gate connections are
+the point), so training runs a ``lax.scan`` over time with per-head
+block-diagonal recurrence.
+
+Head padding: heads are padded to the model-axis size with dead heads
+(zero down-projection rows), same exactness argument as attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import Array, Policy, normal
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d: int, heads: int, heads_p: int, *, proj: int = 2, dtype=jnp.float32) -> dict:
+    di = proj * d
+    hd = di // heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "up": normal(ks[0], (d, 2, di), d**-0.5, dtype),          # x_m, z
+        "conv_w": normal(ks[1], (4, di), 0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": normal(ks[2], (di, heads_p, hd), di**-0.5, dtype),
+        "wk": normal(ks[3], (di, heads_p, hd), di**-0.5, dtype),
+        "wv": normal(ks[4], (di, heads_p, hd), di**-0.5, dtype),
+        "w_if": normal(ks[5], (di, 2, heads_p), di**-0.5, dtype),  # i, f pre-acts
+        "b_if": jnp.stack([jnp.zeros((heads_p,)), 3.0 * jnp.ones((heads_p,))]).astype(dtype),
+        "down": normal(ks[6], (heads_p, hd, d), di**-0.5, dtype),
+    }
+    if heads_p > heads:  # dead padded heads contribute exactly zero
+        mask = (jnp.arange(heads_p) < heads)[:, None, None]
+        p["down"] = p["down"] * mask
+    return p
+
+
+def _mlstm_qkvif(p: dict, x: Array, cd, conv_state=None):
+    xz = jnp.einsum("bsd,dgi->bsgi", x, p["up"].astype(cd))
+    xm, z = xz[:, :, 0], xz[:, :, 1]
+    # causal depthwise conv feeding q/k (as in the paper's block)
+    k4 = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k4 - 1, xm.shape[-1]), xm.dtype)
+    else:
+        pad = conv_state.astype(xm.dtype)
+    xp = jnp.concatenate([pad, xm], axis=1)
+    xc = sum(xp[:, i : i + xm.shape[1]] * p["conv_w"].astype(cd)[i][None, None] for i in range(k4))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(cd)[None, None])
+    new_conv_state = xp[:, -(k4 - 1):]
+    q = jnp.einsum("bsi,ihk->bshk", xc, p["wq"].astype(cd))
+    k = jnp.einsum("bsi,ihk->bshk", xc, p["wk"].astype(cd))
+    v = jnp.einsum("bsi,ihk->bshk", xm, p["wv"].astype(cd))
+    ifg = jnp.einsum("bsi,igh->bsgh", xm, p["w_if"].astype(cd)) + p["b_if"].astype(cd)[None, None]
+    logi = ifg[:, :, 0].astype(jnp.float32)                       # [B, S, H]
+    logf = jax.nn.log_sigmoid(ifg[:, :, 1].astype(jnp.float32))   # [B, S, H]
+    return q, k, v, logi, logf, z, new_conv_state
+
+
+def mlstm_forward(p: dict, x: Array, pol: Policy, *, chunk: int = 256, state: dict | None = None):
+    """Chunk-parallel mLSTM.  state = {"c": [B,H,dk,dv], "n": [B,H,dk], "m": [B,H]}."""
+    b, s, d = x.shape
+    cd = pol.compute_dtype
+    q, k, v, logi, logf, z, conv_state = _mlstm_qkvif(
+        p, x, cd, None if state is None else state["conv"])
+    hp, hd = q.shape[2], q.shape[3]
+    scale = hd**-0.5
+
+    c = min(chunk, s)
+    nchunk = -(-s // c)
+    assert s % c == 0
+
+    def chunks(t):
+        return t.reshape(b, nchunk, c, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks_, vs, lis, lfs = map(chunks, (q, k, v, logi, logf))
+    if state is None:
+        c0 = jnp.zeros((b, hp, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, hp, hd), jnp.float32)
+        m0 = jnp.full((b, hp), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def body(carry, inp):
+        cm, nm, mm = carry
+        qb, kb, vb, lib, lfb = inp  # [B,c,H,hd] x3, [B,c,H] x2
+        f_cum = jnp.cumsum(lfb, axis=1)                     # F_t (within chunk)
+        f_tot = f_cum[:, -1]                                # [B,H]
+        # stabilizers
+        a = lib - f_cum                                     # i_s - F_s
+        m_intra = f_cum + jax.lax.cummax(a, axis=1)         # [B,c,H]
+        m_inter = mm[:, None] + f_cum                       # old state path
+        m_t = jnp.maximum(m_intra, m_inter)
+        # intra-chunk: D[t,s] = exp(F_t - F_s + i_s - m_t), s <= t
+        dmat = f_cum[:, :, None] - f_cum[:, None, :] + lib[:, None, :] - m_t[:, :, None]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -1e30)
+        w = jnp.exp(dmat)                                   # [B,t,s,H]
+        sqk = jnp.einsum("bthk,bshk->btsh", qb.astype(jnp.float32), kb.astype(jnp.float32)) * scale
+        pw = w * sqk
+        if pol.recurrent_bf16:  # §Perf: halve the [c, c] weight-matrix traffic
+            y_intra = jnp.einsum("btsh,bshv->bthv", pw.astype(jnp.bfloat16),
+                                 vb.astype(jnp.bfloat16),
+                                 preferred_element_type=jnp.float32)
+            n_intra = jnp.einsum("btsh,bshk->bthk", w.astype(jnp.bfloat16),
+                                 kb.astype(jnp.bfloat16),
+                                 preferred_element_type=jnp.float32)
+        else:
+            y_intra = jnp.einsum("btsh,bshv->bthv", pw, vb.astype(jnp.float32))
+            n_intra = jnp.einsum("btsh,bshk->bthk", w, kb.astype(jnp.float32))
+        # inter-chunk: old memory contribution
+        g = jnp.exp(m_inter - m_t)                          # [B,c,H]
+        y_inter = jnp.einsum("bthk,bhkv->bthv", qb.astype(jnp.float32) * scale, cm) * g[..., None]
+        n_inter = jnp.einsum("bthk,bhk->bth", qb.astype(jnp.float32) * scale, nm)[..., None] * g[..., None]
+        num = y_intra + y_inter
+        den = jnp.abs(jnp.einsum("bthk,bthk->bth", qb.astype(jnp.float32) * scale, n_intra)[..., None]
+                      + n_inter)
+        h = num / jnp.maximum(den, jnp.exp(-m_t)[..., None])
+        # carry update to chunk end
+        m_end = jnp.maximum(mm + f_tot, f_tot + jnp.max(a, axis=1))
+        decay_old = jnp.exp(mm + f_tot - m_end)             # [B,H]
+        wk_end = jnp.exp(f_tot[:, None] - f_cum + lib - m_end[:, None])  # [B,c,H]
+        c_new = cm * decay_old[..., None, None] + jnp.einsum(
+            "bsh,bshk,bshv->bhkv", wk_end, kb.astype(jnp.float32), vb.astype(jnp.float32))
+        n_new = nm * decay_old[..., None] + jnp.einsum("bsh,bshk->bhk", wk_end, kb.astype(jnp.float32))
+        return (c_new, n_new, m_end), h
+
+    (c_out, n_out, m_out), hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks_, vs, lis, lfs))
+    h = hs.swapaxes(0, 1).reshape(b, s, hp, hd).astype(cd)
+    # z gate covers the real heads only; padded (dead) heads gate to zero
+    real = z.shape[-1] // hd
+    zr = jax.nn.silu(z).reshape(b, s, real, hd)
+    if hp > real:
+        zr = jnp.pad(zr, ((0, 0), (0, 0), (0, hp - real), (0, 0)))
+    h = h * zr
+    out = jnp.einsum("bshk,hkd->bsd", h, p["down"].astype(cd))
+    return out, {"c": c_out, "n": n_out, "m": m_out, "conv": conv_state}
+
+
+def init_mlstm_state(b: int, heads_p: int, hd: int, di: int, conv: int = 4,
+                     dtype=jnp.float32) -> dict:
+    return {
+        "c": jnp.zeros((b, heads_p, hd, hd), jnp.float32),
+        "n": jnp.zeros((b, heads_p, hd), jnp.float32),
+        "m": jnp.full((b, heads_p), -1e30, jnp.float32),
+        "conv": jnp.zeros((b, conv - 1, di), dtype),
+    }
+
+
+def init_slstm_state(b: int, heads_p: int, hd: int) -> dict:
+    z = jnp.zeros((b, heads_p, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 1e30}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d: int, heads: int, heads_p: int, dtype=jnp.float32) -> dict:
+    hd = d // heads
+    ks = jax.random.split(key, 3)
+    p = {
+        "w": normal(ks[0], (d, 4, heads_p, hd), d**-0.5, dtype),       # z i f o
+        "r": normal(ks[1], (4, heads_p, hd, hd), hd**-0.5, dtype),     # recurrent, block-diag
+        "b": jnp.zeros((4, heads_p, hd), dtype),
+        "down": normal(ks[2], (heads_p, hd, d), d**-0.5, dtype),
+    }
+    if heads_p > heads:
+        mask = (jnp.arange(heads_p) < heads)[:, None, None]
+        p["down"] = p["down"] * mask
+    b = np.zeros((4, heads_p, hd), np.float32)
+    b[2] = 3.0  # forget-gate bias
+    p["b"] = jnp.asarray(b, dtype)
+    return p
+
+
+def slstm_forward(p: dict, x: Array, pol: Policy, *, state: dict | None = None,
+                  unroll: int | None = None):
+    """Sequential sLSTM with chunk-unrolled evaluation.
+
+    The recurrence is inherently sequential, but scanning one *time step*
+    per loop iteration makes XLA re-touch the recurrent weights (and, in
+    pure-DP training, all-reduce their gradient) once per token.  Unrolling
+    ``unroll`` steps inside each scan tick divides that per-iteration
+    traffic by ``unroll`` with bit-identical math (§Perf xlstm iteration 3).
+    """
+    b, s, d = x.shape
+    cd = pol.compute_dtype
+    wx = jnp.einsum("bsd,dghk->bsghk", x, p["w"].astype(cd)).astype(jnp.float32)  # [B,S,4,H,hd]
+    hp, hd = p["w"].shape[2], p["w"].shape[3]
+    if state is None:
+        zeros = jnp.zeros((b, hp, hd), jnp.float32)
+        st = {"c": zeros, "n": zeros, "h": zeros, "m": zeros - 1e30}
+    else:
+        st = {k: v.astype(jnp.float32) for k, v in state.items()}
+    r = p["r"].astype(jnp.float32)
+    bias = p["b"].astype(jnp.float32)
+
+    u = unroll if unroll is not None else pol.slstm_unroll
+    u = max(1, min(u, s))
+    while s % u:
+        u -= 1
+    nc = s // u
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        pre = wx_t + jnp.einsum("bhk,ghkj->bghj", h, r) + bias[None]
+        zt = jnp.tanh(pre[:, 0])
+        logi = pre[:, 1]
+        logf = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(logf + m, logi)
+        i_s = jnp.exp(logi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * zt
+        n = f_s * n + i_s
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    def chunk_body(carry, wx_c):  # wx_c [B, u, 4, H, hd]
+        hs = []
+        for t in range(u):  # unrolled: weights touched once per chunk
+            carry, h = step(carry, wx_c[:, t])
+            hs.append(h)
+        return carry, jnp.stack(hs, axis=1)  # [B, u, H, hd]
+
+    wx_chunks = wx.reshape(b, nc, u, 4, hp, hd).swapaxes(0, 1)
+    (c, n, h, m), hs = jax.lax.scan(
+        chunk_body, (st["c"], st["n"], st["h"], st["m"]), wx_chunks)
+    hseq = hs.swapaxes(0, 1).reshape(b, s, hp, hd).astype(cd)
+    out = jnp.einsum("bshk,hkd->bsd", hseq, p["down"].astype(cd))
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,205 @@
+"""KIP-based expert -> EP-shard placement (the paper's technique in-model).
+
+Mapping onto the paper's objects:
+
+* keys            -> logical expert ids (all "heavy": E is small, tail empty)
+* partitions      -> EP shards (the ``model`` mesh axis)
+* key histogram   -> per-expert token loads (DRW = router statistics,
+                     gathered during normal forward work, zero extra passes)
+* state migration -> moving expert weights (+ optimizer moments) between
+                     shards = permuting the stacked [E, ...] expert arrays
+
+``update_placement`` runs KIPUPDATE on the expert-load histogram, then
+post-processes the shard assignment into exactly ``E/shards`` slots per
+shard (KIP knows load bounds, not slot counts), preferring to keep every
+expert where it was — Algorithm 1's migration-minimality carried through.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import CounterSketch, Histogram
+from repro.core.partitioner import Partitioner, kip_update, uniform_partitioner
+
+__all__ = ["ExpertPlacement", "PlacementController", "apply_placement_to_weights"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPlacement:
+    place: np.ndarray      # int32[E_phys] physical slot -> logical expert
+    inv_place: np.ndarray  # int32[E]      logical expert -> physical slot
+    n_shards: int
+
+    @property
+    def num_experts(self) -> int:
+        return len(self.inv_place)
+
+    def shard_of(self, logical: np.ndarray) -> np.ndarray:
+        e_loc = len(self.place) // self.n_shards
+        return self.inv_place[logical] // e_loc
+
+    @staticmethod
+    def identity(num_experts: int, n_shards: int) -> "ExpertPlacement":
+        p = np.arange(num_experts, dtype=np.int32)
+        return ExpertPlacement(p.copy(), p.copy(), n_shards)
+
+
+def _slot_constrained(shard_of: np.ndarray, loads: np.ndarray, n_shards: int) -> np.ndarray:
+    """Evict lightest experts from over-full shards into free slots."""
+    e = len(shard_of)
+    e_loc = e // n_shards
+    shard_of = shard_of.copy()
+    for s in range(n_shards):
+        members = np.where(shard_of == s)[0]
+        if len(members) <= e_loc:
+            continue
+        # keep the heaviest e_loc here; move the rest to shards with room
+        order = members[np.argsort(-loads[members])]
+        for m in order[e_loc:]:
+            room = [q for q in range(n_shards) if (shard_of == q).sum() < e_loc]
+            # least-loaded shard with a free slot
+            q = min(room, key=lambda q: loads[shard_of == q].sum())
+            shard_of[m] = q
+    return shard_of
+
+
+def placement_from_assignment(
+    shard_of: np.ndarray, prev: ExpertPlacement, n_shards: int
+) -> ExpertPlacement:
+    """Build slot tables, keeping an expert's previous slot when its shard
+    did not change (zero migration for unmoved experts)."""
+    e = len(shard_of)
+    e_loc = e // n_shards
+    place = np.full(e, -1, np.int32)
+    taken = np.zeros(e, bool)
+    # pass 1: unmoved experts keep their physical slot
+    for ex in range(e):
+        old_slot = prev.inv_place[ex]
+        if old_slot // e_loc == shard_of[ex]:
+            place[old_slot] = ex
+            taken[old_slot] = True
+    # pass 2: moved experts fill free slots of their new shard
+    for ex in range(e):
+        old_slot = prev.inv_place[ex]
+        if old_slot // e_loc == shard_of[ex]:
+            continue
+        s = shard_of[ex]
+        free = [p for p in range(s * e_loc, (s + 1) * e_loc) if not taken[p]]
+        p = free[0]
+        place[p] = ex
+        taken[p] = True
+    inv = np.zeros(e, np.int32)
+    inv[place] = np.arange(e, dtype=np.int32)
+    return ExpertPlacement(place, inv, n_shards)
+
+
+class PlacementController:
+    """DRM for experts: EWMA load sketch + KIP placement updates."""
+
+    def __init__(self, num_experts: int, n_shards: int, *, eps: float = 0.02,
+                 alpha: float = 0.5, trigger: float = 1.15, min_steps_between: int = 1):
+        self.placement = ExpertPlacement.identity(num_experts, n_shards)
+        self.e, self.n = num_experts, n_shards
+        self.eps, self.alpha, self.trigger = eps, alpha, trigger
+        self.min_steps_between = min_steps_between
+        self.loads_ewma = np.zeros(num_experts)
+        self.steps = 0
+        self.last_update = -(10**9)
+        self.history: list[dict] = []
+
+    def shard_loads(self, loads: np.ndarray) -> np.ndarray:
+        e_loc = self.e // self.n
+        return loads[self.placement.place].reshape(self.n, e_loc).sum(axis=1)
+
+    def observe(self, counts: np.ndarray) -> None:
+        c = np.asarray(counts, np.float64)
+        tot = max(c.sum(), 1e-9)
+        self.loads_ewma = (1 - self.alpha) * self.loads_ewma + self.alpha * (c / tot)
+        self.steps += 1
+
+    def maybe_update(self) -> tuple[bool, ExpertPlacement, np.ndarray]:
+        """Returns (changed, placement, slot_perm) where ``slot_perm[p_new] =
+        p_old`` is the permutation to apply to stacked expert weights."""
+        sl = self.shard_loads(self.loads_ewma)
+        imb = float(sl.max() / max(sl.mean(), 1e-12))
+        if (imb < self.trigger or self.e <= self.n
+                or self.steps - self.last_update < self.min_steps_between):
+            return False, self.placement, np.arange(self.e, dtype=np.int32)
+
+        hist = Histogram.from_counts(np.arange(self.e), np.maximum(self.loads_ewma, 1e-9))
+        # previous placement as a Partitioner (explicit routing for all keys)
+        prev_part = uniform_partitioner(self.n, num_hosts=256, heavy_capacity=0)
+        hk = np.arange(self.e, dtype=np.int32)
+        order = np.argsort(hk)
+        prev_part = Partitioner(
+            self.n,
+            hk[order],
+            self.placement.shard_of(hk[order]).astype(np.int32),
+            prev_part.host_to_part,
+        )
+        kip = kip_update(prev_part, hist, num_partitions=self.n, eps=self.eps,
+                         heavy_capacity=self.e)
+        shard_of = kip.lookup_np(np.arange(self.e, dtype=np.int32))
+        shard_of = _slot_constrained(shard_of, self.loads_ewma, self.n)
+        new = placement_from_assignment(shard_of, self.placement, self.n)
+        # slot permutation: new physical slot p holds logical new.place[p],
+        # whose weights currently sit at old slot inv_old[new.place[p]]
+        perm = self.placement.inv_place[new.place].astype(np.int32)
+        moved = int((perm != np.arange(self.e)).sum())
+        new_sl = self.shard_loads(self.loads_ewma) if False else (
+            self.loads_ewma[new.place].reshape(self.n, -1).sum(axis=1))
+        self.history.append({
+            "step": self.steps, "imbalance_before": imb,
+            "imbalance_planned": float(new_sl.max() / max(new_sl.mean(), 1e-12)),
+            "experts_moved": moved,
+        })
+        self.placement = new
+        self.last_update = self.steps
+        return moved > 0, new, perm
+
+
+def replicated_assignment(loads: np.ndarray, n_shards: int, replicas: int,
+                          eps: float = 0.02) -> tuple[np.ndarray, np.ndarray]:
+    """Beyond-paper: heavy-expert replication (serving-oriented).
+
+    The paper can only *isolate* a heavy key; an expert, unlike a keygroup,
+    can be cloned — its traffic splits across replicas, beating the
+    single-key floor N*f1 that caps every pure partitioner.  Greedy: give
+    the ``replicas`` extra physical slots to the heaviest experts (halving/
+    thirding their effective load), then KIP-place the E + R virtual
+    experts onto shards.
+
+    Returns (owner[E + R] -> logical expert, shard_of[E + R]).
+    """
+    e = len(loads)
+    assert (e + replicas) % n_shards == 0, "E + R must divide into shard slots"
+    loads = np.asarray(loads, np.float64) / max(loads.sum(), 1e-12)
+    counts = np.ones(e, np.int64)  # replicas per expert
+    for _ in range(replicas):
+        eff = loads / counts
+        counts[int(np.argmax(eff))] += 1
+    owner = np.repeat(np.arange(e), counts).astype(np.int32)
+    eff_load = (loads / counts)[owner]
+    hist = Histogram.from_counts(np.arange(len(owner)), np.maximum(eff_load, 1e-9))
+    part = kip_update(uniform_partitioner(n_shards, num_hosts=256, heavy_capacity=0),
+                      hist, eps=eps, heavy_capacity=len(owner), tight=True)
+    shard_of = part.lookup_np(np.arange(len(owner), dtype=np.int32))
+    shard_of = _slot_constrained(shard_of, eff_load, n_shards)
+    return owner, shard_of.astype(np.int32)
+
+
+def apply_placement_to_weights(moe_params: dict, perm: np.ndarray) -> dict:
+    """Permute stacked expert arrays to the new physical slots (the state
+    migration — under jit/GSPMD this lowers to an expert all-to-all)."""
+    perm = jnp.asarray(perm)
+
+    def permute(name, arr):
+        if name in ("wi", "wo"):
+            return jnp.take(arr, perm, axis=0)
+        return arr
+
+    return {k: permute(k, v) if not isinstance(v, dict) else v for k, v in moe_params.items()}

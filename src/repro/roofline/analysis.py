@@ -1,0 +1,83 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+``cost_analysis`` gives HLO FLOPs and HBM bytes; collective traffic is not
+in there, so ``collective_bytes`` parses the (stable)HLO text and sums the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+
+    compute term    = HLO_FLOPs / (chips * peak FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM bw)
+    collective term = collective_bytes / (chips * link bw)
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.roofline.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+    r"\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    Shapes in the compiled module are *per-participant*, so the totals are
+    per-device traffic volumes (what the ICI link actually carries, modulo
+    algorithm factors: ring all-reduce moves ~2x, all-gather (n-1)/n x)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape = m.group(1) or m.group(2)
+        kind = m.group(3)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape)
+    return out
+
+
+def roofline_terms(*, flops_dev: float, hbm_dev: float, hbm_dev_fused: float,
+                   coll_dev: float) -> dict:
+    """Three terms in seconds per step + dominant bottleneck.
+
+    All inputs are PER-DEVICE quantities from the loop-aware HLO analysis.
+    ``memory`` is reported as a [fused, unfused] range: the CPU-backend HLO
+    fuses less than a TPU compile would, so the fused estimate is the one a
+    TPU deployment tracks; bottleneck selection uses it."""
+    compute = flops_dev / PEAK_FLOPS_BF16
+    mem_lo = hbm_dev_fused / HBM_BW
+    mem_hi = hbm_dev / HBM_BW
+    collective = coll_dev / ICI_BW
+    terms = {
+        "compute_s": compute,
+        "memory_s": mem_lo,
+        "memory_s_upper": mem_hi,
+        "collective_s": collective,
+    }
+    dom = {"compute": compute, "memory": mem_lo, "collective": collective}
+    terms["bottleneck"] = max(dom, key=dom.get)
+    total = max(dom.values())
+    terms["roofline_fraction"] = compute / total if total > 0 else 0.0
+    return terms

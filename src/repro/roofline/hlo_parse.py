@@ -1,0 +1,236 @@
+"""Loop-aware roofline accounting from compiled HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes a
+scan-over-layers model look ~num_layers x cheaper than it is.  This module
+re-derives the three roofline inputs from the post-optimization HLO dump,
+propagating ``known_trip_count`` multipliers through the call graph:
+
+* FLOPs            — 2 * prod(output) * contracted-size for every dot
+                     (inside fusions too), x effective trip multiplier
+* HBM bytes        — operand + output bytes of every top-level op in every
+                     computation (ops inside fused computations are
+                     register-local and skipped: XLA's own fusion model)
+* collective bytes — output bytes of all-gather/all-reduce/reduce-scatter/
+                     all-to-all/collective-permute, per kind
+
+All shapes in the dump are per-device (post-SPMD partitioning), so totals
+are per-device quantities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(%s)\[([0-9,]*)\]" % "|".join(_DTYPE_BYTES))
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?:\.clone)*\s*\(")
+_OP_RE = re.compile(r"^\s+(?:ROOT )?%([\w\.\-]+) = (.*?) ([\w\-]+)\((.*)$")
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)|branch_computations=\{([^}]*)\}"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    total_b = 0
+    total_e = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dtype]
+    return total_e, total_b
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str  # operand list + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    is_fused: bool
+
+
+def _parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HDR.match(line.strip())
+            if m and "{" in line:
+                raw = line.strip().split(" ")[0].lstrip("%")
+                if raw == "ENTRY":
+                    raw = line.strip().split(" ")[1].lstrip("%")
+                cur = Computation(raw, [], raw.startswith("fused_computation"))
+                comps[raw] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Effective execution count per computation, propagated from ENTRY."""
+    entry = comps.get("__entry__")
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        return {k: 1.0 for k in comps}
+    mult[entry.name] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(20):
+        changed = False
+        new = defaultdict(float)
+        new[entry.name] = 1.0
+        for cname, comp in comps.items():
+            if cname == "__entry__" or mult.get(cname, 0) == 0:
+                continue
+            m_self = mult[cname]
+            for op in comp.ops:
+                trips = 1.0
+                if op.kind == "while":
+                    t = _TRIP_RE.search(op.rest)
+                    trips = float(t.group(1)) if t else 1.0
+                for g1, g2 in _CALLEE_RE.findall(op.rest):
+                    names = [g1] if g1 else [x.strip().lstrip("%") for x in g2.split(",")]
+                    for nm in names:
+                        if nm in comps:
+                            new[nm] += m_self * (trips if op.kind == "while" else 1.0)
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult)
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "while", "conditional", "call",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+_SLICE_KINDS = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_callee(op: Op) -> str | None:
+    m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+    return m.group(1) if m else None
+
+
+def analyze(hlo: str) -> dict:
+    comps = _parse_computations(hlo)
+    mult = _multipliers(comps)
+    shapes: dict[str, str] = {}
+    roots: dict[str, Op] = {}  # fused computation -> ROOT op
+    for comp in comps.values():
+        prev = None
+        for op in comp.ops:
+            shapes[op.name] = op.type_str
+            prev = op
+        if comp.is_fused and prev is not None:
+            # the ROOT is the last op of the computation body
+            roots[comp.name] = prev
+
+    flops = 0.0
+    hbm_bytes = 0.0       # in+out per top-level op (fan-out double-counts: upper bound)
+    hbm_bytes_fused = 0.0  # 2x output bytes (perfect producer-consumer fusion: lower bound)
+    coll: dict[str, float] = defaultdict(float)
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            # ---- flops: dots anywhere (incl. inside fusions) ----
+            if op.kind == "dot":
+                _, out_b = _shape_elems_bytes(op.type_str)
+                out_e, _ = _shape_elems_bytes(op.type_str)
+                lhs = _OPERAND_RE.search(op.rest)
+                contracted = 1
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+                if lhs and cdims and lhs.group(1) in shapes:
+                    lshape = _SHAPE_RE.search(shapes[lhs.group(1)])
+                    if lshape:
+                        dims = [int(x) for x in lshape.group(2).split(",") if x]
+                        for ci in cdims.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                contracted *= dims[int(ci)]
+                flops += m * 2.0 * out_e * contracted
+            # ---- bytes: top-level ops only (fused interiors are local) ----
+            if comp.is_fused or op.kind in _SKIP_BYTES:
+                continue
+            _, out_b = _shape_elems_bytes(op.type_str)
+
+            def _update_bytes(dus_op: Op) -> int:
+                ops_ = _OPERAND_RE.findall(dus_op.rest.split("),")[0])
+                if len(ops_) >= 2 and ops_[1] in shapes:
+                    return _shape_elems_bytes(shapes[ops_[1]])[1]
+                return 0
+
+            # in-place / addressed access patterns: traffic is the slice,
+            # not the buffer (XLA aliases DUS; DS/gather read what they emit)
+            eff_out = out_b
+            if op.kind == "dynamic-update-slice":
+                eff_out = _update_bytes(op)
+            elif op.kind in _SLICE_KINDS:
+                eff_out = out_b
+            elif op.kind == "fusion":
+                callee = _fusion_callee(op)
+                root = roots.get(callee or "")
+                if root is not None and root.kind == "dynamic-update-slice":
+                    eff_out = _update_bytes(root)
+
+            in_b = 0
+            if op.kind not in _SLICE_KINDS:
+                # operand bytes from the symbol table (pre-attr segment)
+                operand_str = op.rest.split("),")[0]
+                for o in _OPERAND_RE.findall(operand_str):
+                    if o in shapes:
+                        in_b += _shape_elems_bytes(shapes[o])[1]
+            hbm_bytes += m * (eff_out + in_b)
+            hbm_bytes_fused += m * 2.0 * eff_out
+            if op.kind in _COLLECTIVES:
+                kind = op.kind.replace("-start", "")
+                coll[kind] += m * out_b
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "hbm_bytes_fused": hbm_bytes_fused,
+        "collective_bytes": dict(coll),
+        "computations": len(comps) - 1,
+    }

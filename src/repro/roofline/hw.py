@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (the target platform of the dry-run)."""
+
+PEAK_FLOPS_BF16 = 197e12   # FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+HBM_BYTES = 16 * 2**30     # per chip

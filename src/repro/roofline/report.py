@@ -1,0 +1,53 @@
+"""Aggregate reports/dryrun/*.json into the §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(report_dir: str = "reports/dryrun", mesh: str = "16x16", tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(report_dir, f"*__{mesh}{tag}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") == tag:
+            cells.append(r)
+    cells.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    return cells
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"ERROR: {r.get('error', '?')[:60]} |")
+    t = r["roofline"]
+    state_gb = r["state_bytes_per_device"] / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+        f"| {t['collective_s']:.3g} | **{t['bottleneck']}** | {r['useful_ratio']:.2f} "
+        f"| {state_gb:.1f} | {t['roofline_fraction']:.3f} |"
+    )
+
+
+def table(cells: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL/HLO flops | state GiB/dev | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return "\n".join([hdr] + [fmt_row(r) for r in cells])
+
+
+def main() -> None:
+    for mesh in ["16x16", "2x16x16"]:
+        cells = load_cells(mesh=mesh)
+        ok = sum(1 for c in cells if c["status"] == "ok")
+        print(f"\n## mesh {mesh}: {ok}/{len(cells)} cells ok\n")
+        print(table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Batched serving engine: continuous batching over prefill/decode steps.
+
+Slots hold active sequences; each engine tick decodes one token for every
+active slot (one jitted ``decode_step``), admits new requests into free
+slots via ``prefill``, and retires finished sequences.  The KV cache is the
+operator state of the paper's mapping — the DR scheduler
+(``repro.serve.scheduler``) decides which *replica* owns which session key,
+and session migration moves this cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model
+from repro.models.modules import Policy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # int32[prompt_len]
+    max_new_tokens: int
+    session_key: int = 0        # partitioning key for the DR scheduler
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-replica engine with a fixed slot count (= max batch)."""
+
+    def __init__(self, cfg: ArchConfig, params, pol: Policy, *, slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None):
+        self.cfg, self.params, self.pol = cfg, params, pol
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.active: list[Request | None] = [None] * slots
+        self._caches: list = [None] * slots
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, cfg, pol)
+        )
+        self.steps = 0
+        self.tokens_out = 0
+
+    # -- admission --------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        for i in range(self.slots):
+            if self.active[i] is None:
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, cache = model.prefill(
+                    self.params, {"tokens": toks}, self.cfg, self.pol,
+                    max_len=self.max_len,
+                )
+                nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
+                req.out_tokens.append(nxt)
+                self.active[i] = req
+                self._caches[i] = (cache, nxt)
+                return True
+        return False
+
+    # -- one decode tick over all active slots ---------------------------
+    def tick(self) -> int:
+        produced = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            cache, last = self._caches[i]
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray([[last]], jnp.int32)
+            )
+            nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
+            req.out_tokens.append(nxt)
+            self._caches[i] = (cache, nxt)
+            produced += 1
+            self.tokens_out += 1
+            if len(req.out_tokens) >= req.max_new_tokens or (
+                self.eos_id is not None and nxt == self.eos_id
+            ):
+                req.done = True
+                self.active[i] = None
+                self._caches[i] = None
+        self.steps += 1
+        return produced
+
+    @property
+    def free_slots(self) -> int:
+        return sum(1 for a in self.active if a is None)
+
+    def run(self, requests: list[Request], max_ticks: int = 1000) -> list[Request]:
+        pending = list(requests)
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            while pending and self.free_slots:
+                self.admit(pending.pop(0))
+            if not pending and all(a is None for a in self.active):
+                break
+            self.tick()
+            done.extend(r for r in [a for a in self.active] if r and r.done)
+        return requests

@@ -1,0 +1,95 @@
+"""DR-based request routing across serving replicas.
+
+Serving-side instance of the paper's mapping: requests carry a *session
+key* (user / document / host — the paper's §6 partitions crawl output by
+web host); replicas are partitions; the per-session KV cache is operator
+state.  Session keys are heavy-tailed (hot documents / hot tenants), so
+UHP routing makes some replicas stragglers.  The scheduler runs the same
+DRM loop: counter-sketch over observed session keys, KIPUPDATE at decision
+points, and session (cache) migration costed against the expected balance
+gain.
+
+Replicas here are modeled objects (queue depths), keeping the scheduler
+testable without spinning 16 engines; ``ServeEngine`` is the per-replica
+execution unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.drm import DRConfig, DRMaster
+from repro.core.hashing import DEFAULT_NUM_HOSTS
+from repro.core.partitioner import uniform_partitioner
+
+__all__ = ["ReplicaState", "DRScheduler"]
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    rid: int
+    queued_tokens: float = 0.0      # outstanding work
+    sessions: set = dataclasses.field(default_factory=set)
+
+
+class DRScheduler:
+    def __init__(self, num_replicas: int, *, dr: DRConfig | None = None, seed: int = 0,
+                 migration_token_cost: float = 64.0):
+        self.replicas = [ReplicaState(i) for i in range(num_replicas)]
+        cfg = dr or DRConfig(lam=4.0, imbalance_trigger=1.25)
+        heavy_cap = int(np.ceil(max(1.0, cfg.lam * num_replicas) / 128.0) * 128)
+        init = uniform_partitioner(num_replicas, DEFAULT_NUM_HOSTS, seed,
+                                   heavy_capacity=heavy_cap)
+        self.drm = DRMaster(init, cfg)
+        self.migration_token_cost = migration_token_cost
+        self.migrations = 0
+        self.routed = 0
+
+    # -- hot path ---------------------------------------------------------
+    def route(self, session_key: int, cost_tokens: float) -> int:
+        """Assign a request to a replica; account its load."""
+        r = int(self.drm.partitioner.lookup_np(np.asarray([session_key], np.int32))[0])
+        rep = self.replicas[r]
+        rep.queued_tokens += cost_tokens
+        rep.sessions.add(session_key)
+        self.routed += 1
+        return r
+
+    def drain(self, tokens_per_replica: float) -> None:
+        """Simulate service: each replica completes up to N tokens."""
+        for rep in self.replicas:
+            rep.queued_tokens = max(0.0, rep.queued_tokens - tokens_per_replica)
+
+    # -- safe point: observe + maybe repartition --------------------------
+    def checkpoint(self, window_keys: np.ndarray) -> dict:
+        keys, counts = np.unique(np.asarray(window_keys, np.int64), return_counts=True)
+        self.drm.observe(keys.reshape(1, -1), counts.reshape(1, -1))
+        loads = np.array([r.queued_tokens for r in self.replicas])
+        before = self.drm.partitioner
+        decision = self.drm.decide(loads + 1e-9)
+        moved_sessions = 0
+        if decision.repartition:
+            new = self.drm.partitioner
+            for rep in self.replicas:
+                stay = set()
+                for s in rep.sessions:
+                    dst = int(new.lookup_np(np.asarray([s], np.int32))[0])
+                    if dst != rep.rid:
+                        # migrate the session's KV cache
+                        self.replicas[dst].sessions.add(s)
+                        self.replicas[dst].queued_tokens += self.migration_token_cost
+                        moved_sessions += 1
+                    else:
+                        stay.add(s)
+                rep.sessions = stay
+            self.migrations += moved_sessions
+        return {
+            "repartitioned": decision.repartition,
+            "imbalance": decision.measured_imbalance,
+            "moved_sessions": moved_sessions,
+        }
+
+    def imbalance(self) -> float:
+        loads = np.array([r.queued_tokens for r in self.replicas])
+        return float(loads.max() / max(loads.mean(), 1e-9))

@@ -1,0 +1,39 @@
+"""Train-step factory: loss + grad + AdamW update, DR expert stats out.
+
+``make_train_step`` closes over (cfg, policy, opt config) and returns a
+jittable ``step(params, opt_state, batch, inv_place) -> (params, opt_state,
+metrics)``.  The MoE expert-load counts ride along in ``metrics`` — they are
+the DRW histogram the PlacementController consumes between steps (safe
+points = step boundaries, exactly the paper's micro-batch integration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model
+from repro.models.modules import Policy
+from repro.train.optimizer import OptConfig, OptState, apply_updates, init_opt
+
+
+def make_train_step(cfg: ArchConfig, pol: Policy, opt: OptConfig):
+    def step(params, opt_state: OptState, batch: dict, inv_place=None):
+        def lf(p):
+            return model.loss_fn(p, batch, cfg, pol, inv_place)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, opt_metrics = apply_updates(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return step
+
+
+def make_eval_step(cfg: ArchConfig, pol: Policy):
+    def step(params, batch: dict, inv_place=None):
+        loss, metrics = model.loss_fn(params, batch, cfg, pol, inv_place)
+        return {"loss": loss, **metrics}
+
+    return step

@@ -1,0 +1,77 @@
+"""Baseline partitioners (Readj/Redist/Scan/Mixed) sanity + ordering tests."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Histogram,
+    kip_update,
+    load_imbalance,
+    make_baseline,
+    plan_migration,
+    uniform_partitioner,
+)
+from repro.data.generators import drifting_zipf, zipf_keys
+
+NAMES = ["readj", "redist", "scan", "mixed"]
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_total_function(name):
+    update, prev = make_baseline(name, 16)
+    stream = zipf_keys(100_000, num_keys=10_000, exponent=1.1, seed=0)
+    hist = Histogram.exact(stream).top(32)
+    part = update(prev, hist, 16)
+    parts = part.lookup_np(stream.astype(np.int32))
+    assert parts.min() >= 0 and parts.max() < 16
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_improves_over_hash(name):
+    n = 16
+    update, prev = make_baseline(name, n)
+    stream = zipf_keys(200_000, num_keys=50_000, exponent=1.2, seed=1)
+    hist = Histogram.exact(stream).top(2 * n)
+    part = update(prev, hist, n)
+    assert load_imbalance(part, stream) <= load_imbalance(prev, stream) + 1e-9
+
+
+def test_kip_beats_baselines_on_drift():
+    """Fig 3 headline: over a drifting stream KIP's average imbalance beats
+    Scan and Readj, and its migration is far below Readj-style rebuilds."""
+    n = 20
+    results = {}
+    for name in ["scan", "readj", "kip"]:
+        if name == "kip":
+            update, part = (lambda prev, hist, n=n: kip_update(prev, hist, n)), uniform_partitioner(n)
+        else:
+            update, part = make_baseline(name, n)
+        imb, mig = [], []
+        live = None
+        for batch in drifting_zipf(12, 50_000, num_keys=5_000, exponent=1.0, seed=7):
+            hist = Histogram.exact(batch).top(2 * n)
+            new = update(part, hist, n)
+            live = np.unique(batch)
+            mig.append(plan_migration(part, new, live).relative_migration)
+            part = new
+            imb.append(load_imbalance(part, batch))
+        results[name] = (float(np.mean(imb[1:])), float(np.mean(mig[1:])))
+    assert results["kip"][0] <= results["scan"][0] + 0.05
+    assert results["kip"][0] <= results["readj"][0] + 0.05
+
+
+def test_redist_migrates_more_than_scan():
+    """On a gradually drifting stream, sticky Scan moves less state than
+    rebuild-from-scratch Redist (Gedik's trade-off, paper Fig. 3)."""
+    n = 16
+    mig = {}
+    for strat in ["redist", "scan"]:
+        update, part = make_baseline(strat, n)
+        total = []
+        for batch in drifting_zipf(8, 50_000, num_keys=5_000, exponent=1.0,
+                                   drift_every=3, drift_fraction=0.2, seed=5):
+            hist = Histogram.exact(batch).top(2 * n)
+            new = update(part, hist, n)
+            total.append(plan_migration(part, new, np.unique(batch)).relative_migration)
+            part = new
+        mig[strat] = float(np.mean(total[1:]))
+    assert mig["scan"] <= mig["redist"] + 1e-9, mig

@@ -1,0 +1,60 @@
+"""Pallas flash-attention kernel vs the jnp flash path and a naive oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.models.attention import flash_attention
+
+
+def _naive(q, k, v, causal, window):
+    # q [G, P, Sq, hd]; k/v [G, Sk, hd]
+    g, p, sq, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("gpqh,gkh->gpqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * hd**-0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("gpqk,gkh->gpqh", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("sq,sk,bq,bk", [(256, 256, 128, 128), (512, 512, 256, 256)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+@pytest.mark.parametrize("g,p,hd", [(2, 2, 64), (1, 4, 128)])
+def test_kernel_matches_naive(sq, sk, bq, bk, causal, window, g, p, hd):
+    rng = np.random.default_rng(sq + g + hd + int(causal))
+    q = jnp.asarray(rng.standard_normal((g, p, sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((g, sk, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((g, sk, hd)), jnp.float32)
+    got = flash_attention_tpu(q, k, v, causal=causal, window=window,
+                              bq=bq, bk=bk, interpret=True)
+    want = _naive(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_jnp_flash(dtype):
+    """Kernel == the model's jnp flash path (the thing it replaces on TPU)."""
+    rng = np.random.default_rng(0)
+    b, sq, g, qps, hd = 1, 256, 2, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, sq, g, qps, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, sq, g, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, sq, g, hd)), dtype)
+    want = flash_attention(q, k, v, causal=True, q_chunk=128, kv_chunk=128)
+    qk = q[0].transpose(1, 2, 0, 3)  # [g, qps, sq, hd]
+    got = flash_attention_tpu(qk, k[0].transpose(1, 0, 2), v[0].transpose(1, 0, 2),
+                              causal=True, bq=128, bk=128, interpret=True)
+    got = got.transpose(2, 0, 1, 3)[None]  # back to [b, sq, g, qps, hd]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+    )

@@ -1,0 +1,141 @@
+"""Tests for the DRW/DRM histogram machinery and sketch baselines."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CounterSketch,
+    CountMinSketch,
+    Histogram,
+    LossyCounting,
+    SpaceSaving,
+    local_topk_histogram,
+)
+from repro.data.generators import drifting_zipf, zipf_keys
+
+
+def test_exact_histogram():
+    h = Histogram.exact(np.array([1, 1, 1, 2, 2, 3]))
+    assert h.keys[0] == 1 and abs(h.freqs[0] - 0.5) < 1e-12
+    assert abs(h.freqs.sum() - 1.0) < 1e-12 and h.tail_mass < 1e-12
+
+
+def test_top_b_tail_mass():
+    h = Histogram.exact(np.arange(100).repeat(2)).top(10)
+    assert len(h) == 10
+    assert abs(h.tail_mass - 0.9) < 1e-12
+
+
+def test_ewma_drift():
+    old = Histogram.from_counts(np.array([1, 2]), np.array([9.0, 1.0]))
+    new = Histogram.from_counts(np.array([3, 2]), np.array([9.0, 1.0]))
+    mixed = old.ewma(new, alpha=0.5)
+    d = dict(zip(mixed.keys.tolist(), mixed.freqs.tolist()))
+    assert abs(d[1] - 0.45) < 1e-12  # decayed
+    assert abs(d[3] - 0.45) < 1e-12  # arriving
+    assert abs(d[2] - 0.10) < 1e-12  # persistent
+
+
+class TestCounterSketch:
+    def test_finds_heavy_hitters(self):
+        cs = CounterSketch(capacity=64)
+        stream = zipf_keys(100_000, num_keys=10_000, exponent=1.2, seed=0)
+        for i in range(0, len(stream), 10_000):
+            cs.update(stream[i : i + 10_000])
+        est = cs.histogram(top_b=10)
+        exact = Histogram.exact(stream).top(10)
+        overlap = len(set(est.keys.tolist()) & set(exact.keys.tolist()))
+        assert overlap >= 8
+        assert cs.memory_items <= 64
+
+    def test_overestimates_only(self):
+        """SpaceSaving-style merge keeps estimates >= true counts."""
+        cs = CounterSketch(capacity=8)
+        rng = np.random.default_rng(1)
+        stream = rng.integers(0, 50, 5_000)
+        for i in range(0, len(stream), 500):
+            cs.update(stream[i : i + 500])
+        h = cs.histogram()
+        true = Histogram.exact(stream)
+        td = dict(zip(true.keys.tolist(), (true.freqs * true.total_weight).tolist()))
+        for k, f in zip(h.keys.tolist(), h.freqs.tolist()):
+            assert f * cs.total >= td.get(k, 0) - 1e-6
+
+    def test_decay_forgets(self):
+        cs = CounterSketch(capacity=32, decay=0.5)
+        cs.update(np.full(1000, 7))
+        for _ in range(12):
+            cs.update(np.arange(100) + 1000)
+        h = cs.histogram(top_b=5)
+        assert 7 not in h.keys[:3].tolist()
+
+
+def test_spacesaving_error_bound():
+    """|est - true| <= total/capacity (classic SpaceSaving guarantee)."""
+    ss = SpaceSaving(capacity=50)
+    stream = zipf_keys(20_000, num_keys=1_000, exponent=1.3, seed=2)
+    ss.update(stream)
+    h = ss.histogram()
+    true = Histogram.exact(stream)
+    td = dict(zip(true.keys.tolist(), (true.freqs * true.total_weight).tolist()))
+    bound = len(stream) / 50
+    for k, f in zip(h.keys.tolist(), h.freqs.tolist()):
+        assert abs(f * ss.total - td.get(k, 0)) <= bound + 1e-6
+
+
+def test_lossy_counting_bound():
+    eps = 0.001
+    lc = LossyCounting(epsilon=eps)
+    stream = zipf_keys(50_000, num_keys=5_000, exponent=1.2, seed=3)
+    lc.update(stream)
+    true = Histogram.exact(stream)
+    td = dict(zip(true.keys.tolist(), (true.freqs * true.total_weight).tolist()))
+    for k, f in zip(lc.histogram().keys.tolist(), lc.histogram().freqs.tolist()):
+        c = f * lc.total
+        assert c <= td.get(k, 0) + 1e-6  # lossy counting under-estimates
+        assert c >= td.get(k, 0) - eps * len(stream) - 1e-6
+
+
+def test_cms_overestimates():
+    cms = CountMinSketch(depth=4, width=512)
+    stream = zipf_keys(30_000, num_keys=3_000, exponent=1.1, seed=4)
+    cms.update(stream)
+    true = Histogram.exact(stream)
+    keys = true.keys[:20]
+    est = cms.estimate(keys)
+    tc = true.freqs[:20] * true.total_weight
+    assert np.all(est >= tc - 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 500), cap=st.integers(4, 64))
+def test_prop_countersketch_total_conserved(seed, cap):
+    rng = np.random.default_rng(seed)
+    stream = rng.integers(0, 100, size=2_000)
+    cs = CounterSketch(capacity=cap)
+    for i in range(0, 2000, 250):
+        cs.update(stream[i : i + 250])
+    assert abs(cs.total - 2000) < 1e-6
+
+
+def test_local_topk_device_matches_exact():
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 40, size=512).astype(np.int32)
+    valid = np.ones(512, bool)
+    valid[500:] = False
+    tk, tc, total = local_topk_histogram(jnp.asarray(keys), jnp.asarray(valid), k=8)
+    exact = Histogram.exact(keys[:500]).top(8)
+    assert int(total) == 500
+    got = dict(zip(np.asarray(tk).tolist(), np.asarray(tc).tolist()))
+    want = dict(zip(exact.keys.tolist(), (exact.freqs * 500).round().astype(int).tolist()))
+    for k, c in want.items():
+        assert got.get(k) == c
+
+
+def test_local_topk_all_invalid():
+    tk, tc, total = local_topk_histogram(
+        jnp.zeros(64, jnp.int32), jnp.zeros(64, bool), k=4
+    )
+    assert int(total) == 0
+    assert np.all(np.asarray(tc) == 0)

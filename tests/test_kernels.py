@@ -1,0 +1,153 @@
+"""Per-kernel sweeps: Pallas (interpret=True) vs pure-jnp ref oracles,
+plus cross-checks against the host (numpy) implementations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Histogram, kip_update, uniform_partitioner
+from repro.data.generators import zipf_keys
+from repro.kernels import ops, ref
+from repro.kernels.dispatch_count import dispatch_count
+from repro.kernels.partition_apply import partition_apply
+from repro.kernels.sketch_update import sketch_update
+
+
+# ---------------------------------------------------------------------------
+# partition_apply
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 1024, 4096])
+@pytest.mark.parametrize("b", [128, 512])
+@pytest.mark.parametrize("num_hosts", [1024, 4096])
+def test_partition_apply_sweep(n, b, num_hosts):
+    rng = np.random.default_rng(n + b)
+    keys = rng.integers(0, 2**30, n).astype(np.int32)
+    heavy = np.sort(rng.choice(2**30, b // 2, replace=False)).astype(np.int32)
+    hk = np.concatenate([heavy, np.full(b - len(heavy), 2**31 - 1, np.int32)])
+    hp = np.concatenate(
+        [rng.integers(0, 16, len(heavy)), np.zeros(b - len(heavy))]
+    ).astype(np.int32)
+    table = rng.integers(0, 16, num_hosts).astype(np.int32)
+    # route some keys through the heavy path
+    keys[: b // 4] = heavy[: b // 4]
+
+    got = partition_apply(
+        jnp.asarray(keys), jnp.asarray(hk), jnp.asarray(hp), jnp.asarray(table),
+        seed=0, num_hosts=num_hosts, interpret=True,
+    )
+    want = ref.partition_apply_ref(
+        jnp.asarray(keys), jnp.asarray(hk), jnp.asarray(hp), jnp.asarray(table),
+        seed=0, num_hosts=num_hosts,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_partition_apply_matches_host_partitioner():
+    """Kernel == Partitioner.lookup_np == lookup_device on a real KIP."""
+    stream = zipf_keys(8192, num_keys=2_000, exponent=1.2, seed=0)
+    hist = Histogram.exact(stream).top(64)
+    kip = kip_update(uniform_partitioner(16), hist)
+    keys = stream[:4096].astype(np.int32)
+    got = ops.apply_partitioner(jnp.asarray(keys), kip.tables(), num_hosts=kip.num_hosts, seed=kip.seed)
+    want = kip.lookup_np(keys)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), n_pow=st.integers(1, 4))
+def test_prop_partition_apply_range(seed, n_pow):
+    n = 256 * n_pow
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2**30, n).astype(np.int32)
+    table = rng.integers(0, 8, 1024).astype(np.int32)
+    hk = np.full(128, 2**31 - 1, np.int32)
+    hp = np.zeros(128, np.int32)
+    got = np.asarray(
+        partition_apply(jnp.asarray(keys), jnp.asarray(hk), jnp.asarray(hp),
+                        jnp.asarray(table), seed=seed, num_hosts=1024, interpret=True)
+    )
+    assert got.min() >= 0 and got.max() < 8
+
+
+# ---------------------------------------------------------------------------
+# sketch_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 2048])
+@pytest.mark.parametrize("depth,width", [(2, 512), (4, 2048), (8, 1024)])
+def test_sketch_update_sweep(n, depth, width):
+    rng = np.random.default_rng(n + depth)
+    keys = rng.integers(0, 10_000, n).astype(np.int32)
+    valid = rng.random(n) < 0.9
+    got = sketch_update(jnp.asarray(keys), jnp.asarray(valid), depth=depth, width=width, interpret=True)
+    want = ref.sketch_update_ref(jnp.asarray(keys), jnp.asarray(valid), depth=depth, width=width)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+def test_sketch_matches_host_cms():
+    """Kernel rows == host CountMinSketch table (bit-identical hashing)."""
+    from repro.core import CountMinSketch
+
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 5_000, 2048).astype(np.int32)
+    cms = CountMinSketch(depth=4, width=512)
+    cms.update(keys)
+    got = np.asarray(ops.count_sketch(jnp.asarray(keys), depth=4, width=512))
+    np.testing.assert_allclose(got, cms.table, atol=0)
+
+
+def test_sketch_total_mass():
+    keys = jnp.arange(1024, dtype=jnp.int32)
+    sk = np.asarray(ops.count_sketch(keys, depth=3, width=256))
+    np.testing.assert_allclose(sk.sum(axis=1), 1024.0)
+
+
+# ---------------------------------------------------------------------------
+# dispatch_count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [512, 2048])
+@pytest.mark.parametrize("num_parts", [4, 16, 256])
+def test_dispatch_count_sweep(n, num_parts):
+    rng = np.random.default_rng(n + num_parts)
+    dest = rng.integers(0, num_parts, n).astype(np.int32)
+    valid = rng.random(n) < 0.85
+    got_slot, got_counts = dispatch_count(
+        jnp.asarray(dest), jnp.asarray(valid), num_parts=num_parts, interpret=True
+    )
+    want_slot, want_counts = ref.dispatch_count_ref(
+        jnp.asarray(dest), jnp.asarray(valid), num_parts=num_parts
+    )
+    np.testing.assert_array_equal(np.asarray(got_slot), np.asarray(want_slot))
+    np.testing.assert_array_equal(np.asarray(got_counts.astype(jnp.int32)), np.asarray(want_counts))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), num_parts=st.sampled_from([2, 8, 64]))
+def test_prop_dispatch_slots_bijective(seed, num_parts):
+    """slots within one destination are exactly 0..count-1 (a bijection) —
+    the invariant that makes the scatter into [N, capacity] collision-free."""
+    rng = np.random.default_rng(seed)
+    n = 1024
+    dest = rng.integers(0, num_parts, n).astype(np.int32)
+    valid = rng.random(n) < 0.7
+    slot, counts = ops.dispatch_slots(jnp.asarray(dest), jnp.asarray(valid), num_parts=num_parts)
+    slot, counts = np.asarray(slot), np.asarray(counts)
+    for p in range(num_parts):
+        s = np.sort(slot[(dest == p) & valid])
+        assert len(s) == counts[p]
+        np.testing.assert_array_equal(s, np.arange(len(s)))
+    assert np.all(slot[~valid] == -1)
+
+
+def test_dispatch_order_stable():
+    dest = jnp.asarray([0, 1, 0, 1, 0], jnp.int32)
+    valid = jnp.ones(5, bool)
+    slot, counts = ops.dispatch_slots(dest, valid, num_parts=2)
+    np.testing.assert_array_equal(np.asarray(slot), [0, 0, 1, 1, 2])
+    np.testing.assert_array_equal(np.asarray(counts), [3, 2])

@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train-grad / prefill+decode step on CPU; asserts shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduce_for_smoke
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import model
+from repro.models.modules import Policy
+
+POL = Policy(attn_q_chunk=64, attn_kv_chunk=64)
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.encdec:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_len, cfg.d_model)), jnp.float32)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad(arch, rng):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = model.init_params(cfg, jax.random.PRNGKey(0), POL)
+    batch = _batch(cfg, rng)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch, cfg, POL), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    # a sane LM init sits near ln(vocab)
+    assert 0.1 * np.log(cfg.vocab_size) < float(loss) < 3.0 * np.log(cfg.vocab_size)
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))), grads, 0.0
+    )
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode(arch, rng):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = model.init_params(cfg, jax.random.PRNGKey(1), POL)
+    batch = _batch(cfg, rng)
+    batch.pop("labels"), batch.pop("mask")
+
+    logits, cache = model.prefill(params, batch, cfg, POL, max_len=S + 8)
+    vp = logits.shape[-1]
+    assert logits.shape == (B, 1, vp) and vp >= cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+
+    tok = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for _ in range(2):
+        logits, cache = model.decode_step(params, cache, tok, cfg, POL)
+        assert logits.shape == (B, 1, vp)
+        assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+        tok = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "xlstm-125m", "gemma3-27b", "jamba-1.5-large-398b"])
+def test_decode_matches_forward(arch, rng):
+    """Teacher-forced decode equals the parallel forward (cache correctness)."""
+    cfg = reduce_for_smoke(get_config(arch))
+    params = model.init_params(cfg, jax.random.PRNGKey(2), POL)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
+
+    # parallel logits at final position via prefill of the full sequence
+    full, _ = model.prefill(params, {"tokens": toks}, cfg, POL, max_len=32)
+    # incremental: prefill the first 15, then decode token 15
+    pre, cache = model.prefill(params, {"tokens": toks[:, :15]}, cfg, POL, max_len=32)
+    step, _ = model.decode_step(params, cache, toks[:, 15:16], cfg, POL)
+    np.testing.assert_allclose(
+        np.asarray(full[0, 0, : cfg.vocab_size]),
+        np.asarray(step[0, 0, : cfg.vocab_size]),
+        rtol=2e-3, atol=2e-3,
+    )

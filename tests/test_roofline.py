@@ -1,0 +1,54 @@
+"""Unit tests for the loop-aware HLO roofline analyzer."""
+import textwrap
+
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hlo_parse import analyze
+
+HLO = textwrap.dedent("""
+    HloModule jit_step
+
+    %body.1 (arg.1: f32[8,128]) -> f32[8,128] {
+      %p0 = f32[8,128]{1,0} parameter(0)
+      %w = f32[128,128]{1,0} parameter(1)
+      %dot.1 = f32[8,128]{1,0} dot(%p0, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,128]{1,0} all-reduce(%dot.1), replica_groups=[1,4]<=[4], to_apply=%add.0
+      ROOT %out = f32[8,128]{1,0} add(%ar, %p0)
+    }
+
+    %cond.1 (arg.2: s32[]) -> pred[] {
+      %i = s32[] parameter(0)
+      ROOT %lt = pred[] compare(%i), direction=LT
+    }
+
+    ENTRY %main.1 (a: f32[8,128]) -> f32[8,128] {
+      %a = f32[8,128]{1,0} parameter(0)
+      %while.1 = f32[8,128]{1,0} while(%a), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %r = f32[8,128]{1,0} copy(%while.1)
+    }
+""")
+
+
+def test_trip_count_multiplies_flops():
+    r = analyze(HLO)
+    # dot: 2 * 8*128 out * 128 contracted = 262144 flops, x10 trips
+    assert r["flops"] == 10 * 2 * 8 * 128 * 128
+
+
+def test_collectives_counted_with_trips():
+    r = analyze(HLO)
+    assert r["collective_bytes"]["all-reduce"] == 10 * 8 * 128 * 4
+
+
+def test_bytes_accounted():
+    r = analyze(HLO)
+    assert r["hbm_bytes_fused"] > 0
+    assert r["hbm_bytes"] >= r["hbm_bytes_fused"] / 2
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(flops_dev=1e15, hbm_dev=1e9, hbm_dev_fused=1e9, coll_dev=1e9)
+    assert t["bottleneck"] == "compute"
+    assert t["roofline_fraction"] == 1.0
+    t = roofline_terms(flops_dev=1e9, hbm_dev=1e13, hbm_dev_fused=1e13, coll_dev=1e9)
+    assert t["bottleneck"] == "memory"
+    assert t["roofline_fraction"] < 0.1

@@ -1,0 +1,191 @@
+"""Integration tests: shuffle, keyed state, migration, streaming DR loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Histogram, kip_update, uniform_partitioner
+from repro.core.drm import DRConfig, DRMaster
+from repro.core.hashing import KEY_SENTINEL
+from repro.core.replay import BatchJob
+from repro.core.shuffle import make_shuffle_step
+from repro.core.state import empty_state, merge_into
+from repro.core.streaming import StreamingJob
+from repro.data.generators import drifting_zipf, zipf_keys
+
+
+# ---------------------------------------------------------------------------
+# state store
+# ---------------------------------------------------------------------------
+
+
+def test_merge_into_sums():
+    sk, sv = empty_state(16, 1)
+    bk = jnp.asarray([3, 5, 3, 9], jnp.int32)
+    bv = jnp.ones((4, 1), jnp.float32)
+    valid = jnp.ones(4, bool)
+    sk, sv, ov = merge_into(sk, sv, bk, bv, valid)
+    sk2, sv2, ov2 = merge_into(sk, sv, bk, bv, valid)
+    d = dict(zip(np.asarray(sk2).tolist(), np.asarray(sv2)[:, 0].tolist()))
+    assert d[3] == 4.0 and d[5] == 2.0 and d[9] == 2.0
+    assert int(ov) == 0 and int(ov2) == 0
+
+
+def test_merge_overflow_reported():
+    sk, sv = empty_state(4, 1)
+    bk = jnp.arange(8, dtype=jnp.int32)
+    sk, sv, ov = merge_into(sk, sv, bk, jnp.ones((8, 1)), jnp.ones(8, bool))
+    assert int(ov) == 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_prop_merge_conserves_mass(seed):
+    rng = np.random.default_rng(seed)
+    sk, sv = empty_state(256, 1)
+    total = 0.0
+    for _ in range(3):
+        bk = rng.integers(0, 100, 64).astype(np.int32)
+        bv = rng.random((64, 1)).astype(np.float32)
+        valid = rng.random(64) < 0.8
+        total += float(bv[valid].sum())
+        sk, sv, ov = merge_into(sk, sv, jnp.asarray(bk), jnp.asarray(bv), jnp.asarray(valid))
+        assert int(ov) == 0
+    np.testing.assert_allclose(float(jnp.sum(sv)), total, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# shuffle step (single device mesh exercises the full shard_map path)
+# ---------------------------------------------------------------------------
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def test_shuffle_routes_by_partitioner():
+    mesh = _mesh1()
+    part = uniform_partitioner(1)
+    step = make_shuffle_step(mesh, num_partitions=1, capacity=64, num_hosts=part.num_hosts)
+    keys = jnp.asarray(np.arange(10), jnp.int32)
+    vals = jnp.ones((10, 1), jnp.float32)
+    valid = jnp.ones(10, bool)
+    res = step(part.tables(), keys, vals, valid)
+    got = np.sort(np.asarray(res.keys[0])[np.asarray(res.valid[0])])
+    np.testing.assert_array_equal(got, np.arange(10))
+    assert int(res.overflow) == 0
+    assert int(res.loads.sum()) == 10
+
+
+def test_shuffle_overflow_counted():
+    mesh = _mesh1()
+    part = uniform_partitioner(1)
+    step = make_shuffle_step(mesh, num_partitions=1, capacity=8, num_hosts=part.num_hosts)
+    keys = jnp.asarray(np.arange(20), jnp.int32)
+    res = step(part.tables(), keys, jnp.ones((20, 1)), jnp.ones(20, bool))
+    assert int(res.overflow) == 12
+    assert int(np.asarray(res.valid).sum()) == 8
+
+
+def test_shuffle_hist_matches_batch():
+    mesh = _mesh1()
+    part = uniform_partitioner(1)
+    step = make_shuffle_step(mesh, num_partitions=1, capacity=512, num_hosts=part.num_hosts, hist_k=8)
+    keys = np.array([7] * 30 + [11] * 20 + [13] * 10, np.int32)
+    res = step(part.tables(), jnp.asarray(keys), jnp.ones((60, 1)), jnp.ones(60, bool))
+    hk = np.asarray(res.hist_keys)[0]
+    hc = np.asarray(res.hist_counts)[0]
+    top = dict(zip(hk.tolist(), hc.tolist()))
+    assert top[7] == 30 and top[11] == 20 and top[13] == 10
+
+
+# ---------------------------------------------------------------------------
+# streaming job end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_wordcount_exact():
+    """Stateful word count through shuffle+DR is exactly correct."""
+    job = StreamingJob(state_capacity=2048, dr_enabled=True)
+    rng = np.random.default_rng(0)
+    stream = rng.integers(0, 200, size=3 * 1024)
+    for i in range(3):
+        job.process_batch(stream[i * 1024 : (i + 1) * 1024])
+    for key in [0, 17, 199]:
+        assert job.state_count(int(key)) == float((stream == key).sum())
+
+
+def test_dr_triggers_and_improves_on_skew():
+    job = StreamingJob(
+        num_partitions=8,
+        state_capacity=8192,
+        dr=DRConfig(imbalance_trigger=1.1, migration_cost_weight=0.1),
+    )
+    batches = list(drifting_zipf(6, 8192, num_keys=2_000, exponent=1.4, drift_every=100, seed=1))
+    ms = job.run(batches)
+    assert any(m.repartitioned for m in ms)
+    first, last = ms[0].imbalance, ms[-1].imbalance
+    assert last < first  # DR improved partition balance
+    # state must survive migration intact
+    all_keys = np.concatenate(batches)
+    for key in np.unique(all_keys)[:5]:
+        assert job.state_count(int(key)) == float((all_keys == key).sum())
+
+
+def test_dr_idle_on_uniform_stream():
+    job = StreamingJob(num_partitions=4, dr=DRConfig(imbalance_trigger=1.5))
+    rng = np.random.default_rng(2)
+    ms = job.run([rng.integers(0, 100_000, 4096) for _ in range(3)])
+    assert not any(m.repartitioned for m in ms)
+
+
+def test_checkpoint_restore_resumes():
+    job = StreamingJob(num_partitions=4, state_capacity=4096,
+                       dr=DRConfig(imbalance_trigger=1.05, migration_cost_weight=0.0))
+    batches = [zipf_keys(4096, num_keys=500, exponent=1.3, seed=s) for s in range(4)]
+    job.process_batch(batches[0])
+    job.process_batch(batches[1])
+    snap = job.snapshot()
+    # simulate crash: brand-new job, restore snapshot, continue
+    job2 = StreamingJob(num_partitions=4, state_capacity=4096,
+                        dr=DRConfig(imbalance_trigger=1.05, migration_cost_weight=0.0))
+    job2.restore(snap)
+    job.process_batch(batches[2])
+    job2.process_batch(batches[2])
+    all_keys = np.concatenate(batches[:3])
+    for key in np.unique(all_keys)[:5]:
+        assert job2.state_count(int(key)) == pytest.approx(float((all_keys == key).sum()))
+        assert job2.state_count(int(key)) == pytest.approx(job.state_count(int(key)))
+
+
+def test_flink_mode_checkpoint_gating():
+    job = StreamingJob(
+        num_partitions=4,
+        checkpoint_interval=3,
+        dr=DRConfig(imbalance_trigger=1.0, migration_cost_weight=0.0),
+    )
+    batches = [zipf_keys(4096, num_keys=500, exponent=1.5, seed=s) for s in range(6)]
+    ms = job.run(batches)
+    for i, m in enumerate(ms):
+        if (i + 1) % 3 != 0:
+            assert not m.repartitioned
+
+
+# ---------------------------------------------------------------------------
+# batch replay
+# ---------------------------------------------------------------------------
+
+
+def test_batch_replay_improves():
+    keys = zipf_keys(100_000, num_keys=20_000, exponent=1.2, seed=3)
+    res = BatchJob(num_partitions=8, sample_fraction=0.1).run(keys)
+    assert res.imbalance_after <= res.imbalance_before
+    assert res.assignments.min() >= 0 and res.assignments.max() < 8
+
+
+def test_batch_replay_noop_when_uniform():
+    rng = np.random.default_rng(4)
+    keys = rng.integers(0, 10**6, 50_000)
+    res = BatchJob(num_partitions=8).run(keys)
+    assert res.imbalance_after <= res.imbalance_before + 1e-9

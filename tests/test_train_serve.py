@@ -1,0 +1,176 @@
+"""Optimizer, train-step, checkpoint crash-consistency, serving, scheduler."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduce_for_smoke
+from repro.configs.registry import get_config
+from repro.models import model
+from repro.models.modules import Policy
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import DRScheduler
+from repro.train import checkpoint
+from repro.train.optimizer import OptConfig, apply_updates, init_opt
+from repro.train.train_step import make_train_step
+
+POL = Policy(attn_q_chunk=64, attn_kv_chunk=64)
+
+
+def _smoke(arch="stablelm-1.6b"):
+    return reduce_for_smoke(get_config(arch))
+
+
+def _batch(cfg, rng, b=2, s=32):
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+
+
+class TestOptimizer:
+    def test_descends_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup=1)
+        st = init_opt(params, cfg)
+        for _ in range(200):
+            g = {"w": 2 * params["w"]}
+            params, st, m = apply_updates(params, g, st, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_clipping(self):
+        params = {"w": jnp.zeros(4)}
+        cfg = OptConfig(clip_norm=1.0, warmup=1)
+        st = init_opt(params, cfg)
+        _, _, m = apply_updates(params, {"w": jnp.full(4, 100.0)}, st, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_bf16_moments(self):
+        params = {"w": jnp.zeros(4)}
+        cfg = OptConfig(moment_dtype=jnp.bfloat16)
+        st = init_opt(params, cfg)
+        assert st.m["w"].dtype == jnp.bfloat16
+
+
+def test_train_loss_decreases():
+    cfg = _smoke("gemma-2b")
+    rng = np.random.default_rng(0)
+    params = model.init_params(cfg, jax.random.PRNGKey(0), POL)
+    opt_cfg = OptConfig(lr=1e-2, warmup=5)
+    opt = init_opt(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, POL, opt_cfg))
+    batch = _batch(cfg, rng)  # overfit one batch
+    losses = []
+    for _ in range(15):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_moe_train_emits_expert_counts():
+    cfg = _smoke("llama4-scout-17b-a16e")
+    rng = np.random.default_rng(1)
+    params = model.init_params(cfg, jax.random.PRNGKey(0), POL)
+    opt_cfg = OptConfig()
+    opt = init_opt(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, POL, opt_cfg))
+    params, opt, metrics = step(params, opt, _batch(cfg, rng))
+    counts = np.asarray(metrics["expert_counts"])
+    assert counts.shape == (cfg.moe.num_experts,)
+    assert counts.sum() == 2 * 32 * cfg.moe.top_k * cfg.num_layers
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": {"b": np.arange(6).reshape(2, 3)}, "c": [np.ones(2), np.zeros(1)]}
+        checkpoint.save(str(tmp_path), 5, tree)
+        step, back = checkpoint.restore(str(tmp_path), tree)
+        assert step == 5
+        np.testing.assert_array_equal(back["a"]["b"], tree["a"]["b"])
+        np.testing.assert_array_equal(back["c"][0], tree["c"][0])
+
+    def test_keep_last_k(self, tmp_path):
+        tree = {"x": np.zeros(1)}
+        for s in range(6):
+            checkpoint.save(str(tmp_path), s, tree, keep=2)
+        steps = sorted(os.listdir(tmp_path))
+        assert len(steps) == 2 and steps[-1].endswith("05")
+
+    def test_corruption_falls_back(self, tmp_path):
+        tree = {"x": np.arange(4)}
+        checkpoint.save(str(tmp_path), 1, {"x": np.arange(4)})
+        checkpoint.save(str(tmp_path), 2, {"x": np.arange(4) * 2})
+        # corrupt the newest
+        path = os.path.join(str(tmp_path), "step_000000002", "arrays.npz")
+        with open(path, "r+b") as f:
+            f.seek(100)
+            f.write(b"\xde\xad\xbe\xef")
+        out = checkpoint.restore(str(tmp_path), tree)
+        assert out is not None
+        step, back = out
+        assert step == 1
+        np.testing.assert_array_equal(back["x"], np.arange(4))
+
+    def test_crash_mid_write_is_invisible(self, tmp_path):
+        tree = {"x": np.arange(4)}
+        checkpoint.save(str(tmp_path), 1, tree)
+        # simulate a crash: a stale tmp dir left behind
+        os.makedirs(os.path.join(str(tmp_path), ".tmp_9"))
+        step, _ = checkpoint.restore(str(tmp_path), tree)
+        assert step == 1
+
+    def test_full_train_state_roundtrip(self, tmp_path):
+        cfg = _smoke("xlstm-125m")
+        params = model.init_params(cfg, jax.random.PRNGKey(0), POL)
+        opt = init_opt(params, OptConfig())
+        tree = {"params": params, "opt": opt}
+        npy = jax.tree.map(np.asarray, tree)
+        checkpoint.save(str(tmp_path), 7, npy)
+        step, back = checkpoint.restore(str(tmp_path), npy)
+        for a, b in zip(jax.tree.leaves(npy), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestServe:
+    def test_engine_completes_requests(self):
+        cfg = _smoke("gemma-2b")
+        params = model.init_params(cfg, jax.random.PRNGKey(0), POL)
+        eng = ServeEngine(cfg, params, POL, slots=2, max_len=64)
+        rng = np.random.default_rng(2)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(5)
+        ]
+        eng.run(reqs, max_ticks=100)
+        assert all(len(r.out_tokens) >= 4 or r.done for r in reqs)
+        assert eng.tokens_out >= 5 * 3
+
+    def test_scheduler_balances_hot_sessions(self):
+        """DR routing beats UHP on hot-tenant traffic (4 tenants x 10%)."""
+        rng = np.random.default_rng(3)
+        hot = np.array([7, 13, 99, 1234])
+        r = rng.random(8000)
+        keys = np.where(r < 0.4, hot[rng.integers(0, 4, 8000)],
+                        rng.integers(0, 5000, 8000)).astype(np.int64)
+
+        def run(dr_enabled):
+            sched = DRScheduler(8)
+            imb = []
+            for i in range(8):
+                win = keys[i * 1000 : (i + 1) * 1000]
+                for k in win:
+                    sched.route(int(k), cost_tokens=1.0)
+                imb.append(sched.imbalance())
+                if dr_enabled:
+                    sched.checkpoint(win)
+                sched.drain(tokens_per_replica=150)
+            return sched, imb
+
+        dr, imb_dr = run(True)
+        uhp, imb_uhp = run(False)
+        assert np.mean(imb_dr[2:]) < np.mean(imb_uhp[2:])
+        assert dr.migrations > 0
