@@ -41,4 +41,19 @@ def run(n: int = 8192):
     jit_d(dest)[0].block_until_ready()
     rows.append(("kernel/dispatch_count_jnp", timer(
         lambda: jit_d(dest)[0].block_until_ready()), f"{n} records, 16 parts"))
+
+    # fused exchange-plane hot path: lookup + slot in one pass
+    valid = jnp.ones(n, bool)
+    jit_f = jax.jit(lambda k: kref.lookup_dispatch_ref(
+        k, valid, tables.heavy_keys, tables.heavy_parts, tables.host_to_part,
+        num_hosts=kip.num_hosts, num_lanes=8))
+    jit_f(keys)[0].block_until_ready()
+    rows.append(("kernel/lookup_dispatch_jnp", timer(
+        lambda: jit_f(keys)[0].block_until_ready()), f"{n} keys, 8 lanes (fused)"))
+    from repro.kernels.ops import route_slots
+
+    part_p, slot_p, _ = route_slots(keys, valid, tables, num_hosts=kip.num_hosts, num_lanes=8)
+    part_r, slot_r, _ = jit_f(keys)
+    ok = bool(jnp.all(part_p == part_r) & jnp.all(slot_p == slot_r))
+    rows.append(("kernel/lookup_dispatch_pallas_matches", float(ok), "interpret=True"))
     return rows

@@ -12,25 +12,27 @@ from repro.core import (
     plan_migration,
     uniform_partitioner,
 )
+from repro.core.migration import migration_capacity
 from repro.data.generators import drifting_zipf
 
 N = 20
 BATCHES = 20
 BATCH = 100_000
+WORKERS = 4  # exchange-plane lane granularity (partition -> worker = p % W)
 
 
 def run(reps: int = 3):
     rows = []
     results: dict[str, tuple] = {}
     for method in ["hash", "scan", "readj", "kip"]:
-        imb_all, mig_all = [], []
+        imb_all, mig_all, lane_all = [], [], []
         for rep in range(reps):
             if method == "kip":
                 part = uniform_partitioner(N)
                 update = lambda prev, hist, n=N: kip_update(prev, hist.top(2 * N))
             else:
                 update, part = make_baseline(method, N)
-            imb, mig = [], []
+            imb, mig, lanes = [], [], []
             window: list[np.ndarray] = []  # sliding state window of 5 batches
             for batch in drifting_zipf(BATCHES, BATCH, num_keys=10_000, exponent=1.0,
                                        drift_every=4, drift_fraction=0.3, seed=rep):
@@ -41,14 +43,22 @@ def run(reps: int = 3):
                 live, counts = np.unique(np.concatenate(window), return_counts=True)
                 plan = plan_migration(part, new, live, counts.astype(np.float64))
                 mig.append(plan.relative_migration)
+                # exchange-plane lane rows this swap would ship (vs. the
+                # full-state all-to-all of W * len(live) rows)
+                lanes.append(migration_capacity(plan, num_workers=WORKERS)
+                             / max(len(live), 1))
                 part = new
                 imb.append(load_imbalance(part, batch))
             imb_all.append(np.mean(imb[1:]))
             mig_all.append(np.mean(mig[1:]))
+            lane_all.append(np.mean(lanes[1:]))
         results[method] = (float(np.mean(imb_all)), float(np.mean(mig_all)))
         rows.append((f"fig3/imbalance/{method}", results[method][0], "mean over stream"))
         if method != "hash":
             rows.append((f"fig3/migration/{method}", results[method][1], "fraction/update"))
+            rows.append((f"fig3/exchange_lane_fraction/{method}",
+                         float(np.mean(lane_all)),
+                         "a2a lane rows / live state rows (full-state a2a = 1)"))
     # paper's claims: KIP imbalance beats hash/scan/readj; KIP migrates far
     # less than readj-style rebuilds
     imp_hash = 1 - results["kip"][0] / results["hash"][0]

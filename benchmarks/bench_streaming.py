@@ -22,12 +22,15 @@ def _worker_time(job_metrics, per_record_us=1.0, per_batch_overhead_us=2000.0):
 
 def run(batches: int = 6, batch_size: int = 16_384):
     rows = []
+    state_capacity = 16_384
     for exp in EXPONENTS:
         metrics = {}
+        mig_rows = 0
+        reparts = 0
         for dr_on in (True, False):
             job = StreamingJob(
                 num_partitions=8,
-                state_capacity=16_384,
+                state_capacity=state_capacity,
                 dr_enabled=dr_on,
                 dr=DRConfig(imbalance_trigger=1.1, migration_cost_weight=0.2),
             )
@@ -36,7 +39,17 @@ def run(batches: int = 6, batch_size: int = 16_384):
             # throughput proxy: records / straggler-bound time
             imb = np.mean([m.imbalance for m in ms[1:]])
             metrics[dr_on] = imb
+            if dr_on:
+                mig_rows = sum(m.migration_rows for m in ms)
+                reparts = sum(m.repartitioned for m in ms)
         gain = metrics[False] / metrics[True] - 1.0
         rows.append((f"fig6/throughput_gain/exp={exp}", gain,
                      "relative increase (paper: biggest at moderate exp)"))
+        if reparts:
+            # bounded exchange: rows shipped per repartition vs. the
+            # full-state all-to-all (W * state_capacity rows per worker)
+            full = job.num_workers * state_capacity
+            rows.append((f"fig6/migration_rows_fraction/exp={exp}",
+                         mig_rows / reparts / full,
+                         f"{reparts} repartitions, full-state a2a = 1"))
     return rows

@@ -1,0 +1,67 @@
+"""Version-tolerance shims for jax APIs that moved between releases.
+
+Every module that needs ``shard_map`` imports it from here instead of from
+jax directly, so the repo tracks exactly one spelling of each API:
+
+* ``shard_map``  — ``jax.shard_map`` (new) vs ``jax.experimental.shard_map``
+  (<= 0.4.x), absorbing the ``check_rep`` -> ``check_vma`` rename and the
+  ``auto`` -> ``axis_names`` inversion (old jax names the *auto* axes, new
+  jax names the *manual* ones).
+* ``set_mesh``   — ``jax.set_mesh`` (new) vs entering the ``Mesh`` context
+  manager (old); both forms support ``with set_mesh(mesh): ...``.
+
+Call sites use the modern spellings (``check_vma=``, ``axis_names=``); the
+shim rewrites them for whatever jax is installed.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+__all__ = ["shard_map", "set_mesh"]
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool | None = None,
+    check_rep: bool | None = None,
+    axis_names=None,
+    auto=None,
+):
+    """``shard_map`` with one signature across jax versions."""
+    check = check_vma if check_vma is not None else check_rep
+    kwargs = {}
+    if "check_vma" in _PARAMS:  # new-style jax
+        if check is not None:
+            kwargs["check_vma"] = check
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        elif auto is not None:
+            kwargs["axis_names"] = set(mesh.axis_names) - set(auto)
+    else:  # old-style: check_rep + auto (complement of the manual axes)
+        if check is not None:
+            kwargs["check_rep"] = check
+        if auto is not None:
+            kwargs["auto"] = frozenset(auto)
+        elif axis_names is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # older jax: Mesh is itself a context manager

@@ -129,6 +129,7 @@ class DRMaster:
             "sketch_floor": np.float64(self.sketch._floor),
             "sketch_total": np.float64(self.sketch.total),
             "batches_seen": np.int64(self.batches_seen),
+            "last_repartition": np.int64(self.last_repartition),
         }
 
     @classmethod
@@ -146,4 +147,6 @@ class DRMaster:
         drm.sketch._floor = float(snap["sketch_floor"])
         drm.sketch.total = float(snap["sketch_total"])
         drm.batches_seen = int(snap["batches_seen"])
+        if "last_repartition" in snap:  # older snapshots predate this field
+            drm.last_repartition = int(snap["last_repartition"])
         return drm

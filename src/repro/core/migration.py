@@ -65,14 +65,34 @@ def plan_migration(
     )
 
 
-def migration_capacity(plan: MigrationPlan, row_bytes: float = 1.0, slack: float = 1.25) -> int:
+def migration_capacity(
+    plan: MigrationPlan,
+    row_bytes: float = 1.0,
+    slack: float = 1.25,
+    num_workers: int | None = None,
+) -> int:
     """Static per-(src,dst) lane capacity for the all-to-all state exchange.
 
     XLA collectives need static shapes: size each lane to the largest
     planned transfer times ``slack`` (rounded up to a multiple of 8 rows).
+
+    With ``num_workers`` the [N, N] partition-level transfer matrix is first
+    folded to worker granularity (partition p lives on worker ``p % W``) and
+    same-worker moves are dropped — they never cross the exchange.  This is
+    the lane size ``repro.core.shuffle.make_migrate_step`` wants: the
+    exchanged buffer shrinks from ``W * state_capacity`` rows to the planned
+    peak transfer x slack.
     """
-    if plan.transfer.size == 0:
+    transfer = plan.transfer
+    if transfer.size == 0:
         return 8
-    peak = float(plan.transfer.max()) / max(row_bytes, 1e-12)
+    if num_workers is not None:
+        n = transfer.shape[0]
+        w = np.arange(n) % num_workers
+        folded = np.zeros((num_workers, num_workers))
+        np.add.at(folded, (w[:, None], w[None, :]), transfer)
+        np.fill_diagonal(folded, 0.0)  # same-worker moves don't ship
+        transfer = folded
+    peak = float(transfer.max()) / max(row_bytes, 1e-12)
     cap = int(np.ceil(peak * slack / 8.0) * 8)
     return max(cap, 8)

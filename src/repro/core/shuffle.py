@@ -1,33 +1,38 @@
 """Device-side keyed shuffle: the DDPS stage boundary on a JAX mesh.
 
-One shuffle step, executed under ``shard_map`` over the ``data`` axis:
+One shuffle step, executed under ``shard_map`` over the ``data`` axis, built
+entirely on the unified exchange plane (``repro.exchange``):
 
-1. every worker evaluates the partitioner on its local keys
-   (Pallas ``partition_apply`` on TPU, jnp twin elsewhere — bit-identical),
-2. records are bucketed into a capacity-padded ``[W, cap]`` send buffer
-   (slots from ``dispatch_count``; overflow is counted, never silently lost),
-3. ``jax.lax.all_to_all`` exchanges the buffers,
-4. the DRW hook emits the local top-k histogram + global per-partition loads
+1. every worker routes its local keys with the fused lookup+dispatch path
+   (Pallas on TPU, jnp twin elsewhere — bit-identical),
+2. the exchange primitive bucketizes records into a capacity-padded
+   ``[W, cap]`` send buffer (overflow is counted, never silently lost),
+   runs ``jax.lax.all_to_all``, and unpacks the received rows,
+3. the DRW hook emits the local top-k histogram + global per-partition loads
    (a ``psum`` — reusing normal DDPS communication, as the paper requires).
 
 Partitions may outnumber workers (over-partitioning, paper Fig. 5);
 ``worker = partition % W``.
+
+State migration (``make_migrate_step``) is the *same* exchange with lanes
+sized by the planner: ``repro.core.migration.migration_capacity`` bounds the
+per-lane rows to the planned peak transfer x slack, so a repartition ships a
+buffer proportional to what actually moves instead of ``W * state_capacity``
+rows.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.core.hashing import KEY_SENTINEL
 from repro.core.histogram import local_topk_histogram
 from repro.core.partitioner import PartitionerTables, lookup_device
-from repro.kernels import ref as kref
+from repro.exchange import ExchangeSpec, Payload, make_exchange, route_dispatch
 
 __all__ = ["ShuffleResult", "make_shuffle_step", "make_migrate_step"]
 
@@ -43,23 +48,6 @@ class ShuffleResult(NamedTuple):
     overflow: jax.Array   # int32[]           records dropped for capacity globally
 
 
-def _bucketize(keys, vals, valid, dest_part, num_workers, capacity):
-    """[n] records -> [W, cap] send buffers; returns buffers + overflow."""
-    w = dest_part % num_workers
-    slot, _ = kref.dispatch_count_ref(w, valid, num_parts=num_workers)
-    ok = valid & (slot >= 0) & (slot < capacity)
-    overflow = jnp.sum(valid & (slot >= capacity))
-    # out-of-range rows are dropped by scatter mode='drop'
-    s = jnp.where(ok, slot, capacity)
-    buf_keys = jnp.full((num_workers, capacity), KEY_SENTINEL, jnp.int32)
-    buf_keys = buf_keys.at[w, s].set(keys, mode="drop")
-    buf_part = jnp.zeros((num_workers, capacity), jnp.int32).at[w, s].set(dest_part, mode="drop")
-    buf_vals = jnp.zeros((num_workers, capacity) + vals.shape[1:], vals.dtype)
-    buf_vals = buf_vals.at[w, s].set(vals, mode="drop")
-    buf_valid = jnp.zeros((num_workers, capacity), bool).at[w, s].set(ok, mode="drop")
-    return buf_keys, buf_vals, buf_valid, buf_part, overflow
-
-
 def make_shuffle_step(
     mesh: Mesh,
     *,
@@ -72,29 +60,33 @@ def make_shuffle_step(
 ):
     """Build the jitted shuffle step for a fixed mesh/capacity."""
     num_workers = mesh.shape[axis]
+    ex = make_exchange(ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis))
 
     def _local(tables, keys, vals, valid):
         # keys [n] local records of this worker
         tables = PartitionerTables(*tables)
-        dest = lookup_device(tables, keys, num_hosts, seed)
+        dest, slot = route_dispatch(
+            tables, keys, valid, num_hosts=num_hosts, seed=seed, num_lanes=num_workers
+        )
         dest = jnp.where(valid, dest, 0)
-        bk, bv, bva, bp, overflow = _bucketize(keys, vals, valid, dest, num_workers, capacity)
-        # exchange: row j of the buffer goes to worker j
-        rk = jax.lax.all_to_all(bk, axis, 0, 0, tiled=True)
-        rv = jax.lax.all_to_all(bv, axis, 0, 0, tiled=True)
-        rva = jax.lax.all_to_all(bva, axis, 0, 0, tiled=True)
-        rp = jax.lax.all_to_all(bp, axis, 0, 0, tiled=True)
+        res = ex(
+            dest % num_workers,
+            valid,
+            [Payload(keys, KEY_SENTINEL), Payload(vals, 0), Payload(dest, 0)],
+            slot=slot,
+        )
+        rva, (rk, rv, rp) = res.unpack()
         # DRW: sample local keys during normal work (no extra pass)
         hk, hc, _ = local_topk_histogram(keys, valid, hist_k)
         # global per-partition loads (normal DDPS comms: one psum)
         my_loads = jnp.zeros(num_partitions, jnp.int32).at[dest].add(valid.astype(jnp.int32))
         loads = jax.lax.psum(my_loads, axis)
-        overflow = jax.lax.psum(overflow, axis)
+        overflow = jax.lax.psum(res.send.overflow, axis)
         return (
-            rk.reshape(-1)[None],
-            rv.reshape(num_workers * capacity, -1)[None],
-            rva.reshape(-1)[None],
-            rp.reshape(-1)[None],
+            rk[None],
+            rv[None],
+            rva[None],
+            rp[None],
             loads,
             hk[None],
             hc[None],
@@ -127,17 +119,23 @@ def make_migrate_step(
     *,
     state_capacity: int,
     num_hosts: int,
+    lane_capacity: int | None = None,
     seed: int = 0,
     axis: str = "data",
 ):
     """Jitted operator-state migration for a partitioner swap.
 
-    Each worker re-evaluates old vs. new partitioner on its stored keys and
-    ships rows whose worker changed through an all-to-all sized to the full
-    state table (correctness-first; §Perf shrinks this with the histogram
-    bound).  Returns the new state table + relative-migration metric.
+    Each worker re-evaluates the new partitioner on its stored keys and
+    ships rows whose worker changed through the exchange plane.
+    ``lane_capacity`` bounds the per-(src, dst) rows of the all-to-all —
+    pass ``migration_capacity(plan, num_workers=W)`` to size the exchange to
+    the planned peak transfer x slack instead of the full state table
+    (defaults to ``state_capacity``, the correctness-first upper bound).
+    Returns the kept state + received rows + relative-migration metric.
     """
     num_workers = mesh.shape[axis]
+    cap = state_capacity if lane_capacity is None else min(lane_capacity, state_capacity)
+    ex = make_exchange(ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis))
 
     def _local(new_tables, state_keys, state_vals):
         # state tables arrive stacked [1, S] / [1, S, D] per shard
@@ -151,29 +149,27 @@ def make_migrate_step(
         moved_w = jnp.sum(moving)
         total_w = jax.lax.psum(jnp.sum(valid), axis)
 
-        bk, bv, bva, _, overflow = _bucketize(
-            jnp.where(moving, state_keys, KEY_SENTINEL),
-            state_vals,
-            moving,
+        res = ex(
             jnp.where(moving, dest, me),
-            num_workers,
-            state_capacity,
+            moving,
+            [
+                Payload(jnp.where(moving, state_keys, KEY_SENTINEL), KEY_SENTINEL),
+                Payload(state_vals, 0),
+            ],
         )
-        rk = jax.lax.all_to_all(bk, axis, 0, 0, tiled=True)
-        rv = jax.lax.all_to_all(bv, axis, 0, 0, tiled=True)
-        rva = jax.lax.all_to_all(bva, axis, 0, 0, tiled=True)
+        rva, (rk, rv) = res.unpack()
 
         kept_keys = jnp.where(moving, KEY_SENTINEL, state_keys)
         kept_valid = valid & ~moving
         moved_total = jax.lax.psum(moved_w, axis)
-        overflow = jax.lax.psum(overflow, axis)
+        overflow = jax.lax.psum(res.send.overflow, axis)
         return (
             kept_keys[None],
             state_vals[None],
             kept_valid[None],
-            rk.reshape(-1)[None],
-            rv.reshape(num_workers * state_capacity, -1)[None],
-            rva.reshape(-1)[None],
+            rk[None],
+            rv[None],
+            rva[None],
             moved_total,
             total_w,
             overflow,

@@ -10,12 +10,19 @@ keyed state, then gives the DRM a safe point.  If the DRM repartitions, the
 jitted migrate step moves the keyed state before the next batch — the
 Spark-style integration; setting ``checkpoint_interval > 1`` gates decisions
 on checkpoint ticks, the Flink-style integration.
+
+Both the shuffle and the migration ride the unified exchange plane
+(``repro.exchange``).  Migration lanes are sized from the host-side plan
+(``plan_migration`` + ``migration_capacity``): the all-to-all ships the
+planned peak transfer x slack instead of ``W * state_capacity`` rows.  Lane
+capacities are rounded up to powers of two so repeated repartitions reuse a
+handful of jitted migrate steps instead of recompiling per plan.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Iterable
+from typing import Iterable
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +31,7 @@ from jax.sharding import Mesh
 
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL
+from repro.core.migration import migration_capacity, plan_migration
 from repro.core.partitioner import Partitioner, uniform_partitioner
 from repro.core.shuffle import make_migrate_step, make_shuffle_step
 from repro.core.state import empty_state, merge_into
@@ -38,10 +46,11 @@ class BatchMetrics:
     worker_imbalance: float     # per-worker (straggler view)
     repartitioned: bool
     relative_migration: float
-    overflow: int
+    overflow: int               # shuffle + migration rows dropped for capacity
     state_rows: int
     wall_time_s: float
     reason: str
+    migration_rows: int = 0     # rows of all-to-all buffer a repartition exchanged
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -80,6 +89,7 @@ class StreamingJob:
         self.payload_dim = payload_dim
         self.dr_enabled = dr_enabled
         self.checkpoint_interval = checkpoint_interval
+        self.hist_k = hist_k
         self.seed = seed
         cfg = dr or DRConfig()
         heavy_cap = int(np.ceil(max(1.0, cfg.lam * self.num_partitions) / 128.0) * 128)
@@ -88,8 +98,8 @@ class StreamingJob:
         )
         self.drm = DRMaster(part, cfg)
         self._shuffle = None
-        self._migrate = None
         self._capacity = None
+        self._migrate_steps: dict[int, object] = {}  # lane capacity -> jitted step
         # per-worker keyed state, stacked [W, S] / [W, S, D]
         sk, sv = empty_state(state_capacity, payload_dim)
         self.state_keys = jnp.tile(sk[None], (self.num_workers, 1))
@@ -107,15 +117,30 @@ class StreamingJob:
             self.mesh,
             num_partitions=self.num_partitions,
             capacity=cap,
+            hist_k=self.hist_k,
             num_hosts=self.drm.partitioner.num_hosts,
             seed=self.seed,
         )
-        self._migrate = make_migrate_step(
-            self.mesh,
-            state_capacity=self.state_capacity,
-            num_hosts=self.drm.partitioner.num_hosts,
-            seed=self.seed,
-        )
+
+    def _migrate_step(self, lane_capacity: int):
+        """Jitted migrate step with lanes >= ``lane_capacity`` rows.
+
+        Capacities are rounded up to the next power of two (capped at the
+        full state table) so the jit cache stays small across repartitions.
+        """
+        cap = 8
+        while cap < min(lane_capacity, self.state_capacity):
+            cap *= 2
+        cap = min(cap, self.state_capacity)
+        if cap not in self._migrate_steps:
+            self._migrate_steps[cap] = make_migrate_step(
+                self.mesh,
+                state_capacity=self.state_capacity,
+                lane_capacity=cap,
+                num_hosts=self.drm.partitioner.num_hosts,
+                seed=self.seed,
+            )
+        return self._migrate_steps[cap], cap
 
     # ------------------------------------------------------------------
     def process_batch(self, keys: np.ndarray, values: np.ndarray | None = None) -> BatchMetrics:
@@ -149,29 +174,47 @@ class StreamingJob:
             np.arange(self.num_partitions) % self.num_workers, weights=loads, minlength=self.num_workers
         )
         rel_mig = 0.0
+        mig_overflow = 0
+        mig_rows = 0
         decision = None
         at_checkpoint = (len(self.metrics) + 1) % self.checkpoint_interval == 0
         if self.dr_enabled and at_checkpoint:
+            old_part = self.drm.partitioner
             decision = self.drm.decide(loads)
             if decision.repartition:
-                out = self._migrate(self.drm.partitioner.tables(), self.state_keys, self.state_vals)
+                # plan on the driver: the histogram-bounded lane size shrinks
+                # the exchanged buffer to planned peak transfer x slack
+                sk = np.asarray(self.state_keys).reshape(-1)
+                live = sk[sk != KEY_SENTINEL].astype(np.int64)
+                plan = plan_migration(old_part, decision.partitioner, live)
+                migrate, lane_cap = self._migrate_step(
+                    migration_capacity(plan, num_workers=self.num_workers)
+                )
+                out = migrate(self.drm.partitioner.tables(), self.state_keys, self.state_vals)
                 kk, vv, kv_valid, rk, rv, rva, moved, total, mig_ov = out
                 kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
                 self.state_keys, self.state_vals, _ = self._merge(
                     kept_keys, vv, rk, rv, rva
                 )
                 rel_mig = float(moved) / max(float(total), 1e-9)
+                mig_overflow = int(mig_ov)
+                mig_rows = self.num_workers * lane_cap  # rows received per worker
 
+        if decision is not None:
+            reason = decision.reason
+        else:
+            reason = "dr-disabled" if not self.dr_enabled else "not-checkpoint-tick"
         m = BatchMetrics(
             batch=len(self.metrics),
             imbalance=float(loads.max() / max(loads.mean(), 1e-12)),
             worker_imbalance=float(worker_loads.max() / max(worker_loads.mean(), 1e-12)),
             repartitioned=bool(decision.repartition) if decision else False,
             relative_migration=rel_mig,
-            overflow=int(res.overflow),
+            overflow=int(res.overflow) + mig_overflow,
             state_rows=int(np.asarray(jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)).sum()),
             wall_time_s=time.perf_counter() - t0,
-            reason=decision.reason if decision else "dr-disabled",
+            reason=reason,
+            migration_rows=mig_rows,
         )
         self.metrics.append(m)
         return m

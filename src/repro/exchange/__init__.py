@@ -1,0 +1,23 @@
+"""Unified exchange plane — one routed all-to-all subsystem for shuffle,
+state migration, and MoE dispatch.  See :mod:`repro.exchange.plane`."""
+from repro.exchange.plane import (
+    Exchange,
+    ExchangeResult,
+    ExchangeSpec,
+    Payload,
+    SendInfo,
+    make_exchange,
+    route_dispatch,
+    take_from,
+)
+
+__all__ = [
+    "Exchange",
+    "ExchangeResult",
+    "ExchangeSpec",
+    "Payload",
+    "SendInfo",
+    "make_exchange",
+    "route_dispatch",
+    "take_from",
+]

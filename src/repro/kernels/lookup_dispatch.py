@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: fused partition lookup + send-slot assignment.
+
+The exchange plane's hot path runs two kernels back to back on the same
+records: ``partition_apply`` (key -> partition) and ``dispatch_count``
+(destination -> stable send slot).  Fusing them keeps the one-hot
+destination matrix in VMEM between the two stages — the [blk, L] one-hot
+built for the slot ranking is derived directly from the partition ids the
+lookup just produced, so the records make one trip through VMEM instead of
+two round trips to HBM.
+
+Per record ``i`` with key ``k``::
+
+    part[i] = heavy_parts[j]        if k == heavy_keys[j] for some j
+            = host_to_part[fmix32(k ^ seed) & (H - 1)]   otherwise
+    lane[i] = part[i] % num_lanes
+    slot[i] = #{ j < i : lane[j] == lane[i], valid[j] }  (stable rank)
+    counts[l] = total valid records on lane l
+
+The rank uses the strictly-lower-triangular matmul trick (MXU) with the
+running per-lane counts carried across the sequential grid in a VMEM
+accumulator, exactly as in ``dispatch_count``.
+
+VMEM budget per grid step (block = 256, H = 4096, B <= 1024, L <= 1024):
+  host one-hot 256*4096*4B = 4.0 MiB; heavy one-hot 256*1024*4B = 1.0 MiB;
+  tri 256^2*4B = 0.25 MiB; lane one-hot 256*1024*4B = 1.0 MiB  => ~6.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+ROWS = 2  # 256 records per grid step
+BLK = LANES * ROWS
+
+
+def _fmix32(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _kernel(
+    keys_ref, valid_ref, heavy_keys_ref, heavy_parts_ref, host_ref,
+    part_ref, slot_ref, counts_ref,
+    *, seed: int, num_hosts: int, num_lanes: int,
+):
+    keys = keys_ref[...].reshape(BLK)
+    valid = valid_ref[...].reshape(BLK).astype(jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    # ---- stage 1: key -> partition (one-hot matmul lookup) ----
+    mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
+    host = (mixed & jnp.uint32(num_hosts - 1)).astype(jnp.int32)
+    host_iota = jax.lax.broadcasted_iota(jnp.int32, (BLK, num_hosts), 1)
+    onehot_host = (host[:, None] == host_iota).astype(jnp.float32)
+    table = host_ref[...].reshape(num_hosts).astype(jnp.float32)
+    part_tail = jax.lax.dot_general(
+        onehot_host, table[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+    hk = heavy_keys_ref[...].reshape(-1)
+    hp = heavy_parts_ref[...].reshape(-1).astype(jnp.float32)
+    eq = (keys[:, None] == hk[None, :]).astype(jnp.float32)
+    hit = jnp.sum(eq, axis=1) > 0.0
+    part_heavy = jax.lax.dot_general(
+        eq, hp[:, None], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0]
+    part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
+    part_ref[...] = part.reshape(ROWS, LANES)
+
+    # ---- stage 2: lane rank (triangular prefix matmul, fused in VMEM) ----
+    lane = jax.lax.rem(part, jnp.int32(num_lanes))
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (BLK, num_lanes), 1)
+    onehot = (lane[:, None] == lane_iota).astype(jnp.float32) * valid[:, None]
+
+    r = jax.lax.broadcasted_iota(jnp.int32, (BLK, BLK), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (BLK, BLK), 1)
+    tri = (c < r).astype(jnp.float32)  # strictly lower triangular
+    prefix = jax.lax.dot_general(
+        tri, onehot, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    running = counts_ref[...]  # [1, L] counts from earlier blocks
+    base = jnp.sum(onehot * running, axis=1)
+    rank = jnp.sum(onehot * prefix, axis=1)
+    slot = (base + rank).astype(jnp.int32)
+    slot = jnp.where(valid > 0, slot, -1)
+    slot_ref[...] = slot.reshape(ROWS, LANES)
+    counts_ref[...] = running + jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "num_hosts", "num_lanes", "interpret"))
+def lookup_dispatch(
+    keys: jax.Array,  # int32[n], n % 256 == 0
+    valid: jax.Array,  # bool[n]
+    heavy_keys: jax.Array,  # int32[B] sorted, sentinel padded
+    heavy_parts: jax.Array,  # int32[B]
+    host_to_part: jax.Array,  # int32[H], H a power of two
+    *,
+    seed: int = 0,
+    num_hosts: int = 4096,
+    num_lanes: int,
+    interpret: bool = True,
+):
+    """Returns (part int32[n], slot int32[n] — rank within ``part % num_lanes``,
+    -1 for invalid; counts int32[num_lanes])."""
+    n = keys.shape[0]
+    assert n % BLK == 0, f"pad records to a multiple of {BLK}"
+    assert num_hosts & (num_hosts - 1) == 0, "H must be a power of two"
+    b = heavy_keys.shape[0]
+    keys2d = keys.reshape(n // LANES, LANES)
+    valid2d = valid.astype(jnp.int32).reshape(n // LANES, LANES)
+
+    part, slot, counts = pl.pallas_call(
+        functools.partial(_kernel, seed=seed, num_hosts=num_hosts, num_lanes=num_lanes),
+        grid=(n // BLK,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_lanes), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // LANES, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((n // LANES, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_lanes), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys2d, valid2d, heavy_keys[None, :], heavy_parts[None, :], host_to_part[None, :])
+    return part.reshape(n), slot.reshape(n), counts[0].astype(jnp.int32)

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch_count import BLK as DISPATCH_BLK, dispatch_count
+from repro.kernels.lookup_dispatch import BLK as ROUTE_BLK, lookup_dispatch
 from repro.kernels.partition_apply import KEY_LANES, KEY_ROWS, partition_apply
 from repro.kernels.sketch_update import sketch_update
 
@@ -49,6 +50,26 @@ def count_sketch(keys: jax.Array, valid: jax.Array | None = None, *, depth: int 
     k, n = _pad_to(keys.astype(jnp.int32), _PART_BLK)
     v, _ = _pad_to(valid.astype(jnp.int32), _PART_BLK)
     return sketch_update(k, v.astype(bool), depth=depth, width=width, interpret=_interpret())
+
+
+def route_slots(keys: jax.Array, valid: jax.Array, tables, *, num_hosts: int,
+                seed: int = 0, num_lanes: int):
+    """Fused partition lookup + lane slot (the exchange-plane hot path).
+
+    Returns ``(part[n], slot[n], counts[num_lanes])`` — the slot ranks each
+    valid record within its ``part % num_lanes`` lane.
+    """
+    k, n = _pad_to(keys.astype(jnp.int32), ROUTE_BLK)
+    v, _ = _pad_to(valid.astype(jnp.int32), ROUTE_BLK)
+    b = tables.heavy_keys.shape[0]
+    bpad = (-b) % KEY_LANES
+    hk = jnp.concatenate([tables.heavy_keys, jnp.full(bpad, 2**31 - 1, jnp.int32)]) if bpad else tables.heavy_keys
+    hp = jnp.concatenate([tables.heavy_parts, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_parts
+    part, slot, counts = lookup_dispatch(
+        k, v.astype(bool), hk, hp, tables.host_to_part,
+        seed=seed, num_hosts=num_hosts, num_lanes=num_lanes, interpret=_interpret(),
+    )
+    return part[:n], slot[:n], counts
 
 
 def dispatch_slots(dest: jax.Array, valid: jax.Array | None = None, *, num_parts: int):

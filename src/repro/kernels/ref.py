@@ -20,6 +20,8 @@ def partition_apply_ref(keys, heavy_keys, heavy_parts, host_to_part, *, seed=0, 
     mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
     host = (mixed & jnp.uint32(num_hosts - 1)).astype(jnp.int32)
     part = host_to_part[host]
+    if heavy_keys.shape[0] == 0:  # no explicit routing table
+        return part.astype(jnp.int32)
     idx = jnp.clip(jnp.searchsorted(heavy_keys, keys), 0, heavy_keys.shape[0] - 1)
     hit = heavy_keys[idx] == keys
     return jnp.where(hit, heavy_parts[idx], part).astype(jnp.int32)
@@ -34,6 +36,16 @@ def sketch_update_ref(keys, valid, *, depth=4, width=2048):
         row = jnp.zeros(width, jnp.float32).at[col].add(valid.astype(jnp.float32))
         rows.append(row)
     return jnp.stack(rows)
+
+
+def lookup_dispatch_ref(keys, valid, heavy_keys, heavy_parts, host_to_part, *,
+                        seed=0, num_hosts=4096, num_lanes):
+    """Fused twin: partition lookup + lane slot in one call (bit-identical
+    to ``kernels.lookup_dispatch``)."""
+    part = partition_apply_ref(keys, heavy_keys, heavy_parts, host_to_part,
+                               seed=seed, num_hosts=num_hosts)
+    slot, counts = dispatch_count_ref(part % num_lanes, valid, num_parts=num_lanes)
+    return part, slot, counts
 
 
 def dispatch_count_ref(dest, valid, *, num_parts):

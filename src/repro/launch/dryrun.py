@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.base import SHAPES, cells_for
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch.mesh import dp_axes_of, make_production_mesh
@@ -87,7 +88,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, opts: ShardingOpt
     pshard = param_shardings(params_abs, mesh, opts, decode=shape.kind == "decode")
 
     state_bytes = bytes_per_device(params_abs, pshard)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         batch_axes = tuple(mesh.axis_names) if opts.pure_dp else None
         if shape.kind == "train":
             batch_abs = model.input_specs(cfg, shape, pol)

@@ -19,9 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.models import transformer
 from repro.models.attention import head_layout
@@ -68,8 +68,10 @@ def make_pp_loss(cfg: ArchConfig, pol: Policy, mesh: Mesh, *, microbatches: int)
         pos = transformer._positions(cfg, mb, s, 0)
         ticks = m + n_stages - 1
         buf_in = jnp.zeros((mb, s, d), pol.compute_dtype)
-        losses = jnp.zeros((), jnp.float32)
-        denom = jnp.zeros((), jnp.float32)
+        # rank-1 carries: old shard_map's transpose rank-check rejects
+        # rank-0 residuals
+        losses = jnp.zeros((1,), jnp.float32)
+        denom = jnp.zeros((1,), jnp.float32)
 
         def tick(t, carry):
             buf_in, losses, denom = carry
@@ -102,24 +104,28 @@ def make_pp_loss(cfg: ArchConfig, pol: Policy, mesh: Mesh, *, microbatches: int)
             0, ticks, tick, (buf_in, losses, denom))
         total = jax.lax.psum(losses, "pod")  # only last stage contributed
         cnt = jax.lax.psum(denom, "pod")
+        # emit the (replicated) loss as a pod-mapped [1] output: transposing
+        # an unmapped P() output through jax.grad is unsupported on older
+        # shard_map, and the mean outside is identical math
         return total / jnp.maximum(cnt, 1.0)
 
     mapped = shard_map(
         pp_body,
         mesh=mesh,
         in_specs=(P("pod"), P(), P(), P(), P(), P(), P()),
-        out_specs=P(),
+        out_specs=P("pod"),
         axis_names=frozenset({"pod"}),
         check_vma=False,
     )
 
     def loss_fn(stacked_params, batch):
-        return mapped(
+        per_stage = mapped(
             {"blocks": stacked_params["blocks"]},
             stacked_params["embed"]["tok"],
             stacked_params.get("lm_head", stacked_params["embed"]["tok"]),
             stacked_params["final_norm"],
             batch["tokens"], batch["labels"], batch["mask"],
         )
+        return jnp.mean(per_stage)
 
     return loss_fn

@@ -3,31 +3,34 @@
 The token -> expert exchange *is* the paper's keyed shuffle: keys are expert
 ids, partitions are EP shards, and the routing table is the KIP placement
 (``inv_place``: logical expert -> physical slot).  The layer runs under
-``shard_map`` with manual ``all_to_all``s — the same capacity-padded
-bucketize machinery as ``repro.core.shuffle`` — and emits per-expert load
-counts as the DRW histogram, consumed by ``repro.moe.kip_placement``.
+``shard_map`` on the unified exchange plane (``repro.exchange``) — the same
+capacity-padded ``route -> bucketize -> all_to_all -> unpack`` primitive as
+``repro.core.shuffle`` — and emits per-expert load counts as the DRW
+histogram, consumed by ``repro.moe.kip_placement``.
 
 Two evaluation paths:
 
 * ``moe_ref``     — dense oracle (every expert on every token, exact
   combine); used by tests and tiny CPU configs.
-* ``moe_apply``   — the distributed dispatch (shard_map over (dp..., tp)).
+* ``moe_apply``   — the distributed dispatch (shard_map over (dp..., tp)):
+  hop 1 ships records to the owning EP shard (a cross-shard exchange),
+  hop 2 buckets received records into per-expert buffers (a local exchange),
+  and the combine rides the same lanes back (``backhaul`` + ``take_from``).
   With generous capacity its output equals ``moe_ref`` exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import MoESpec
-from repro.kernels import ref as kref
+from repro.exchange import ExchangeSpec, Payload, make_exchange, take_from
 from repro.models.modules import Array, Policy, act_fn, init_ffn, no_shard, normal
 
 __all__ = ["init_moe", "moe_ref", "moe_apply", "MoEOut"]
@@ -140,38 +143,28 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
         dev = phys // e_loc
         eloc = phys % e_loc
 
-        # hop 1: ship records to the owning EP shard (capacity-padded lanes)
+        # hop 1: ship records to the owning EP shard (cross-shard exchange)
         c1 = max(8, int(np.ceil(cf * tn * k / ntp / 8.0) * 8))
-        slot, _ = kref.dispatch_count_ref(dev, jnp.ones_like(dev, bool), num_parts=ntp)
-        ok = slot < c1
-        overflow = jnp.sum(~ok).astype(jnp.float32)
-        s_ = jnp.where(ok, slot, c1)
-        bx = jnp.zeros((ntp, c1, d), cd).at[dev, s_].set(t[rec_tok].astype(cd), mode="drop")
-        be = jnp.full((ntp, c1), -1, jnp.int32).at[dev, s_].set(eloc, mode="drop")
-        rx = jax.lax.all_to_all(bx, tp, 0, 0, tiled=True)
-        re = jax.lax.all_to_all(be, tp, 0, 0, tiled=True)
+        ship = make_exchange(ExchangeSpec(num_lanes=ntp, capacity=c1, axis=tp))
+        res1 = ship(
+            dev,
+            jnp.ones_like(dev, bool),
+            [Payload(t[rec_tok].astype(cd), 0), Payload(eloc, 0)],
+        )
+        rvalid, (rxf, ref_) = res1.unpack()
 
         # hop 2: bucket received records into local per-expert buffers
-        rxf = rx.reshape(-1, d)
-        ref_ = re.reshape(-1)
-        rvalid = ref_ >= 0
         c2 = max(8, int(np.ceil(cf * tn * k / e_loc / 8.0) * 8))
-        slot2, _ = kref.dispatch_count_ref(jnp.where(rvalid, ref_, 0), rvalid, num_parts=e_loc)
-        ok2 = rvalid & (slot2 >= 0) & (slot2 < c2)
-        overflow = overflow + jnp.sum(rvalid & (slot2 >= c2)).astype(jnp.float32)
-        s2 = jnp.where(ok2, slot2, c2)
-        ebuf = jnp.zeros((e_loc, c2, d), cd).at[jnp.where(rvalid, ref_, 0), s2].set(
-            rxf, mode="drop"
-        )
+        local = make_exchange(ExchangeSpec(num_lanes=e_loc, capacity=c2))
+        res2 = local.bucketize(ref_, rvalid, [Payload(rxf, 0)])
+        overflow = (res1.send.overflow + res2.send.overflow).astype(jnp.float32)
 
-        eout = _expert_ffn(wi.astype(cd), wo.astype(cd), ebuf, ffn_kind)
+        eout = _expert_ffn(wi.astype(cd), wo.astype(cd), res2.payloads[0], ffn_kind)
 
         # return trip: gather each record's result, ship back, combine
-        back = jnp.where(
-            ok2[:, None], eout[jnp.where(rvalid, ref_, 0), jnp.where(ok2, slot2, 0)], 0.0
-        ).reshape(ntp, c1, d)
-        ret = jax.lax.all_to_all(back, tp, 0, 0, tiled=True)
-        val = ret[dev, jnp.where(ok, slot, 0)] * ok[:, None]
+        back = take_from(eout, res2.send).reshape(ntp, c1, d)
+        ret = ship.backhaul(back)
+        val = take_from(ret, res1.send)
         y = jnp.zeros((tn, d), cd).at[rec_tok].add(val * rec_w[:, None].astype(cd))
 
         if shared is not None:
@@ -236,19 +229,17 @@ def moe_apply_replicated(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: P
         mine = (phys // e_loc) == me
         eloc = jnp.where(mine, phys % e_loc, 0)
 
+        # local exchange: only this shard's (token, expert) pairs get slots
         c2 = max(8, int(np.ceil((pol.moe_capacity_factor or spec.capacity_factor)
                                 * tn * k / max(e_loc, 1) / 8.0) * 8))
-        slot2, _ = kref.dispatch_count_ref(eloc, mine, num_parts=e_loc)
-        ok2 = mine & (slot2 >= 0) & (slot2 < c2)
-        overflow = jnp.sum(mine & (slot2 >= c2)).astype(jnp.float32)
-        s2 = jnp.where(ok2, slot2, c2)
-        ebuf = jnp.zeros((e_loc, c2, d), cd).at[eloc, s2].set(
-            t[rec_tok].astype(cd), mode="drop")
+        local = make_exchange(ExchangeSpec(num_lanes=e_loc, capacity=c2))
+        res = local.bucketize(eloc, mine, [Payload(t[rec_tok].astype(cd), 0)])
+        overflow = res.send.overflow.astype(jnp.float32)
         # F-sliced expert FFN: wi [e_loc, d, g, F/dp], wo [e_loc, F/dp, d]
-        h = jnp.einsum("ecd,edgf->ecgf", ebuf, wi.astype(cd))
+        h = jnp.einsum("ecd,edgf->ecgf", res.payloads[0], wi.astype(cd))
         h = a(h[:, :, 0]) * h[:, :, 1] if wi.shape[2] == 2 else a(h[:, :, 0])
         eout = jnp.einsum("ecf,efd->ecd", h, wo.astype(cd))  # partial over F
-        val = eout[eloc, jnp.where(ok2, slot2, 0)] * ok2[:, None]
+        val = take_from(eout, res.send)
         y = jnp.zeros((tn, d), cd).at[rec_tok].add(val * rec_w[:, None].astype(cd))
         if shared is not None:
             # shared expert F-sliced over model; identical on every data

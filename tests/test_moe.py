@@ -92,6 +92,7 @@ DISPATCH_SCRIPT = textwrap.dedent(
     from repro.configs.base import MoESpec
     from repro.models.modules import Policy
     from repro.moe.layer import init_moe, moe_ref, moe_apply
+    from repro.compat import set_mesh
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     spec = MoESpec(num_experts=8, top_k=2, d_ff_expert=32, shared_expert=True,
@@ -105,7 +106,7 @@ DISPATCH_SCRIPT = textwrap.dedent(
     want = moe_ref(p, x, spec, "swiglu", pol_ref, inv)
 
     pol = Policy(mesh=mesh, dp_axes=("data",), tp_axis="model")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P("data", "model", None)))
         ps = jax.device_put(p, NamedSharding(mesh, P()))
         ps["wi"] = jax.device_put(p["wi"], NamedSharding(mesh, P("model")))
@@ -120,7 +121,7 @@ DISPATCH_SCRIPT = textwrap.dedent(
     perm = jnp.asarray([7, 1, 2, 3, 4, 5, 6, 0], jnp.int32)
     inv2 = jnp.zeros(8, jnp.int32).at[perm].set(jnp.arange(8, dtype=jnp.int32))
     from repro.moe.kip_placement import apply_placement_to_weights
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         p3 = dict(ps)
         p3["wi"] = jnp.take(ps["wi"], perm, axis=0)
         p3["wo"] = jnp.take(ps["wo"], perm, axis=0)

@@ -15,6 +15,7 @@ SCRIPT = textwrap.dedent("""
     from repro.models import model
     from repro.models.modules import Policy
     from repro.launch.pipeline import make_pp_loss, stack_stage_params
+    from repro.compat import set_mesh
     import dataclasses
 
     cfg = reduce_for_smoke(get_config("stablelm-1.6b"))
@@ -32,7 +33,7 @@ SCRIPT = textwrap.dedent("""
 
     mesh = jax.make_mesh((2,), ("pod",))
     stacked = stack_stage_params(cfg, params, 2)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pp_loss = make_pp_loss(cfg, pol, mesh, microbatches=2)
         got = jax.jit(pp_loss)(stacked, batch)
     np.testing.assert_allclose(float(got), float(want), rtol=2e-4)
