@@ -12,6 +12,9 @@ from repro.core import Histogram, kip_update, uniform_partitioner
 from repro.data.generators import zipf_keys
 
 
+SMOKE = dict(n=2_048)  # CI bench-smoke profile
+
+
 def run(n: int = 8192):
     rows = []
     stream = zipf_keys(n, num_keys=2_000, exponent=1.2, seed=0)

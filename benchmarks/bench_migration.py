@@ -21,6 +21,9 @@ BATCH = 100_000
 WORKERS = 4  # exchange-plane lane granularity (partition -> worker = p % W)
 
 
+SMOKE = dict(reps=1)  # CI bench-smoke profile
+
+
 def run(reps: int = 3):
     rows = []
     results: dict[str, tuple] = {}

@@ -16,6 +16,9 @@ WORKERS = 10
 PARTS = [10, 20, 30, 50, 80, 120]
 
 
+SMOKE = dict(n_records=50_000)  # CI bench-smoke profile
+
+
 def run(n_records: int = 400_000):
     rows = []
     # exponent chosen so N*f1 spans ~0.4..5 across the partition sweep (the

@@ -21,6 +21,9 @@ def _build(method: str, hist: Histogram, n: int, lam: float = 2.0):
     return update(prev, hist.top(int(lam * n)), n)
 
 
+SMOKE = dict(reps=1, n_records=20_000, num_keys=5_000)  # CI bench-smoke profile
+
+
 def run(reps: int = 5, n_records: int = 200_000, num_keys: int = 100_000):
     rows = []
     for n in PARALLELISM:

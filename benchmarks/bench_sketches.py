@@ -15,6 +15,9 @@ def _recall(est: Histogram, exact: Histogram, k: int) -> float:
     return len(a & b) / max(len(b), 1)
 
 
+SMOKE = dict(n=20_000, num_keys=5_000)  # CI bench-smoke profile
+
+
 def run(n: int = 200_000, num_keys: int = 50_000, k: int = 40):
     rows = []
     stream = zipf_keys(n, num_keys=num_keys, exponent=1.1, seed=0)

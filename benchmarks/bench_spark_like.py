@@ -21,6 +21,9 @@ WORKERS = 35
 EXPONENTS = [0.6, 0.8, 1.0, 1.2, 1.6, 2.0]
 
 
+SMOKE = dict(n_records=50_000, num_keys=10_000)  # CI bench-smoke profile
+
+
 def run(n_records: int = 500_000, num_keys: int = 100_000):
     rows = []
     speedups = {}
@@ -38,8 +41,11 @@ def run(n_records: int = 500_000, num_keys: int = 100_000):
     # DR is most beneficial at moderate skew (paper Fig. 4): the peak sits
     # strictly inside the sweep, not at either end
     peak = max(speedups, key=speedups.get)
-    assert peak not in (EXPONENTS[0], EXPONENTS[-1]), speedups
-    assert speedups[peak] > 1.2, speedups
+    # paper-property gates need realistic N: below it the per-partition
+    # scheduling overhead drowns the skew signal (smoke runs skip them)
+    if n_records >= 500_000:
+        assert peak not in (EXPONENTS[0], EXPONENTS[-1]), speedups
+        assert speedups[peak] > 1.2, speedups
     rows.append(("fig4/peak_speedup", speedups[peak],
                  f"at exp={peak}; paper: 1.5-2.0 at moderate exponents"))
     return rows

@@ -1,13 +1,17 @@
 """Fig. 6 — relative streaming-throughput increase from DR vs. Zipf
 exponent, measured on the real micro-batch runtime (StreamingJob on the
-local mesh; stateful count reducer, matching the paper's Flink setup)."""
+local mesh; stateful count reducer, matching the paper's Flink setup).
+Also measures the elastic-resize cost: rows shipped + wall time for a
+grow 4->8 and a shrink 8->4, next to the plain migration rows."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.core.drm import DRConfig
 from repro.core.streaming import StreamingJob
-from repro.data.generators import drifting_zipf
+from repro.data.generators import drifting_zipf, zipf_keys
 
 EXPONENTS = [1.0, 1.3, 1.6, 2.0]
 
@@ -18,6 +22,9 @@ def _worker_time(job_metrics, per_record_us=1.0, per_batch_overhead_us=2000.0):
     for m in job_metrics:
         t += m.worker_imbalance * per_record_us + per_batch_overhead_us * 1e-3
     return t
+
+
+SMOKE = dict(batches=3, batch_size=4_096)  # CI bench-smoke profile
 
 
 def run(batches: int = 6, batch_size: int = 16_384):
@@ -52,4 +59,35 @@ def run(batches: int = 6, batch_size: int = 16_384):
             rows.append((f"fig6/migration_rows_fraction/exp={exp}",
                          mig_rows / reparts / full,
                          f"{reparts} repartitions, full-state a2a = 1"))
+    rows.extend(_resize_cost(4, 8, batch_size, state_capacity))
+    rows.extend(_resize_cost(8, 4, batch_size, state_capacity))
     return rows
+
+
+def _resize_cost(base_n: int, target_n: int, batch_size: int, state_capacity: int):
+    """Elastic-resize cost: exchange rows + wall time for one grow/shrink.
+
+    The resize batch pays the state migration *and* the shuffle-step rebuild
+    (jit for the new lane count); a steady-state batch is reported alongside
+    so the delta is visible."""
+    job = StreamingJob(
+        num_partitions=base_n,
+        state_capacity=state_capacity,
+        dr=DRConfig(imbalance_trigger=1e9),  # isolate the resize: no plain DR
+    )
+    warm = [zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=s) for s in (20, 21)]
+    for b in warm:
+        steady = job.process_batch(b)
+    job.resize(target_n)
+    t0 = time.perf_counter()
+    m = job.process_batch(zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=22))
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    assert m.resized, m.reason
+    tag = f"grow_{base_n}to{target_n}" if target_n > base_n else f"shrink_{base_n}to{target_n}"
+    full = job.num_workers * state_capacity
+    return [
+        (f"fig6/resize_rows/{tag}", m.migration_rows,
+         f"exchange buffer rows (plan {m.migration_plan_rows}; full-state a2a {full})"),
+        (f"fig6/resize_wall_ms/{tag}", wall_ms,
+         f"resize batch incl. step rebuild (steady batch {steady.wall_time_s * 1e3:.1f} ms)"),
+    ]

@@ -33,6 +33,9 @@ def _weighted_hist(keys: np.ndarray, cost: np.ndarray, top: int) -> Histogram:
     return Histogram.from_counts(uniq, w).top(top)
 
 
+SMOKE = dict(n_pages=20_000)  # CI bench-smoke profile
+
+
 def run(n_pages: int = 200_000):
     rows = []
     # --- crawl rounds: host universe + dynamic-content skew grow per round
@@ -63,8 +66,10 @@ def run(n_pages: int = 200_000):
     rows.append(("fig8/mean_crawl_speedup", float(np.mean(speedups)),
                  "paper: 69.1 -> 24.9 min (2.8x) at round 7; qualitative — "
                  "absolute gain depends on executor scheduling specifics"))
-    assert np.mean(speedups) > 1.08, speedups
-    assert max(speedups) > 1.2, speedups
+    # paper-property gates need realistic N (smoke runs skip them)
+    if n_pages >= 200_000:
+        assert np.mean(speedups) > 1.08, speedups
+        assert max(speedups) > 1.2, speedups
 
     # --- NER app: streaming (pinned operators), heavy host-keyed records.
     # The paper reports ~6x; a linear straggler model reproduces the

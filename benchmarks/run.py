@@ -1,9 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (value column is the figure's
-metric: imbalance ratio / speedup / us, per the row name)."""
+metric: imbalance ratio / speedup / us, per the row name).
+
+    python -m benchmarks.run [only] [--smoke] [--out bench.csv]
+
+``only`` filters modules by substring.  ``--smoke`` runs each module's
+small-N profile (its module-level ``SMOKE`` kwargs) — the CI gate profile.
+``--out`` additionally writes the CSV rows to a file (CI artifact).
+
+A module that raises prints a ``<name>/FAILED`` row *and* makes the process
+exit nonzero, so failures gate CI instead of hiding in the CSV.
+"""
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -21,29 +32,52 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
     import importlib
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
-    failures = []
+    ap = argparse.ArgumentParser(description="paper benchmark harness")
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-N profile (each module's SMOKE kwargs)")
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV rows to this file")
+    args = ap.parse_args(argv)
+
+    lines: list[str] = []
+
+    def emit(line: str) -> None:
+        lines.append(line)
+        print(line)
+
+    emit("name,us_per_call,derived")
+    failures: list[tuple[str, BaseException]] = []
     for name in MODULES:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
-        mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         try:
-            rows = mod.run()
+            mod = importlib.import_module(f"benchmarks.{name}")
+            kwargs = getattr(mod, "SMOKE", {}) if args.smoke else {}
+            rows = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
-            print(f"{name}/FAILED,0,{type(e).__name__}: {e}")
+            emit(f"{name}/FAILED,0,{type(e).__name__}: {e}")
             continue
         for row_name, value, derived in rows:
-            print(f"{row_name},{value:.6g},{derived}")
+            emit(f"{row_name},{value:.6g},{derived}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
     if failures:
-        raise SystemExit(f"{len(failures)} benchmark module(s) failed: {failures}")
+        for name, e in failures:
+            print(f"FAILED {name}: {type(e).__name__}: {e}", file=sys.stderr)
+        print(f"{len(failures)} benchmark module(s) failed", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,6 +1,7 @@
 """Stateful streaming word count under concept drift, with DR vs without —
 plus a mid-stream crash + checkpoint restore (the paper's long-running
-stateful job scenario).
+stateful job scenario) and an elastic grow-under-hotspot / shrink-when-idle
+phase (the same safe-point mechanism resizing the worker count itself).
 
     PYTHONPATH=src python examples/streaming_wordcount.py
 """
@@ -8,7 +9,7 @@ import numpy as np
 
 from repro.core.drm import DRConfig
 from repro.core.streaming import StreamingJob
-from repro.data.generators import drifting_zipf
+from repro.data.generators import drifting_zipf, zipf_keys
 
 
 def make_job(dr_enabled: bool) -> StreamingJob:
@@ -51,3 +52,24 @@ if snap is not None:
 imb_dr = np.mean([m.imbalance for m in job.metrics[2:]])
 imb_no = np.mean([m.imbalance for m in base.metrics[2:]])
 print(f"\nmean imbalance: {imb_no:.2f} (hash) -> {imb_dr:.2f} (DR)")
+
+print("\n=== elastic: grow under hotspot, shrink when idle ===")
+elastic = StreamingJob(
+    num_partitions=4,
+    state_capacity=32_768,
+    dr=DRConfig(elastic=True, min_partitions=4, max_partitions=8,
+                grow_trigger=1.6, shrink_trigger=1.3, resize_patience=2,
+                imbalance_trigger=1.2, migration_cost_weight=0.1),
+)
+rng = np.random.default_rng(11)
+hotspot = [zipf_keys(16_384, num_keys=3_000, exponent=1.5, seed=s) for s in range(4)]
+idle = [rng.integers(0, 200_000, 16_384) for _ in range(6)]
+for b in hotspot + idle:
+    m = elastic.process_batch(b)
+    mark = f"  <-- {m.reason}" if m.resized else ""
+    print(f"batch {m.batch:2d} imbalance {m.imbalance:.2f} "
+          f"partitions {m.num_partitions}{mark}")
+all_keys = np.concatenate(hotspot + idle)
+k = int(np.unique(all_keys)[3])
+assert elastic.state_count(k) == float((all_keys == k).sum())
+print("per-key counts exact across both resizes  OK")

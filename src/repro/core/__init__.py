@@ -27,6 +27,7 @@ from repro.core.partitioner import (
     kip_update,
     load_imbalance,
     lookup_device,
+    resize_partitioner,
     uniform_partitioner,
 )
 
@@ -50,6 +51,7 @@ __all__ = [
     "plan_migration",
     "readj_update",
     "redist_update",
+    "resize_partitioner",
     "scan_update",
     "uniform_partitioner",
 ]

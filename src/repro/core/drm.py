@@ -16,7 +16,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.histogram import CounterSketch, Histogram
-from repro.core.partitioner import Partitioner, expected_loads, kip_update
+from repro.core.partitioner import Partitioner, expected_loads, kip_update, resize_partitioner
 
 __all__ = ["DRConfig", "DRMaster", "DRDecision"]
 
@@ -34,6 +34,14 @@ class DRConfig:
     mode: str = "stream"             # "stream" | "batch" (replay-once)
     tight: bool = True               # waterfilled host re-binning (beyond-paper;
                                      # False = faithful Algorithm 1 packing)
+    # -- elastic resize: grow/shrink the partition (logical worker) count --
+    elastic: bool = False            # let the DRM decide to resize
+    min_partitions: int = 1          # shrink floor (also floored at num_workers)
+    max_partitions: int = 256        # grow ceiling
+    grow_trigger: float = 1.5        # sustained imbalance above this => grow
+    shrink_trigger: float = 1.05     # sustained imbalance below this => shrink
+    resize_patience: int = 2         # consecutive safe points before acting
+    resize_factor: int = 2           # grow/shrink multiplies/divides by this
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +62,10 @@ class DRMaster:
         self.batches_seen = 0
         self.last_repartition = -(10**9)
         self.history: list[dict] = []
+        # elastic-resize policy state: how many consecutive safe points the
+        # grow/shrink condition has held (the "sustained" part of the policy)
+        self.grow_streak = 0
+        self.shrink_streak = 0
 
     # -- DRW ingestion ------------------------------------------------------
     def observe(self, hist_keys: np.ndarray, hist_counts: np.ndarray,
@@ -115,6 +127,78 @@ class DRMaster:
     def _no(self, measured: float, reason: str) -> DRDecision:
         return DRDecision(False, self.partitioner, measured, measured, 0.0, reason)
 
+    # -- elastic resize policy ----------------------------------------------
+    def decide_resize(self, loads: np.ndarray, *, num_workers: int = 1) -> int | None:
+        """Policy hook: should the job change its partition count?
+
+        Called at checkpoint safe points with measured per-partition loads.
+        Returns the new partition count, or ``None`` to keep the topology.
+        The rule is sustained-imbalance vs. worker count: ``resize_patience``
+        consecutive safe points above ``grow_trigger`` grow the topology by
+        ``resize_factor`` (a hotspot KIP cannot spread over the current bins
+        gets more bins); the same patience below ``shrink_trigger`` shrinks
+        it (an idle/uniform stream does not pay for over-partitioning).
+        ``num_workers`` floors the shrink — never fewer partitions than
+        physical workers.
+        """
+        cfg = self.config
+        if not cfg.elastic:
+            return None
+        loads = np.asarray(loads, np.float64)
+        n = self.partitioner.num_partitions
+        imb = float(loads.max() / max(loads.mean(), 1e-12)) if loads.sum() else 1.0
+        floor = max(cfg.min_partitions, num_workers)
+        if imb >= cfg.grow_trigger and n < cfg.max_partitions:
+            self.grow_streak += 1
+            self.shrink_streak = 0
+            if self.grow_streak >= cfg.resize_patience:
+                self.grow_streak = 0
+                return min(n * cfg.resize_factor, cfg.max_partitions)
+        elif imb <= cfg.shrink_trigger and n > floor:
+            self.shrink_streak += 1
+            self.grow_streak = 0
+            if self.shrink_streak >= cfg.resize_patience:
+                self.shrink_streak = 0
+                return max(n // cfg.resize_factor, floor)
+        else:
+            self.grow_streak = self.shrink_streak = 0
+        return None
+
+    def replan_resize(self, num_partitions: int) -> Partitioner:
+        """Re-plan the partitioner cross-size and install it at a safe point.
+
+        The one resize re-planning path shared by ``StreamingJob`` and
+        ``DRScheduler``: heavy keys come from the current sketch (scaled to
+        the new ``lam * n`` budget), the heavy-table width follows the new
+        topology, and the swap is recorded via :meth:`note_resize`.
+        """
+        cfg = self.config
+        n = int(num_partitions)
+        hist = self.sketch.histogram(top_b=int(np.ceil(cfg.lam * n)))
+        heavy_cap = int(np.ceil(max(1.0, cfg.lam * n) / 128.0) * 128)
+        new = resize_partitioner(self.partitioner, n, hist, eps=cfg.eps,
+                                 heavy_capacity=heavy_cap, tight=cfg.tight)
+        self.note_resize(new)
+        return new
+
+    def note_resize(self, new: Partitioner) -> None:
+        """Install a resized partitioner at a safe point (DRM bookkeeping).
+
+        Counts as this safe point's decision: advances ``batches_seen`` and
+        ``last_repartition`` so the safe-point spacing applies to resizes
+        exactly as to plain repartitions.
+        """
+        old_n = self.partitioner.num_partitions
+        self.batches_seen += 1
+        self.partitioner = new
+        self.last_repartition = self.batches_seen
+        self.grow_streak = self.shrink_streak = 0
+        self.history.append({
+            "batch": self.batches_seen,
+            "resize": (old_n, new.num_partitions),
+            "reason": f"resize {old_n}->{new.num_partitions}",
+        })
+
     # -- checkpoint integration ----------------------------------------------
     def snapshot(self) -> dict:
         p = self.partitioner
@@ -130,6 +214,8 @@ class DRMaster:
             "sketch_total": np.float64(self.sketch.total),
             "batches_seen": np.int64(self.batches_seen),
             "last_repartition": np.int64(self.last_repartition),
+            "grow_streak": np.int64(self.grow_streak),
+            "shrink_streak": np.int64(self.shrink_streak),
         }
 
     @classmethod
@@ -149,4 +235,7 @@ class DRMaster:
         drm.batches_seen = int(snap["batches_seen"])
         if "last_repartition" in snap:  # older snapshots predate this field
             drm.last_repartition = int(snap["last_repartition"])
+        # elastic-policy streaks (older snapshots predate these fields)
+        drm.grow_streak = int(snap.get("grow_streak", 0))
+        drm.shrink_streak = int(snap.get("shrink_streak", 0))
         return drm

@@ -28,10 +28,19 @@ class MigrationPlan:
     weights: np.ndarray       # float64[M] state size per moved key
     transfer: np.ndarray      # float64[N, N] bytes moved src->dst
     relative_migration: float # moved / total state weight
+    # cross-size (elastic resize) bookkeeping: the plan's src axis spans the
+    # old topology, the dst axis the new one; ``transfer`` is padded square
+    # to max(num_src, num_dst) so worker folding works either way.
+    num_src: int = 0          # old partition count (0 on legacy plans)
+    num_dst: int = 0          # new partition count
 
     @property
     def num_moves(self) -> int:
         return len(self.keys)
+
+    @property
+    def is_resize(self) -> bool:
+        return bool(self.num_src and self.num_dst and self.num_src != self.num_dst)
 
 
 def plan_migration(
@@ -40,7 +49,13 @@ def plan_migration(
     live_keys: np.ndarray,
     state_weights: np.ndarray | None = None,
 ) -> MigrationPlan:
-    """Diff two partitioners over the live key set."""
+    """Diff two partitioners over the live key set.
+
+    ``old`` and ``new`` may have different partition counts (elastic
+    resize): the transfer matrix is padded square to the larger topology,
+    and every key whose partition changed under the new lookup moves —
+    including keys folded off removed partitions on a shrink.
+    """
     live_keys = np.asarray(live_keys, np.int64)
     if state_weights is None:
         state_weights = np.ones(len(live_keys))
@@ -62,6 +77,8 @@ def plan_migration(
         weights=state_weights[moved],
         transfer=transfer,
         relative_migration=rel,
+        num_src=old.num_partitions,
+        num_dst=new.num_partitions,
     )
 
 

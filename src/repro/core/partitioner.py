@@ -25,7 +25,13 @@ import numpy as np
 from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL, hash_to_host
 from repro.core.histogram import Histogram
 
-__all__ = ["PartitionerTables", "Partitioner", "uniform_partitioner", "kip_update"]
+__all__ = [
+    "PartitionerTables",
+    "Partitioner",
+    "uniform_partitioner",
+    "kip_update",
+    "resize_partitioner",
+]
 
 
 class PartitionerTables(NamedTuple):
@@ -239,6 +245,34 @@ def kip_update(
 
     hk, hp = _pad_heavy(keys.astype(np.int32), heavy_parts, max(cap, b))
     return Partitioner(n, hk, hp, host_to_part.astype(np.int32), seed)
+
+
+def resize_partitioner(
+    prev: Partitioner,
+    num_partitions: int,
+    hist: Histogram | None = None,
+    *,
+    eps: float = 0.01,
+    heavy_capacity: int | None = None,
+    tight: bool = True,
+) -> Partitioner:
+    """Elastic grow/shrink: re-plan ``prev`` for a different partition count.
+
+    This is :func:`kip_update` with ``num_partitions != prev.num_partitions``
+    — shrink folds removed partitions (``p % n``), grow relies on the host
+    re-binning (waterfill under ``tight``) to populate the new partitions —
+    plus the degenerate case of a resize *before any histogram exists*: an
+    empty histogram still re-bins hosts, so every partition receives hash
+    traffic immediately after the resize.
+    """
+    n = int(num_partitions)
+    if n < 1:
+        raise ValueError(f"num_partitions must be >= 1, got {n}")
+    if hist is None:
+        hist = Histogram(np.zeros(0, np.int64), np.zeros(0), 0.0)
+    return kip_update(
+        prev, hist, num_partitions=n, eps=eps, heavy_capacity=heavy_capacity, tight=tight
+    )
 
 
 # ---------------------------------------------------------------------------

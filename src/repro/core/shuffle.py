@@ -58,7 +58,13 @@ def make_shuffle_step(
     seed: int = 0,
     axis: str = "data",
 ):
-    """Build the jitted shuffle step for a fixed mesh/capacity."""
+    """Build the jitted shuffle step for a fixed mesh/capacity/topology.
+
+    An elastic resize rebuilds the step: ``num_partitions`` fixes the loads
+    vector width, so the new topology needs a new closure (the migrate step
+    does *not* — it routes at worker granularity, see
+    :func:`make_migrate_step`).
+    """
     num_workers = mesh.shape[axis]
     ex = make_exchange(ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis))
 
@@ -122,6 +128,7 @@ def make_migrate_step(
     lane_capacity: int | None = None,
     seed: int = 0,
     axis: str = "data",
+    spec: ExchangeSpec | None = None,
 ):
     """Jitted operator-state migration for a partitioner swap.
 
@@ -131,11 +138,18 @@ def make_migrate_step(
     pass ``migration_capacity(plan, num_workers=W)`` to size the exchange to
     the planned peak transfer x slack instead of the full state table
     (defaults to ``state_capacity``, the correctness-first upper bound).
+    ``spec`` overrides the derived :class:`ExchangeSpec` entirely (the
+    elastic-resize path re-derives the shuffle's spec).  The migrate step
+    routes at *worker* granularity (``lookup % W``), so one step serves any
+    partition count — a resize migration reuses the same jit cache.
     Returns the kept state + received rows + relative-migration metric.
     """
     num_workers = mesh.shape[axis]
-    cap = state_capacity if lane_capacity is None else min(lane_capacity, state_capacity)
-    ex = make_exchange(ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis))
+    if spec is None:
+        cap = state_capacity if lane_capacity is None else min(lane_capacity, state_capacity)
+        spec = ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis)
+    ex = make_exchange(spec)
+    cap = spec.capacity
 
     def _local(new_tables, state_keys, state_vals):
         # state tables arrive stacked [1, S] / [1, S, D] per shard

@@ -17,6 +17,17 @@ Both the shuffle and the migration ride the unified exchange plane
 planned peak transfer x slack instead of ``W * state_capacity`` rows.  Lane
 capacities are rounded up to powers of two so repeated repartitions reuse a
 handful of jitted migrate steps instead of recompiling per plan.
+
+**Elastic resize** is the same mechanism one level up: changing the *number*
+of partitions (the job's logical worker count) instead of their contents.
+``resize(n)`` requests it explicitly; with ``DRConfig(elastic=True)`` the
+DRM's ``decide_resize`` policy requests it on sustained imbalance.  Either
+way it fires only at a checkpoint safe point: the partitioner is re-planned
+cross-size (``DRMaster.replan_resize`` — shrink folds removed partitions,
+grow re-bins hosts onto the new ones), the state ships through a migrate
+step whose lanes are sized by the *cross-size* plan, the shuffle step is
+rebuilt for the new topology, and the new topology lands in
+``BatchMetrics`` and snapshots so a restore resumes resized.
 """
 from __future__ import annotations
 
@@ -35,6 +46,7 @@ from repro.core.migration import migration_capacity, plan_migration
 from repro.core.partitioner import Partitioner, uniform_partitioner
 from repro.core.shuffle import make_migrate_step, make_shuffle_step
 from repro.core.state import empty_state, merge_into
+from repro.exchange import ExchangeSpec
 
 __all__ = ["StreamingJob", "BatchMetrics"]
 
@@ -51,6 +63,9 @@ class BatchMetrics:
     wall_time_s: float
     reason: str
     migration_rows: int = 0     # rows of all-to-all buffer a repartition exchanged
+    resized: bool = False       # an elastic resize fired at this safe point
+    num_partitions: int = 0     # topology after this batch (post-resize)
+    migration_plan_rows: int = 0  # migration_capacity() of the plan (pre-pow2)
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -98,8 +113,9 @@ class StreamingJob:
         )
         self.drm = DRMaster(part, cfg)
         self._shuffle = None
-        self._capacity = None
+        self._shuffle_sig = None  # (capacity, num_partitions) the step was built for
         self._migrate_steps: dict[int, object] = {}  # lane capacity -> jitted step
+        self._pending_resize: int | None = None
         # per-worker keyed state, stacked [W, S] / [W, S, D]
         sk, sv = empty_state(state_capacity, payload_dim)
         self.state_keys = jnp.tile(sk[None], (self.num_workers, 1))
@@ -109,10 +125,14 @@ class StreamingJob:
 
     # ------------------------------------------------------------------
     def _build(self, local_n: int):
+        """(Re)build the jitted shuffle step when capacity *or topology*
+        changed — an elastic resize invalidates the step because the loads
+        vector and heavy-table shapes follow ``num_partitions``."""
         cap = int(np.ceil(self.capacity_factor * local_n / self.num_workers / 8.0) * 8)
-        if self._shuffle is not None and cap == self._capacity:
+        sig = (cap, self.num_partitions)
+        if self._shuffle is not None and sig == self._shuffle_sig:
             return
-        self._capacity = cap
+        self._shuffle_sig = sig
         self._shuffle = make_shuffle_step(
             self.mesh,
             num_partitions=self.num_partitions,
@@ -127,6 +147,8 @@ class StreamingJob:
 
         Capacities are rounded up to the next power of two (capped at the
         full state table) so the jit cache stays small across repartitions.
+        The step routes at worker granularity, so the same cache serves
+        plain repartitions *and* cross-size resize migrations.
         """
         cap = 8
         while cap < min(lane_capacity, self.state_capacity):
@@ -136,9 +158,9 @@ class StreamingJob:
             self._migrate_steps[cap] = make_migrate_step(
                 self.mesh,
                 state_capacity=self.state_capacity,
-                lane_capacity=cap,
                 num_hosts=self.drm.partitioner.num_hosts,
                 seed=self.seed,
+                spec=ExchangeSpec(num_lanes=self.num_workers, capacity=cap, axis="data"),
             )
         return self._migrate_steps[cap], cap
 
@@ -176,48 +198,103 @@ class StreamingJob:
         rel_mig = 0.0
         mig_overflow = 0
         mig_rows = 0
+        plan_rows = 0
         decision = None
+        resized = False
+        reason = None
         at_checkpoint = (len(self.metrics) + 1) % self.checkpoint_interval == 0
-        if self.dr_enabled and at_checkpoint:
-            old_part = self.drm.partitioner
-            decision = self.drm.decide(loads)
-            if decision.repartition:
-                # plan on the driver: the histogram-bounded lane size shrinks
-                # the exchanged buffer to planned peak transfer x slack
-                sk = np.asarray(self.state_keys).reshape(-1)
-                live = sk[sk != KEY_SENTINEL].astype(np.int64)
-                plan = plan_migration(old_part, decision.partitioner, live)
-                migrate, lane_cap = self._migrate_step(
-                    migration_capacity(plan, num_workers=self.num_workers)
-                )
-                out = migrate(self.drm.partitioner.tables(), self.state_keys, self.state_vals)
-                kk, vv, kv_valid, rk, rv, rva, moved, total, mig_ov = out
-                kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
-                self.state_keys, self.state_vals, _ = self._merge(
-                    kept_keys, vv, rk, rv, rva
-                )
-                rel_mig = float(moved) / max(float(total), 1e-9)
-                mig_overflow = int(mig_ov)
-                mig_rows = self.num_workers * lane_cap  # rows received per worker
-
-        if decision is not None:
-            reason = decision.reason
-        else:
-            reason = "dr-disabled" if not self.dr_enabled else "not-checkpoint-tick"
+        if at_checkpoint:
+            # elastic resize first: an explicit resize() request, else the
+            # DRM policy.  A resize is this safe point's decision — the
+            # plain repartition path is skipped for the tick.
+            target = self._pending_resize
+            if target is not None:
+                self._pending_resize = None
+            elif self.dr_enabled:
+                target = self.drm.decide_resize(loads, num_workers=self.num_workers)
+            if target is not None and target != self.num_partitions:
+                old_n = self.num_partitions
+                rel_mig, mig_overflow, mig_rows, plan_rows = self._apply_resize(int(target))
+                resized = True
+                reason = f"resize {old_n}->{self.num_partitions}"
+            elif self.dr_enabled:
+                old_part = self.drm.partitioner
+                decision = self.drm.decide(loads)
+                if decision.repartition:
+                    rel_mig, mig_overflow, mig_rows, plan_rows = self._migrate_state(old_part)
+        if reason is None:
+            if decision is not None:
+                reason = decision.reason
+            else:
+                reason = "dr-disabled" if not self.dr_enabled else "not-checkpoint-tick"
         m = BatchMetrics(
             batch=len(self.metrics),
             imbalance=float(loads.max() / max(loads.mean(), 1e-12)),
             worker_imbalance=float(worker_loads.max() / max(worker_loads.mean(), 1e-12)),
-            repartitioned=bool(decision.repartition) if decision else False,
+            repartitioned=bool(decision.repartition) if decision else resized,
             relative_migration=rel_mig,
             overflow=int(res.overflow) + mig_overflow,
             state_rows=int(np.asarray(jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)).sum()),
             wall_time_s=time.perf_counter() - t0,
             reason=reason,
             migration_rows=mig_rows,
+            resized=resized,
+            num_partitions=self.num_partitions,
+            migration_plan_rows=plan_rows,
         )
         self.metrics.append(m)
         return m
+
+    # -- elastic resize -------------------------------------------------
+    def resize(self, num_partitions: int) -> None:
+        """Request an elastic grow/shrink to ``num_partitions``.
+
+        The request is applied at the next checkpoint safe point (the same
+        protocol as a repartition — state only moves when a consistent
+        snapshot boundary exists).  Explicit requests work even with
+        ``dr_enabled=False``.
+        """
+        n = int(num_partitions)
+        if n < self.num_workers:
+            raise ValueError(
+                f"cannot resize to {n} partitions: mesh has {self.num_workers} workers"
+            )
+        self._pending_resize = n
+
+    def _apply_resize(self, n: int) -> tuple[float, int, int, int]:
+        """Execute a resize at a safe point: re-plan cross-size, migrate
+        state through freshly sized exchange lanes, rebuild the step cache."""
+        old = self.drm.partitioner
+        self.drm.replan_resize(n)
+        stats = self._migrate_state(old)
+        self.num_partitions = n
+        # the shuffle step's lane count / loads vector followed the old
+        # topology; _build re-derives the spec on the next batch
+        self._shuffle = None
+        self._shuffle_sig = None
+        return stats
+
+    def _migrate_state(self, old_part: Partitioner) -> tuple[float, int, int, int]:
+        """Ship keyed state to where ``self.drm.partitioner`` now maps it.
+
+        Plans on the driver (``plan_migration`` diffs the partitioners over
+        the live keys — cross-size safe), sizes the exchange lanes from the
+        plan (``migration_capacity``), and folds received rows back into the
+        local state tables.  Returns ``(relative_migration, overflow,
+        buffer_rows, planned_lane_rows)``.
+        """
+        sk = np.asarray(self.state_keys).reshape(-1)
+        live = sk[sk != KEY_SENTINEL].astype(np.int64)
+        plan = plan_migration(old_part, self.drm.partitioner, live)
+        plan_rows = migration_capacity(plan, num_workers=self.num_workers)
+        migrate, lane_cap = self._migrate_step(plan_rows)
+        out = migrate(self.drm.partitioner.tables(), self.state_keys, self.state_vals)
+        kk, vv, kv_valid, rk, rv, rva, moved, total, mig_ov = out
+        kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
+        self.state_keys, self.state_vals, _ = self._merge(kept_keys, vv, rk, rv, rva)
+        rel_mig = float(moved) / max(float(total), 1e-9)
+        mig_rows = self.num_workers * lane_cap  # rows received per worker
+        return rel_mig, int(mig_ov), mig_rows, plan_rows
 
     # ------------------------------------------------------------------
     def run(self, batches: Iterable[np.ndarray]) -> list[BatchMetrics]:
@@ -244,3 +321,12 @@ class StreamingJob:
         self.state_vals = jnp.asarray(snap["state_vals"])
         drm_snap = {k[4:]: v for k, v in snap.items() if k.startswith("drm_")}
         self.drm = DRMaster.restore(drm_snap, self.drm.config)
+        # resume the snapshotted topology: the snapshot may have been taken
+        # after an elastic resize, in which case this job's construction-time
+        # partition count is stale and the step cache must be rebuilt
+        n = self.drm.partitioner.num_partitions
+        assert n >= self.num_workers, (n, self.num_workers)
+        self.num_partitions = n
+        self._shuffle = None
+        self._shuffle_sig = None
+        self._pending_resize = None

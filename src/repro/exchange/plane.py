@@ -62,6 +62,22 @@ class ExchangeSpec:
     capacity: int
     axis: str | None = None
 
+    def resized(
+        self, *, num_lanes: int | None = None, capacity: int | None = None
+    ) -> "ExchangeSpec":
+        """Re-derive the spec for a resized topology.
+
+        Elastic resize (changing the lane count after a worker grow/shrink)
+        and re-capacitating (a migration whose planned peak transfer differs
+        from the last one) are both one-spec changes: everything downstream —
+        bucketize buffers, the collective, unpack — follows from the spec.
+        """
+        return dataclasses.replace(
+            self,
+            num_lanes=self.num_lanes if num_lanes is None else int(num_lanes),
+            capacity=self.capacity if capacity is None else int(capacity),
+        )
+
 
 class Payload(NamedTuple):
     """One array travelling through the exchange; ``fill`` pads empty slots."""

@@ -66,23 +66,25 @@ class DRScheduler:
         keys, counts = np.unique(np.asarray(window_keys, np.int64), return_counts=True)
         self.drm.observe(keys.reshape(1, -1), counts.reshape(1, -1))
         loads = np.array([r.queued_tokens for r in self.replicas])
+        # elastic scale-out/in first — a resize is this decision point's action
+        target = self.drm.decide_resize(loads + 1e-9)
+        if target is not None and target != len(self.replicas):
+            old_n = len(self.replicas)
+            moved_sessions = self.resize(target)
+            return {
+                "repartitioned": True,
+                "resized": True,
+                "num_replicas": len(self.replicas),
+                "imbalance": float(loads.max() / max(loads.mean(), 1e-9)),
+                "moved_sessions": moved_sessions,
+                "reason": f"resize {old_n}->{len(self.replicas)}",
+            }
         before = self.drm.partitioner
         decision = self.drm.decide(loads + 1e-9)
         moved_sessions = 0
         if decision.repartition:
-            new = self.drm.partitioner
-            for rep in self.replicas:
-                stay = set()
-                for s in rep.sessions:
-                    dst = int(new.lookup_np(np.asarray([s], np.int32))[0])
-                    if dst != rep.rid:
-                        # migrate the session's KV cache
-                        self.replicas[dst].sessions.add(s)
-                        self.replicas[dst].queued_tokens += self.migration_token_cost
-                        moved_sessions += 1
-                    else:
-                        stay.add(s)
-                rep.sessions = stay
+            # migrate each moved session's KV cache
+            moved_sessions = self._reroute_sessions(self.drm.partitioner)
             self.migrations += moved_sessions
         return {
             "repartitioned": decision.repartition,
@@ -93,3 +95,51 @@ class DRScheduler:
     def imbalance(self) -> float:
         loads = np.array([r.queued_tokens for r in self.replicas])
         return float(loads.max() / max(loads.mean(), 1e-9))
+
+    # -- elastic scale-out / scale-in -------------------------------------
+    def resize(self, num_replicas: int) -> int:
+        """Grow or shrink the replica set — the streaming resize one level up.
+
+        The session keyspace is re-planned cross-size with the DRM's sketch
+        (``DRMaster.replan_resize``); sessions whose replica changed migrate
+        their KV cache (costed like a repartition migration).  Returns the
+        number of migrated sessions.  With ``DRConfig(elastic=True)``,
+        ``checkpoint`` calls this automatically on sustained queue imbalance.
+        """
+        n = int(num_replicas)
+        if n < 1:
+            raise ValueError(f"need at least one replica, got {n}")
+        if n == len(self.replicas):
+            return 0
+        new = self.drm.replan_resize(n)
+        if n > len(self.replicas):
+            self.replicas += [ReplicaState(i) for i in range(len(self.replicas), n)]
+        moved = self._reroute_sessions(new)
+        if n < len(self.replicas):
+            # scale-in: dying replicas already handed off their sessions;
+            # their residual queued work drains onto the folded replica
+            for rep in self.replicas[n:]:
+                self.replicas[rep.rid % n].queued_tokens += rep.queued_tokens
+            self.replicas = self.replicas[:n]
+        self.migrations += moved
+        return moved
+
+    def _reroute_sessions(self, new) -> int:
+        """Move sessions (and their KV-cache cost) to where ``new`` maps them.
+
+        A dying replica (``rid >= new.num_partitions``) can never equal its
+        sessions' new destination, so scale-in drains it completely.
+        """
+        moved = 0
+        for rep in self.replicas:
+            stay = set()
+            for s in rep.sessions:
+                dst = int(new.lookup_np(np.asarray([s], np.int32))[0])
+                if dst != rep.rid:
+                    self.replicas[dst].sessions.add(s)
+                    self.replicas[dst].queued_tokens += self.migration_token_cost
+                    moved += 1
+                else:
+                    stay.add(s)
+            rep.sessions = stay
+        return moved

@@ -63,3 +63,62 @@ def test_shuffle_and_dr_on_8_devices():
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=600,
     )
     assert "DISTRIBUTED-OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
+RESIZE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    from repro.core.drm import DRConfig
+    from repro.core.hashing import KEY_SENTINEL
+    from repro.core.streaming import StreamingJob
+    from repro.data.generators import zipf_keys
+
+    mesh = jax.make_mesh((4,), ("data",))
+    job = StreamingJob(mesh=mesh, num_partitions=4, state_capacity=4096,
+                       dr=DRConfig(imbalance_trigger=1e9))
+    batches = [zipf_keys(8192, num_keys=1000, exponent=1.4, seed=s) for s in range(5)]
+    job.process_batch(batches[0]); job.process_batch(batches[1])
+
+    # grow 4->8 across a real 4-way all_to_all: state must physically move
+    job.resize(8)
+    m = job.process_batch(batches[2])
+    assert m.resized and m.reason == "resize 4->8", m.reason
+    assert m.overflow == 0, m.overflow
+    assert m.relative_migration > 0  # cross-worker shipping actually happened
+    assert m.migration_rows <= 4 * max(8, 2 * m.migration_plan_rows)
+
+    job.resize(4)
+    m = job.process_batch(batches[3])
+    assert m.resized and m.reason == "resize 8->4", m.reason
+    assert m.overflow == 0, m.overflow
+    job.process_batch(batches[4])
+
+    # exact per-key counts across both resizes
+    all_keys = np.concatenate(batches)
+    for key in np.unique(all_keys)[:10]:
+        got, want = job.state_count(int(key)), float((all_keys == key).sum())
+        assert got == want, (key, got, want)
+
+    # each worker shard holds only keys the resized partitioner maps to it
+    sk = np.asarray(job.state_keys)
+    part = job.drm.partitioner
+    for w in range(4):
+        keys_w = sk[w][sk[w] != KEY_SENTINEL]
+        if len(keys_w):
+            assert np.all(part.lookup_np(keys_w.astype(np.int32)) % 4 == w)
+
+    print("RESIZE-DISTRIBUTED-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_elastic_resize_on_4_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", RESIZE_SCRIPT], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=600,
+    )
+    assert "RESIZE-DISTRIBUTED-OK" in out.stdout, out.stdout + "\n" + out.stderr

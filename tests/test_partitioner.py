@@ -9,6 +9,7 @@ from repro.core import (
     kip_update,
     load_imbalance,
     plan_migration,
+    resize_partitioner,
     uniform_partitioner,
 )
 from repro.core.hashing import KEY_SENTINEL
@@ -118,6 +119,59 @@ class TestKIPUpdate:
         assert parts.max() < 24
         floor = max(1.0, 24 * hist.freqs[0])
         assert load_imbalance(kip24, stream) < 1.25 * floor
+
+    def test_elastic_shrink_fold(self):
+        """Shrink folds removed partitions (``p % n``): every lookup — heavy
+        table and host hash alike — lands strictly inside the new range."""
+        stream = zipf_keys(100_000, num_keys=5_000, exponent=1.2, seed=6)
+        hist = _hist_from_stream(stream, top_b=32)
+        kip8 = kip_update(uniform_partitioner(8), hist)
+        kip3 = kip_update(kip8, hist, num_partitions=3)
+        assert kip3.num_partitions == 3
+        assert kip3.host_to_part.max() < 3
+        parts = kip3.lookup_np(stream.astype(np.int32))
+        assert parts.min() >= 0 and parts.max() < 3
+        # every histogram key is still explicitly routed after the fold
+        assert set(kip3.heavy_map()) == set(hist.keys.tolist())
+        # and the shrink plan moves only what the fold + re-balance require
+        plan = plan_migration(kip8, kip3, np.unique(stream))
+        assert plan.is_resize and plan.num_src == 8 and plan.num_dst == 3
+        assert plan.transfer.shape == (8, 8)  # padded square to the larger side
+
+    def test_elastic_grow_preserves_heavy_isolation(self):
+        """Growing must not cram the dominant key together with other heavy
+        keys: isolation survives the resize (the 'key isolator' property)."""
+        keys = np.arange(50, dtype=np.int64)
+        counts = np.full(50, 10.0)
+        counts[0] = 250.0  # 25% of mass: isolated at n=4 and at n=8
+        # leave tail mass (a top-B summary never covers the whole stream) so
+        # the resize also re-bins hosts onto the new partitions
+        hist = Histogram.from_counts(keys, counts, total=1000.0)
+        kip4 = kip_update(uniform_partitioner(4), hist)
+        # the elastic primitive (waterfilled re-binning spreads the tail
+        # onto the new partitions; plain Algorithm 1 packing only rescues
+        # partitions already above MAXLOAD)
+        kip8 = resize_partitioner(kip4, 8, hist)
+        assert kip8.num_partitions == 8
+        heavy = kip8.heavy_map()
+        p0 = heavy[0]
+        assert sum(1 for k, p in heavy.items() if k != 0 and p == p0) == 0
+        # grow must put expected load on every partition, old and new alike
+        # (heavy keys cover the old bins, re-binned tail hosts the new ones)
+        assert (expected_loads(kip8, hist) > 0).all()
+
+    def test_resize_partitioner_without_histogram(self):
+        """A resize before any histogram exists re-bins hosts so every new
+        partition receives hash traffic immediately."""
+        grown = resize_partitioner(uniform_partitioner(4), 8)
+        assert grown.num_partitions == 8
+        hosts_per_part = np.bincount(grown.host_to_part, minlength=8)
+        assert hosts_per_part.min() > 0
+        shrunk = resize_partitioner(grown, 2)
+        assert shrunk.num_partitions == 2
+        assert shrunk.host_to_part.max() < 2
+        with pytest.raises(ValueError):
+            resize_partitioner(grown, 0)
 
     def test_device_lookup_matches_host(self):
         import jax.numpy as jnp
