@@ -1,0 +1,47 @@
+"""The system-aware control plane: one telemetry-driven policy stack.
+
+The paper's core claim is *system-aware* repartitioning — decisions driven
+by observed system signals, with migration cost weighed against balance
+gain.  This package is where every such decision lives:
+
+* :mod:`repro.control.signals` — the :class:`Signals` record every consumer
+  (streaming job, serving scheduler, MoE placement loop) emits at safe
+  points, and the :class:`Telemetry` accumulator that builds it during
+  normal work.
+* :mod:`repro.control.actions` — the typed decisions a policy can return:
+  :class:`NoOp`, :class:`Repartition`, :class:`Resize`, :class:`Replace`.
+* :mod:`repro.control.policy` — composable policy objects
+  (:class:`RepartitionPolicy`, :class:`ResizePolicy`,
+  :class:`PlacementPolicy`) sharing one exchange-lane cost model and one
+  :class:`CooldownGuard` hysteresis rule.
+* :mod:`repro.control.log` — the :class:`DecisionLog` recording every
+  decision, including declined ones, with reasons.
+
+``repro.core.drm.DRMaster`` hosts the stack; the runtimes are thin drivers
+that feed signals in and execute the returned actions.
+"""
+from repro.control.actions import Action, NoOp, Repartition, Replace, Resize
+from repro.control.log import Decision, DecisionLog
+from repro.control.policy import (
+    CooldownGuard,
+    PlacementPolicy,
+    RepartitionPolicy,
+    ResizePolicy,
+)
+from repro.control.signals import Signals, Telemetry
+
+__all__ = [
+    "Action",
+    "CooldownGuard",
+    "Decision",
+    "DecisionLog",
+    "NoOp",
+    "PlacementPolicy",
+    "Repartition",
+    "RepartitionPolicy",
+    "Replace",
+    "Resize",
+    "ResizePolicy",
+    "Signals",
+    "Telemetry",
+]

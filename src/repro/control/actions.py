@@ -1,0 +1,71 @@
+"""Typed actions the policy stack returns to its drivers.
+
+A policy never mutates the runtime: it returns an :class:`Action` and the
+driver (``StreamingJob``, ``DRScheduler``, the MoE train loop) executes it
+at the safe point — migrate state, add/remove replicas, permute expert
+weights.  ``NoOp`` carries the decline reason so declined decisions are as
+observable as taken ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+from repro.core.partitioner import Partitioner
+
+__all__ = ["Action", "NoOp", "Repartition", "Resize", "Replace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    """Base decision record; ``reason`` is always human-readable."""
+
+    reason: str
+    kind: ClassVar[str] = "action"
+
+    @property
+    def taken(self) -> bool:
+        return not isinstance(self, NoOp)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoOp(Action):
+    """Decline — keep the current topology/contents.  Carries the decision
+    diagnostics so compat wrappers can rebuild a full ``DRDecision``."""
+
+    measured_imbalance: float = 0.0
+    planned_imbalance: float = 0.0
+    est_migration: float = 0.0
+    kind: ClassVar[str] = "noop"
+
+
+@dataclasses.dataclass(frozen=True)
+class Repartition(Action):
+    """Swap partition *contents*: install ``partitioner``, migrate state off
+    ``prev`` (the paper's §4 trigger outcome)."""
+
+    partitioner: Partitioner = None
+    prev: Partitioner = None
+    planned_imbalance: float = 0.0
+    measured_imbalance: float = 0.0
+    est_migration: float = 0.0     # exchange-lane cost estimate (peak lane mass x slack)
+    kind: ClassVar[str] = "repartition"
+
+
+@dataclasses.dataclass(frozen=True)
+class Resize(Action):
+    """Change the partition/replica *count* to ``target`` (elastic resize,
+    serving scale-out/in).  ``requested=True`` marks an explicit driver
+    request rather than a policy decision."""
+
+    target: int = 0
+    requested: bool = False
+    kind: ClassVar[str] = "resize"
+
+
+@dataclasses.dataclass(frozen=True)
+class Replace(Action):
+    """Re-place experts onto shards (MoE expert placement — state migration
+    is a permutation of the stacked expert arrays)."""
+
+    kind: ClassVar[str] = "replace"

@@ -1,0 +1,188 @@
+"""Composable policies: Signals in, typed Actions out.
+
+Mapping onto the paper's §4 decision rules:
+
+* :class:`RepartitionPolicy` — §4's core trigger: repartition when the
+  measured imbalance exceeds the trigger *and* "the gains for repartitioning
+  exceed state migration costs".  The migration cost is estimated with the
+  exchange plane's own lane-sizing rule
+  (:func:`repro.core.migration.exchange_lane_cost`, the quantity
+  ``migration_capacity`` rounds into lane rows) evaluated on the candidate
+  plan — real exchange-lane accounting instead of the old
+  heavy-key-frequency sum.
+* :class:`ResizePolicy` — the same trigger one level up: sustained imbalance
+  beyond what KIP can spread over the current bins grows the topology;
+  sustained balance (or per-worker throughput below the capacity target —
+  an idle stream that happens to be balanced) shrinks it.  Guarded by
+  :class:`CooldownGuard` hysteresis on top of the patience streaks and the
+  ``shrink_trigger < grow_trigger`` dead zone.
+* :class:`PlacementPolicy` — §4 for experts: shard-load imbalance from
+  router statistics triggers a KIP re-placement, with the same cooldown
+  guard (``min_steps_between``) spacing weight migrations.
+
+Policies are stateless evaluators over a *host* (``DRMaster`` or
+``PlacementController``) that carries the durable decision state (sketch,
+streaks, last-action ticks) so snapshots keep working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.control.actions import Action, NoOp, Repartition, Replace, Resize
+from repro.control.signals import Signals
+from repro.core.migration import exchange_lane_cost, plan_migration
+from repro.core.partitioner import expected_loads, kip_update
+
+__all__ = ["CooldownGuard", "RepartitionPolicy", "ResizePolicy", "PlacementPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CooldownGuard:
+    """Hysteresis shared by every state-moving policy: at least ``min_gap``
+    safe points must pass since the last action before the next may fire.
+
+    Patience streaks decide *whether* a condition is sustained; the guard
+    decides whether acting on it is *allowed yet*.  A declined action keeps
+    its streak, so once the cooldown expires a still-sustained condition
+    fires immediately.  ``min_gap=0`` disables the guard (the pre-control-
+    plane behavior)."""
+
+    min_gap: int = 0
+
+    def ready(self, tick: int, last_action_tick: int) -> bool:
+        return self.min_gap <= 0 or (tick - last_action_tick) >= self.min_gap
+
+
+class RepartitionPolicy:
+    """§4 trigger + exchange-lane-costed migration gate (see module doc)."""
+
+    def evaluate(self, host, signals: Signals) -> Action:
+        """One safe-point decision.  Mirrors the DRM bookkeeping exactly:
+        advances ``host.batches_seen`` whether or not anything fires, so the
+        safe-point spacing rule keeps its pre-refactor meaning."""
+        cfg = host.config
+        host.batches_seen += 1
+        measured = signals.imbalance
+        n = host.partitioner.num_partitions
+
+        hist = host.sketch.histogram(top_b=int(cfg.lam * n))
+        if len(hist) == 0:
+            return NoOp("no-histogram", measured, measured, 0.0)
+        if host.batches_seen - host.last_repartition < cfg.min_batches_between:
+            return NoOp("safe-point-spacing", measured, measured, 0.0)
+        if cfg.mode == "batch" and host.last_repartition > 0:
+            return NoOp("batch-replayed-once", measured, measured, 0.0)
+        if measured < cfg.imbalance_trigger:
+            return NoOp("balanced", measured, measured, 0.0)
+
+        # fixed heavy-table width => stable jit signatures across swaps
+        cap = max(host.partitioner.heavy_keys.shape[0],
+                  int(np.ceil(cfg.lam * n / 128.0) * 128))
+        candidate = kip_update(host.partitioner, hist, eps=cfg.eps,
+                               heavy_capacity=cap, tight=cfg.tight)
+        planned = expected_loads(candidate, hist)
+        planned_imb = float(planned.max() * n)
+        gain = measured - planned_imb
+        # migration cost from exchange-lane accounting: the peak (src, dst)
+        # lane mass x slack the candidate plan would make migration_capacity
+        # provision, on the frequency-weighted plan (same O(1) scale as gain).
+        # Sketch keys are diffed exactly; the untracked tail rides the host
+        # tables, so each re-binned host carries an equal share of tail mass
+        # (the same uniform-tail model KIP's load bound uses).
+        plan = plan_migration(host.partitioner, candidate, hist.keys,
+                              state_weights=hist.freqs)
+        transfer = plan.transfer.copy()
+        old_hp = host.partitioner.host_to_part
+        new_hp = candidate.host_to_part
+        moved = old_hp != new_hp
+        if moved.any() and hist.tail_mass > 0:
+            np.add.at(transfer, (old_hp[moved], new_hp[moved]),
+                      hist.tail_mass / len(old_hp))
+        plan = dataclasses.replace(plan, transfer=transfer)
+        est = exchange_lane_cost(plan, num_workers=signals.num_workers)
+        cost = cfg.migration_cost_weight * est
+        if gain <= cost:
+            return NoOp(f"gain {gain:.3f} <= cost {cost:.3f}",
+                        measured, planned_imb, est)
+        return Repartition(
+            reason="repartition",
+            partitioner=candidate,
+            prev=host.partitioner,
+            planned_imbalance=planned_imb,
+            measured_imbalance=measured,
+            est_migration=est,
+        )
+
+
+class ResizePolicy:
+    """Elastic grow/shrink: sustained imbalance or idle throughput (see
+    module doc).  Streak state lives on the host (``grow_streak`` /
+    ``shrink_streak``) so snapshots carry it."""
+
+    def evaluate(self, host, signals: Signals) -> Action:
+        cfg = host.config
+        if not cfg.elastic:
+            return NoOp("elastic-disabled")
+        n = host.partitioner.num_partitions
+        imb = signals.imbalance
+        floor = max(cfg.min_partitions, signals.num_workers)
+        # throughput below the capacity target: the stream is idle even if
+        # balanced — over-partitioning is pure overhead (ROADMAP signal)
+        low_throughput = (
+            cfg.target_throughput > 0.0
+            and signals.throughput > 0.0
+            and signals.per_worker_throughput < cfg.target_throughput
+        )
+        guard = CooldownGuard(cfg.resize_cooldown)
+        if imb >= cfg.grow_trigger and n < cfg.max_partitions:
+            host.grow_streak += 1
+            host.shrink_streak = 0
+            if host.grow_streak >= cfg.resize_patience:
+                if not guard.ready(host.batches_seen, host.last_resize):
+                    return NoOp("resize-cooldown", imb, imb)
+                host.grow_streak = 0
+                target = min(n * cfg.resize_factor, cfg.max_partitions)
+                return Resize(reason=f"resize {n}->{target}", target=target)
+            return NoOp(f"grow-patience {host.grow_streak}/{cfg.resize_patience}",
+                        imb, imb)
+        elif ((imb <= cfg.shrink_trigger
+               or (low_throughput and imb < cfg.grow_trigger)) and n > floor):
+            # the low-throughput shrink covers the trigger dead zone only —
+            # a hot-spotted stream pinned at max_partitions must never be
+            # shrunk onto fewer bins just because it is also idle
+            host.shrink_streak += 1
+            host.grow_streak = 0
+            if host.shrink_streak >= cfg.resize_patience:
+                if not guard.ready(host.batches_seen, host.last_resize):
+                    return NoOp("resize-cooldown", imb, imb)
+                host.shrink_streak = 0
+                target = max(n // cfg.resize_factor, floor)
+                return Resize(reason=f"resize {n}->{target}", target=target)
+            return NoOp(f"shrink-patience {host.shrink_streak}/{cfg.resize_patience}",
+                        imb, imb)
+        else:
+            host.grow_streak = host.shrink_streak = 0
+        if imb >= cfg.grow_trigger:
+            return NoOp("at-max", imb, imb)
+        if imb <= cfg.shrink_trigger or low_throughput:
+            return NoOp("at-floor", imb, imb)
+        return NoOp("dead-zone", imb, imb)
+
+
+class PlacementPolicy:
+    """Expert re-placement trigger over shard loads (see module doc).  The
+    host (``PlacementController``) computes the actual KIP placement when
+    the answer is :class:`Replace`; the policy only decides *whether*."""
+
+    def evaluate(self, host, signals: Signals) -> Action:
+        imb = signals.imbalance
+        if host.e <= host.n:
+            return NoOp("too-few-experts", imb, imb)
+        if imb < host.trigger:
+            return NoOp("balanced", imb, imb)
+        guard = CooldownGuard(host.min_steps_between)
+        if not guard.ready(host.steps, host.last_update):
+            return NoOp("cooldown", imb, imb)
+        return Replace(reason=f"imbalance {imb:.3f} >= trigger {host.trigger:.3f}")

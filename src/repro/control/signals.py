@@ -1,0 +1,163 @@
+"""System signals: what the control plane actually observes.
+
+The paper's repartitioning decisions are "system-aware": they key on
+measured load, not static assumptions.  :class:`Signals` is the one record
+every consumer hands the policy stack at a safe point — per-partition
+loads, per-worker throughput against a capacity target, overflow counts,
+actual exchange-lane accounting (rows shipped + wall time), and serving
+queue depths.  :class:`Telemetry` is the accumulator the runtimes feed
+during normal work (no extra measurement passes — the DRW principle); a
+``snapshot`` at a safe point turns the window into a ``Signals`` record and
+opens the next window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.migration import fold_to_workers
+
+__all__ = ["Signals", "Telemetry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Signals:
+    """One safe point's view of the system, as the policies consume it.
+
+    ``loads`` is the only required field: per-partition work observed over
+    the window (record counts for the streaming job, queued tokens for the
+    serving scheduler, routed-token shares for MoE shards).  Everything else
+    defaults to "unknown" so host-side unit tests and the compat wrappers
+    can build a minimal record.
+    """
+
+    loads: np.ndarray                      # float64[N] per-partition work
+    num_workers: int = 1                   # physical workers under the N partitions
+    records: float = 0.0                   # records processed this window
+    window_wall_s: float = 0.0             # wall time the window spanned
+    shuffle_overflow: int = 0              # shuffle rows dropped for capacity
+    migration_overflow: int = 0            # migration rows dropped for capacity
+    exchange_rows: int = 0                 # rows shipped through exchange lanes
+    exchange_wall_s: float = 0.0           # wall time inside the exchange path
+    queue_depths: np.ndarray | None = None # serving replica queue depths
+    state_rows: int = 0                    # live keyed-state rows (migration scale)
+    at_safe_point: bool = True             # decisions may act only when True
+    consumer: str = ""                     # which runtime emitted this
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean per-partition load (1.0 when nothing was observed)."""
+        loads = np.asarray(self.loads, np.float64)
+        if loads.size == 0 or not loads.sum():
+            return 1.0
+        return float(loads.max() / max(loads.mean(), 1e-12))
+
+    @property
+    def worker_loads(self) -> np.ndarray:
+        """Loads folded to worker granularity (partition p on worker p % W)."""
+        return fold_to_workers(self.loads, self.num_workers)
+
+    @property
+    def worker_imbalance(self) -> float:
+        w = self.worker_loads
+        if w.size == 0 or not w.sum():
+            return 1.0
+        return float(w.max() / max(w.mean(), 1e-12))
+
+    @property
+    def throughput(self) -> float:
+        """Records/s over the window; 0.0 when the window is unmeasured."""
+        if self.records <= 0 or self.window_wall_s <= 0:
+            return 0.0
+        return self.records / self.window_wall_s
+
+    @property
+    def per_worker_throughput(self) -> float:
+        """Records/s each worker sustained — compared against the capacity
+        target (``DRConfig.target_throughput``) to catch idle-but-balanced
+        streams the imbalance trigger can never see (ROADMAP: policy signals
+        beyond imbalance)."""
+        return self.throughput / max(self.num_workers, 1)
+
+
+class Telemetry:
+    """Windowed accumulator turning runtime counters into ``Signals``.
+
+    The runtimes call the ``record_*`` hooks during normal work (shuffle,
+    migration, request routing, router statistics); ``snapshot`` emits the
+    window's :class:`Signals` at a safe point and — when the safe point
+    consumes the window — resets for the next one.  Peeking at a non-safe
+    point leaves the window accumulating, so a decision gated on checkpoint
+    ticks sees everything since the previous tick.
+    """
+
+    def __init__(self, consumer: str = ""):
+        self.consumer = consumer
+        self._reset()
+
+    def _reset(self) -> None:
+        self._records = 0.0
+        self._shuffle_overflow = 0
+        self._migration_overflow = 0
+        self._exchange_rows = 0
+        self._exchange_wall_s = 0.0
+        self._queues: np.ndarray | None = None
+        # the window clock starts at the first recording, not at reset:
+        # setup/idle time between construction (or a checkpoint) and the
+        # next batch must not read as a throughput collapse
+        self._t0: float | None = None
+
+    def _touch(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+
+    # -- recording hooks (called during normal work) -----------------------
+    def record_batch(self, records: float) -> None:
+        self._touch()
+        self._records += float(records)
+
+    def record_exchange(self, rows: int, wall_s: float = 0.0) -> None:
+        """Exchange-lane accounting: rows one call shipped (``ExchangeSpec.rows``
+        per worker) and the wall time the exchange path took."""
+        self._touch()
+        self._exchange_rows += int(rows)
+        self._exchange_wall_s += float(wall_s)
+
+    def record_overflow(self, shuffle: int = 0, migration: int = 0) -> None:
+        self._touch()
+        self._shuffle_overflow += int(shuffle)
+        self._migration_overflow += int(migration)
+
+    def record_queues(self, depths: np.ndarray) -> None:
+        self._touch()
+        self._queues = np.asarray(depths, np.float64)
+
+    # -- safe point --------------------------------------------------------
+    def snapshot(
+        self,
+        loads: np.ndarray,
+        *,
+        num_workers: int = 1,
+        state_rows: int = 0,
+        at_safe_point: bool = True,
+    ) -> Signals:
+        sig = Signals(
+            loads=np.asarray(loads, np.float64),
+            num_workers=int(num_workers),
+            records=self._records,
+            window_wall_s=(max(time.perf_counter() - self._t0, 0.0)
+                           if self._t0 is not None else 0.0),
+            shuffle_overflow=self._shuffle_overflow,
+            migration_overflow=self._migration_overflow,
+            exchange_rows=self._exchange_rows,
+            exchange_wall_s=self._exchange_wall_s,
+            queue_depths=self._queues,
+            state_rows=int(state_rows),
+            at_safe_point=at_safe_point,
+            consumer=self.consumer,
+        )
+        if at_safe_point:
+            self._reset()
+        return sig

@@ -1,13 +1,21 @@
-"""Dynamic Repartitioning Master — the central DR authority.
+"""Dynamic Repartitioning Master — host of the control-plane policy stack.
 
-Lives in the launcher ("Driver") process.  Per micro-batch it:
+Lives in the launcher ("Driver") process.  Per safe point it:
 
 1. merges the DRW local histograms into the global counter sketch
    (EWMA over past histograms — drift-respecting),
-2. evaluates the trigger: planned-imbalance improvement vs. migration cost
-   ("the gains for repartitioning should exceed state migration costs"),
-3. on trigger, runs KIPUPDATE and hands the new partitioner tables to the
-   runtime to swap at the safe point (micro-batch boundary / checkpoint).
+2. runs the policy stack over the window's :class:`~repro.control.Signals`
+   (``evaluate``): the :class:`~repro.control.policy.ResizePolicy` first
+   (topology), then the :class:`~repro.control.policy.RepartitionPolicy`
+   (contents — §4's gain-vs-migration-cost trigger, costed with real
+   exchange-lane accounting),
+3. records every decision — including declined ones, with reasons — in the
+   :class:`~repro.control.DecisionLog`, and hands taken actions back to the
+   driver to execute at the safe point.
+
+The runtimes (``StreamingJob``, ``DRScheduler``) are thin drivers: they
+feed telemetry in and execute the returned typed actions.  ``decide`` and
+``decide_resize`` remain as single-policy wrappers over the same stack.
 """
 from __future__ import annotations
 
@@ -15,8 +23,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.histogram import CounterSketch, Histogram
-from repro.core.partitioner import Partitioner, expected_loads, kip_update, resize_partitioner
+from repro.control.actions import Action, NoOp, Repartition, Resize
+from repro.control.log import DecisionLog
+from repro.control.policy import RepartitionPolicy, ResizePolicy
+from repro.control.signals import Signals
+from repro.core.histogram import CounterSketch
+from repro.core.partitioner import Partitioner, resize_partitioner
 
 __all__ = ["DRConfig", "DRMaster", "DRDecision"]
 
@@ -42,6 +54,19 @@ class DRConfig:
     shrink_trigger: float = 1.05     # sustained imbalance below this => shrink
     resize_patience: int = 2         # consecutive safe points before acting
     resize_factor: int = 2           # grow/shrink multiplies/divides by this
+    # -- control-plane hysteresis + capacity-target signal -----------------
+    resize_cooldown: int = 0         # min safe points between resizes (0 = off);
+                                     # the oscillation guard on top of patience
+    target_throughput: float = 0.0   # per-worker records/s capacity target;
+                                     # sustained below => shrink even if the
+                                     # imbalance sits in the trigger dead zone
+
+    def __post_init__(self):
+        if self.elastic:
+            assert self.grow_trigger > self.shrink_trigger, (
+                "elastic resize needs a trigger-gap dead zone: "
+                f"grow_trigger {self.grow_trigger} <= shrink_trigger {self.shrink_trigger}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,17 +80,23 @@ class DRDecision:
 
 
 class DRMaster:
-    def __init__(self, initial: Partitioner, config: DRConfig = DRConfig()):
+    def __init__(self, initial: Partitioner, config: DRConfig = DRConfig(),
+                 *, consumer: str = "stream"):
         self.config = config
         self.partitioner = initial
         self.sketch = CounterSketch(config.sketch_capacity, decay=config.sketch_decay)
         self.batches_seen = 0
         self.last_repartition = -(10**9)
+        self.last_resize = -(10**9)
         self.history: list[dict] = []
         # elastic-resize policy state: how many consecutive safe points the
         # grow/shrink condition has held (the "sustained" part of the policy)
         self.grow_streak = 0
         self.shrink_streak = 0
+        # the policy stack this master hosts + its decision log
+        self.repartition_policy = RepartitionPolicy()
+        self.resize_policy = ResizePolicy()
+        self.decisions = DecisionLog(consumer)
 
     # -- DRW ingestion ------------------------------------------------------
     def observe(self, hist_keys: np.ndarray, hist_counts: np.ndarray,
@@ -83,97 +114,96 @@ class DRMaster:
             np.add.at(counts, inv, c[m])
             self.sketch.update_counts(keys.astype(np.int64), counts, total=total_records)
 
-    # -- decision -----------------------------------------------------------
-    def decide(self, loads: np.ndarray, state_rows: float = 0.0) -> DRDecision:
-        """Called at each safe point with measured per-partition loads."""
-        cfg = self.config
-        self.batches_seen += 1
-        n = self.partitioner.num_partitions
-        loads = np.asarray(loads, np.float64)
-        measured = float(loads.max() / max(loads.mean(), 1e-12)) if loads.sum() else 1.0
+    # -- the one safe-point entry -------------------------------------------
+    def evaluate(self, signals: Signals, *, requested_resize: int | None = None,
+                 policies_enabled: bool = True) -> Action:
+        """Run the policy stack over one safe point's signals.
 
-        hist = self.sketch.histogram(top_b=int(cfg.lam * n))
-        if len(hist) == 0:
-            return self._no(measured, "no-histogram")
-        if self.batches_seen - self.last_repartition < cfg.min_batches_between:
-            return self._no(measured, "safe-point-spacing")
-        if cfg.mode == "batch" and self.last_repartition > 0:
-            return self._no(measured, "batch-replayed-once")
-        if measured < cfg.imbalance_trigger:
-            return self._no(measured, "balanced")
-
-        # fixed heavy-table width => stable jit signatures across swaps
-        cap = max(self.partitioner.heavy_keys.shape[0], int(np.ceil(cfg.lam * n / 128.0) * 128))
-        candidate = kip_update(self.partitioner, hist, eps=cfg.eps, heavy_capacity=cap,
-                               tight=cfg.tight)
-        planned = expected_loads(candidate, hist)
-        planned_imb = float(planned.max() * n)
-        gain = measured - planned_imb
-        # migration cost estimate: heavy keys that change partition carry
-        # state proportional to their frequency
-        old_p = self.partitioner.lookup_np(hist.keys.astype(np.int32))
-        new_p = candidate.lookup_np(hist.keys.astype(np.int32))
-        est_migration = float(hist.freqs[old_p != new_p].sum())
-        cost = cfg.migration_cost_weight * est_migration
-        if gain <= cost:
-            return DRDecision(False, self.partitioner, planned_imb, measured, est_migration,
-                              f"gain {gain:.3f} <= cost {cost:.3f}")
-        self.partitioner = candidate
-        self.last_repartition = self.batches_seen
-        d = DRDecision(True, candidate, planned_imb, measured, est_migration, "repartition")
-        self.history.append(dataclasses.asdict(d) | {"batch": self.batches_seen})
-        return d
-
-    def _no(self, measured: float, reason: str) -> DRDecision:
-        return DRDecision(False, self.partitioner, measured, measured, 0.0, reason)
-
-    # -- elastic resize policy ----------------------------------------------
-    def decide_resize(self, loads: np.ndarray, *, num_workers: int = 1) -> int | None:
-        """Policy hook: should the job change its partition count?
-
-        Called at checkpoint safe points with measured per-partition loads.
-        Returns the new partition count, or ``None`` to keep the topology.
-        The rule is sustained-imbalance vs. worker count: ``resize_patience``
-        consecutive safe points above ``grow_trigger`` grow the topology by
-        ``resize_factor`` (a hotspot KIP cannot spread over the current bins
-        gets more bins); the same patience below ``shrink_trigger`` shrinks
-        it (an idle/uniform stream does not pay for over-partitioning).
-        ``num_workers`` floors the shrink — never fewer partitions than
-        physical workers.
+        Precedence mirrors the safe-point protocol: an explicit resize
+        request wins (it is this safe point's decision), then the elastic
+        :class:`ResizePolicy`, then the :class:`RepartitionPolicy`.  A taken
+        repartition is installed here (partitioner swap + bookkeeping); a
+        taken resize is *returned* for the driver to execute via
+        :meth:`replan_resize` — state only moves in the driver.  Every
+        safe-point outcome lands in :attr:`decisions` (non-safe-point calls
+        are peeks, not decisions, and are not logged).
         """
-        cfg = self.config
-        if not cfg.elastic:
-            return None
-        loads = np.asarray(loads, np.float64)
         n = self.partitioner.num_partitions
-        imb = float(loads.max() / max(loads.mean(), 1e-12)) if loads.sum() else 1.0
-        floor = max(cfg.min_partitions, num_workers)
-        if imb >= cfg.grow_trigger and n < cfg.max_partitions:
-            self.grow_streak += 1
-            self.shrink_streak = 0
-            if self.grow_streak >= cfg.resize_patience:
-                self.grow_streak = 0
-                return min(n * cfg.resize_factor, cfg.max_partitions)
-        elif imb <= cfg.shrink_trigger and n > floor:
-            self.shrink_streak += 1
-            self.grow_streak = 0
-            if self.shrink_streak >= cfg.resize_patience:
-                self.shrink_streak = 0
-                return max(n // cfg.resize_factor, floor)
+        detail: dict = {}
+        if not signals.at_safe_point:
+            # not a decision point: nothing to log — the decision log counts
+            # safe points only, else a checkpoint_interval > 1 stream buries
+            # the real decisions under per-batch "not-checkpoint-tick" noise
+            return NoOp("not-checkpoint-tick", signals.imbalance)
+        if requested_resize is not None and int(requested_resize) != n:
+            action = Resize(reason=f"resize {n}->{int(requested_resize)}",
+                            target=int(requested_resize), requested=True)
+        elif not policies_enabled:
+            action = NoOp("dr-disabled", signals.imbalance)
         else:
-            self.grow_streak = self.shrink_streak = 0
-        return None
+            action = self.resize_policy.evaluate(self, signals)
+            if isinstance(action, NoOp):
+                if action.reason != "elastic-disabled":
+                    detail["resize_declined"] = action.reason
+                action = self.repartition_policy.evaluate(self, signals)
+                if isinstance(action, Repartition):
+                    self._install(action)
+        self.decisions.record(action, tick=self.batches_seen,
+                              imbalance=signals.imbalance, detail=detail)
+        return action
+
+    def _install(self, action: Repartition) -> None:
+        """Swap in a taken repartition at the safe point (DRM bookkeeping)."""
+        self.partitioner = action.partitioner
+        self.last_repartition = self.batches_seen
+        d = DRDecision(True, action.partitioner, action.planned_imbalance,
+                       action.measured_imbalance, action.est_migration, "repartition")
+        self.history.append(dataclasses.asdict(d) | {"batch": self.batches_seen})
+
+    def _as_decision(self, action: Action) -> DRDecision:
+        if isinstance(action, Repartition):
+            return DRDecision(True, action.partitioner, action.planned_imbalance,
+                              action.measured_imbalance, action.est_migration,
+                              "repartition")
+        assert isinstance(action, NoOp), action
+        return DRDecision(False, self.partitioner, action.planned_imbalance,
+                          action.measured_imbalance, action.est_migration,
+                          action.reason)
+
+    # -- single-policy wrappers (the pre-control-plane API) ------------------
+    def decide(self, loads: np.ndarray, state_rows: float = 0.0) -> DRDecision:
+        """Run only the repartition policy on measured per-partition loads."""
+        signals = Signals(loads=np.asarray(loads, np.float64),
+                          state_rows=int(state_rows))
+        action = self.repartition_policy.evaluate(self, signals)
+        if isinstance(action, Repartition):
+            self._install(action)
+        self.decisions.record(action, tick=self.batches_seen,
+                              imbalance=signals.imbalance)
+        return self._as_decision(action)
+
+    def decide_resize(self, loads: np.ndarray, *, num_workers: int = 1) -> int | None:
+        """Run only the elastic resize policy; returns the new partition
+        count, or ``None`` to keep the topology."""
+        signals = Signals(loads=np.asarray(loads, np.float64),
+                          num_workers=num_workers)
+        action = self.resize_policy.evaluate(self, signals)
+        return action.target if isinstance(action, Resize) else None
 
     def replan_resize(self, num_partitions: int) -> Partitioner:
         """Re-plan the partitioner cross-size and install it at a safe point.
 
         The one resize re-planning path shared by ``StreamingJob`` and
-        ``DRScheduler``: heavy keys come from the current sketch (scaled to
-        the new ``lam * n`` budget), the heavy-table width follows the new
-        topology, and the swap is recorded via :meth:`note_resize`.
+        ``DRScheduler``: the sketch is re-warmed first (its ``lam * n``
+        heavy-key budget changes meaning across the resize — stale
+        floor-dominated tail entries must not surface as heavy keys under
+        the grown budget), heavy keys come from the re-warmed sketch, the
+        heavy-table width follows the new topology, and the swap is
+        recorded via :meth:`note_resize`.
         """
         cfg = self.config
         n = int(num_partitions)
+        self.sketch.rescale()
         hist = self.sketch.histogram(top_b=int(np.ceil(cfg.lam * n)))
         heavy_cap = int(np.ceil(max(1.0, cfg.lam * n) / 128.0) * 128)
         new = resize_partitioner(self.partitioner, n, hist, eps=cfg.eps,
@@ -186,12 +216,14 @@ class DRMaster:
 
         Counts as this safe point's decision: advances ``batches_seen`` and
         ``last_repartition`` so the safe-point spacing applies to resizes
-        exactly as to plain repartitions.
+        exactly as to plain repartitions, and stamps ``last_resize`` for the
+        cooldown guard.
         """
         old_n = self.partitioner.num_partitions
         self.batches_seen += 1
         self.partitioner = new
         self.last_repartition = self.batches_seen
+        self.last_resize = self.batches_seen
         self.grow_streak = self.shrink_streak = 0
         self.history.append({
             "batch": self.batches_seen,
@@ -214,6 +246,7 @@ class DRMaster:
             "sketch_total": np.float64(self.sketch.total),
             "batches_seen": np.int64(self.batches_seen),
             "last_repartition": np.int64(self.last_repartition),
+            "last_resize": np.int64(self.last_resize),
             "grow_streak": np.int64(self.grow_streak),
             "shrink_streak": np.int64(self.shrink_streak),
         }
@@ -235,7 +268,8 @@ class DRMaster:
         drm.batches_seen = int(snap["batches_seen"])
         if "last_repartition" in snap:  # older snapshots predate this field
             drm.last_repartition = int(snap["last_repartition"])
-        # elastic-policy streaks (older snapshots predate these fields)
+        # control-plane fields (older snapshots predate these)
+        drm.last_resize = int(snap.get("last_resize", -(10**9)))
         drm.grow_streak = int(snap.get("grow_streak", 0))
         drm.shrink_streak = int(snap.get("shrink_streak", 0))
         return drm

@@ -186,6 +186,31 @@ class CounterSketch:
         h = Histogram.from_counts(self._keys, self._counts, total=max(self.total, 1e-30))
         return h.top(top_b) if top_b is not None else h
 
+    def rescale(self) -> int:
+        """Re-warm the summary when its heavy-key budget changes meaning.
+
+        The DRM reads the top ``B = lam * N`` entries; an elastic resize
+        jumps ``N``, so a *grow* suddenly reads deeper into the table —
+        into entries whose count is dominated by the SpaceSaving floor
+        (the over-approximation every evicted key donates on entry) rather
+        than by observed traffic.  Those stale-tail entries would surface
+        as freshly isolated "heavy" keys purely because they entered the
+        table recently.  Dropping every entry without at least a floor's
+        worth of evidence beyond the inherited floor (``count < 2 * floor``)
+        re-warms the summary: surviving entries are backed by real counts,
+        and genuinely heavy keys sit far above the cut.  Returns the number
+        of entries dropped.  A no-op while the table has never evicted
+        (``floor == 0`` — every count is exact).
+        """
+        if self._floor <= 0.0 or len(self._keys) == 0:
+            return 0
+        keep = self._counts >= 2.0 * self._floor
+        dropped = int((~keep).sum())
+        if dropped:
+            self._keys = self._keys[keep]
+            self._counts = self._counts[keep]
+        return dropped
+
     @property
     def memory_items(self) -> int:
         return len(self._keys)

@@ -17,7 +17,34 @@ import numpy as np
 
 from repro.core.partitioner import Partitioner
 
-__all__ = ["MigrationPlan", "plan_migration", "migration_capacity"]
+__all__ = [
+    "MigrationPlan",
+    "plan_migration",
+    "migration_capacity",
+    "exchange_lane_cost",
+    "fold_to_workers",
+]
+
+
+def fold_to_workers(values: np.ndarray, num_workers: int) -> np.ndarray:
+    """Fold per-partition accounting to worker granularity.
+
+    Partition ``p`` lives on worker ``p % W`` — the one placement rule the
+    runtime, the migration planner, and the control-plane signals all share.
+    Accepts a ``[N]`` vector (loads) or a ``[N, N]`` matrix (transfer) and
+    returns the ``[W]`` / ``[W, W]`` worker-folded equivalent.
+    """
+    v = np.asarray(values, np.float64)
+    n = v.shape[0]
+    w = np.arange(n) % num_workers
+    if v.ndim == 1:
+        out = np.zeros(num_workers)
+        np.add.at(out, w, v)
+        return out
+    assert v.ndim == 2 and v.shape[0] == v.shape[1], v.shape
+    out = np.zeros((num_workers, num_workers))
+    np.add.at(out, (w[:, None], w[None, :]), v)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,12 +131,39 @@ def migration_capacity(
     if transfer.size == 0:
         return 8
     if num_workers is not None:
-        n = transfer.shape[0]
-        w = np.arange(n) % num_workers
-        folded = np.zeros((num_workers, num_workers))
-        np.add.at(folded, (w[:, None], w[None, :]), transfer)
-        np.fill_diagonal(folded, 0.0)  # same-worker moves don't ship
-        transfer = folded
+        transfer = fold_to_workers(transfer, num_workers)
+        np.fill_diagonal(transfer, 0.0)  # same-worker moves don't ship
     peak = float(transfer.max()) / max(row_bytes, 1e-12)
     cap = int(np.ceil(peak * slack / 8.0) * 8)
     return max(cap, 8)
+
+
+def exchange_lane_cost(
+    plan: MigrationPlan,
+    *,
+    num_workers: int | None = None,
+    slack: float = 1.25,
+) -> float:
+    """Migration-cost estimate from the exchange plane's own sizing rule.
+
+    This is the quantity :func:`migration_capacity` quantizes into lane
+    rows — the peak planned (src, dst) transfer times ``slack`` — left in
+    the plan's own weight units so it can be evaluated on a *relative*
+    (frequency-weighted) candidate plan before any state exists.  The
+    control plane's :class:`~repro.control.policy.RepartitionPolicy` weighs
+    this against the planned balance gain, replacing the old
+    heavy-key-frequency-sum heuristic with what the exchange would actually
+    provision.
+
+    With ``num_workers > 1`` the transfer folds to worker granularity and
+    same-worker moves cost nothing (they never cross the exchange); on a
+    single worker — or when the worker count is unknown — partition-level
+    lanes are the accounting unit.
+    """
+    transfer = plan.transfer
+    if transfer.size == 0:
+        return 0.0
+    if num_workers is not None and num_workers > 1:
+        transfer = fold_to_workers(transfer, num_workers)
+        np.fill_diagonal(transfer, 0.0)
+    return float(transfer.max()) * slack

@@ -6,10 +6,14 @@ The job graph is the paper's canonical stateful pipeline::
 
 Per micro-batch the runtime executes the jitted shuffle step (which also
 emits the DRW histograms and global loads), folds received records into the
-keyed state, then gives the DRM a safe point.  If the DRM repartitions, the
-jitted migrate step moves the keyed state before the next batch — the
-Spark-style integration; setting ``checkpoint_interval > 1`` gates decisions
-on checkpoint ticks, the Flink-style integration.
+keyed state, then gives the DRM a safe point.  The job is a thin driver for
+the control plane (``repro.control``): telemetry gathered during normal
+work (loads, overflow, exchange rows + wall time, throughput) snapshots
+into a ``Signals`` record, ``DRMaster.evaluate`` runs the policy stack, and
+the returned typed action (``NoOp``/``Repartition``/``Resize``) is executed
+here — the jitted migrate step moves the keyed state before the next batch,
+the Spark-style integration; setting ``checkpoint_interval > 1`` gates
+decisions on checkpoint ticks, the Flink-style integration.
 
 Both the shuffle and the migration ride the unified exchange plane
 (``repro.exchange``).  Migration lanes are sized from the host-side plan
@@ -40,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.control import NoOp, Repartition, Resize, Telemetry
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL
 from repro.core.migration import migration_capacity, plan_migration
@@ -66,6 +71,7 @@ class BatchMetrics:
     resized: bool = False       # an elastic resize fired at this safe point
     num_partitions: int = 0     # topology after this batch (post-resize)
     migration_plan_rows: int = 0  # migration_capacity() of the plan (pre-pow2)
+    action: str = "noop"        # control-plane action kind this safe point took
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -112,8 +118,10 @@ class StreamingJob:
             self.num_partitions, DEFAULT_NUM_HOSTS, seed, heavy_capacity=heavy_cap
         )
         self.drm = DRMaster(part, cfg)
+        self.telemetry = Telemetry("stream")
         self._shuffle = None
         self._shuffle_sig = None  # (capacity, num_partitions) the step was built for
+        self._shuffle_spec: ExchangeSpec | None = None  # for exchange-row accounting
         self._migrate_steps: dict[int, object] = {}  # lane capacity -> jitted step
         self._pending_resize: int | None = None
         # per-worker keyed state, stacked [W, S] / [W, S, D]
@@ -133,6 +141,7 @@ class StreamingJob:
         if self._shuffle is not None and sig == self._shuffle_sig:
             return
         self._shuffle_sig = sig
+        self._shuffle_spec = ExchangeSpec(num_lanes=self.num_workers, capacity=cap, axis="data")
         self._shuffle = make_shuffle_step(
             self.mesh,
             num_partitions=self.num_partitions,
@@ -180,6 +189,7 @@ class StreamingJob:
         valid = keys != KEY_SENTINEL
         self._build(local_n * w)
 
+        t_ex = time.perf_counter()
         tables = self.drm.partitioner.tables()
         res = self._shuffle(tables, jnp.asarray(keys), jnp.asarray(values, jnp.float32), jnp.asarray(valid))
 
@@ -187,63 +197,65 @@ class StreamingJob:
         self.state_keys, self.state_vals, st_overflow = self._merge(
             self.state_keys, self.state_vals, res.keys, res.values, res.valid
         )
+        loads = np.asarray(res.loads)  # forces the batch's device work
 
-        # DRM: ingest DRW histograms + decide at the safe point
-        loads = np.asarray(res.loads)
+        # telemetry: signals gathered during normal work (no extra passes)
+        self.telemetry.record_exchange(self._shuffle_spec.rows,
+                                       time.perf_counter() - t_ex)
+        self.telemetry.record_overflow(shuffle=int(res.overflow))
+        self.telemetry.record_batch(float(loads.sum()))
+
+        # DRM: ingest DRW histograms + run the policy stack at the safe point
         self.drm.observe(np.asarray(res.hist_keys), np.asarray(res.hist_counts),
                          total_records=float(loads.sum()))
-        worker_loads = loads.reshape(-1, self.num_workers).sum(axis=0) if self.num_partitions % self.num_workers == 0 else np.bincount(
-            np.arange(self.num_partitions) % self.num_workers, weights=loads, minlength=self.num_workers
-        )
-        rel_mig = 0.0
-        mig_overflow = 0
-        mig_rows = 0
-        plan_rows = 0
-        decision = None
-        resized = False
-        reason = None
         at_checkpoint = (len(self.metrics) + 1) % self.checkpoint_interval == 0
-        if at_checkpoint:
-            # elastic resize first: an explicit resize() request, else the
-            # DRM policy.  A resize is this safe point's decision — the
-            # plain repartition path is skipped for the tick.
-            target = self._pending_resize
-            if target is not None:
-                self._pending_resize = None
-            elif self.dr_enabled:
-                target = self.drm.decide_resize(loads, num_workers=self.num_workers)
-            if target is not None and target != self.num_partitions:
-                old_n = self.num_partitions
-                rel_mig, mig_overflow, mig_rows, plan_rows = self._apply_resize(int(target))
-                resized = True
-                reason = f"resize {old_n}->{self.num_partitions}"
-            elif self.dr_enabled:
-                old_part = self.drm.partitioner
-                decision = self.drm.decide(loads)
-                if decision.repartition:
-                    rel_mig, mig_overflow, mig_rows, plan_rows = self._migrate_state(old_part)
-        if reason is None:
-            if decision is not None:
-                reason = decision.reason
-            else:
-                reason = "dr-disabled" if not self.dr_enabled else "not-checkpoint-tick"
+        requested = None
+        if at_checkpoint and self._pending_resize is not None:
+            requested = self._pending_resize
+            self._pending_resize = None
+        signals = self.telemetry.snapshot(
+            loads=loads,
+            num_workers=w,
+            state_rows=self._state_rows(),
+            at_safe_point=at_checkpoint,
+        )
+        action = self.drm.evaluate(signals, requested_resize=requested,
+                                   policies_enabled=self.dr_enabled)
+
+        # execute the action (state only moves here, at the safe point)
+        rel_mig, mig_overflow, mig_rows, plan_rows = 0.0, 0, 0, 0
+        if isinstance(action, Resize):
+            rel_mig, mig_overflow, mig_rows, plan_rows = self._apply_resize(action.target)
+        elif isinstance(action, Repartition):
+            rel_mig, mig_overflow, mig_rows, plan_rows = self._migrate_state(action.prev)
+        if mig_rows:
+            self.telemetry.record_exchange(mig_rows)
+            self.telemetry.record_overflow(migration=mig_overflow)
+
         m = BatchMetrics(
             batch=len(self.metrics),
-            imbalance=float(loads.max() / max(loads.mean(), 1e-12)),
-            worker_imbalance=float(worker_loads.max() / max(worker_loads.mean(), 1e-12)),
-            repartitioned=bool(decision.repartition) if decision else resized,
+            imbalance=signals.imbalance,
+            worker_imbalance=signals.worker_imbalance,
+            repartitioned=action.taken,
             relative_migration=rel_mig,
             overflow=int(res.overflow) + mig_overflow,
-            state_rows=int(np.asarray(jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)).sum()),
+            state_rows=signals.state_rows if isinstance(action, NoOp) else self._state_rows(),
             wall_time_s=time.perf_counter() - t0,
-            reason=reason,
+            reason=action.reason,
             migration_rows=mig_rows,
-            resized=resized,
+            resized=isinstance(action, Resize),
             num_partitions=self.num_partitions,
             migration_plan_rows=plan_rows,
+            action=action.kind,
         )
         self.metrics.append(m)
         return m
+
+    def _state_rows(self) -> int:
+        """Live keyed-state rows across all workers (the migration scale)."""
+        return int(np.asarray(
+            jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)
+        ).sum())
 
     # -- elastic resize -------------------------------------------------
     def resize(self, num_partitions: int) -> None:

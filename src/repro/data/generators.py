@@ -7,13 +7,26 @@
   protocol ("replacing keys with randomly generated strings in each round").
 * ``host_skew_keys`` — web-crawl-like: few giant hosts, heavy-tailed rest
   (the §6 fetch-list workload).
+* ``hotspot_flip``   — nonstationary: the whole heavy set goes cold at one
+  batch boundary and a disjoint set goes hot (sharpest drift the EWMA
+  sketch must survive).
+* ``sawtooth_skew``  — nonstationary: imbalance flips across the elastic
+  grow/shrink triggers every half-period (the oscillation-guard stress
+  workload).
 * ``lm_token_stream``— token batches for the LM data pipeline.
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["zipf_keys", "drifting_zipf", "host_skew_keys", "lm_token_stream"]
+__all__ = [
+    "zipf_keys",
+    "drifting_zipf",
+    "host_skew_keys",
+    "hotspot_flip",
+    "sawtooth_skew",
+    "lm_token_stream",
+]
 
 
 def _zipf_probs(num_keys: int, exponent: float) -> np.ndarray:
@@ -82,6 +95,61 @@ def host_skew_keys(
     probs = np.concatenate([head, tail])
     ids = rng.choice(2**30, size=num_hosts, replace=False)
     return ids[rng.choice(num_hosts, size=n, p=probs)].astype(np.int64)
+
+
+def hotspot_flip(
+    num_batches: int,
+    batch_size: int,
+    num_keys: int = 10_000,
+    exponent: float = 1.5,
+    flip_at: int | None = None,
+    seed: int = 0,
+):
+    """Yield Zipf batches whose rank -> key-identity mapping is re-drawn
+    *once*, at batch ``flip_at`` (default: the midpoint).
+
+    Unlike ``drifting_zipf``'s gradual churn, this is the sharpest
+    nonstationarity a controller faces: every isolated heavy key goes cold
+    in a single batch boundary while a disjoint set goes hot, so the stale
+    heavy table actively misroutes until the sketch decays and the policy
+    re-triggers.
+    """
+    flip_at = num_batches // 2 if flip_at is None else flip_at
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(num_keys, exponent)
+    ids = rng.choice(2**30, size=num_keys, replace=False).astype(np.int64)
+    for b in range(num_batches):
+        if b == flip_at:
+            ids = rng.choice(2**30, size=num_keys, replace=False).astype(np.int64)
+        ranks = rng.choice(num_keys, size=batch_size, p=probs)
+        yield ids[ranks].copy()
+
+
+def sawtooth_skew(
+    num_batches: int,
+    batch_size: int,
+    num_keys: int = 10_000,
+    exponent: float = 1.8,
+    period: int = 2,
+    seed: int = 0,
+):
+    """Yield batches alternating ``period`` hard-Zipf batches with
+    ``period`` near-uniform batches.
+
+    The measured imbalance flips across the elastic grow/shrink triggers
+    every half-period, so a controller without hysteresis ping-pongs the
+    partition count — the stress workload for the control plane's cooldown
+    guard.  Key identities stay fixed across phases (the *load* is
+    nonstationary, not the key population).
+    """
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(2**30, size=num_keys, replace=False).astype(np.int64)
+    hot = _zipf_probs(num_keys, exponent)
+    flat = np.full(num_keys, 1.0 / num_keys)
+    for b in range(num_batches):
+        probs = hot if (b // period) % 2 == 0 else flat
+        ranks = rng.choice(num_keys, size=batch_size, p=probs)
+        yield ids[ranks].copy()
 
 
 def lm_token_stream(

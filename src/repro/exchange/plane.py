@@ -62,6 +62,14 @@ class ExchangeSpec:
     capacity: int
     axis: str | None = None
 
+    @property
+    def rows(self) -> int:
+        """Rows one exchange call ships per worker (``num_lanes * capacity``)
+        — the static accounting unit the control plane's telemetry records
+        per call (``Telemetry.record_exchange``), so policy cost models see
+        what the plane actually provisions rather than a heuristic."""
+        return self.num_lanes * self.capacity
+
     def resized(
         self, *, num_lanes: int | None = None, capacity: int | None = None
     ) -> "ExchangeSpec":

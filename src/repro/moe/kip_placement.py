@@ -13,6 +13,13 @@ Mapping onto the paper's objects:
 post-processes the shard assignment into exactly ``E/shards`` slots per
 shard (KIP knows load bounds, not slot counts), preferring to keep every
 expert where it was — Algorithm 1's migration-minimality carried through.
+
+The *whether* of a re-placement routes through the shared control plane:
+router statistics feed a :class:`~repro.control.Telemetry` window, the
+:class:`~repro.control.policy.PlacementPolicy` (paper §4's trigger over
+shard loads, plus the shared cooldown guard) returns a typed action, and
+every decision — declined ones included — lands in the controller's
+:class:`~repro.control.DecisionLog`.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import DecisionLog, PlacementPolicy, Replace, Telemetry
 from repro.core.histogram import CounterSketch, Histogram
 from repro.core.partitioner import Partitioner, kip_update, uniform_partitioner
 
@@ -110,6 +118,11 @@ class PlacementController:
         self.steps = 0
         self.last_update = -(10**9)
         self.history: list[dict] = []
+        # control plane: the trigger/cooldown decision is a shared policy,
+        # fed by telemetry gathered from normal router statistics
+        self.policy = PlacementPolicy()
+        self.telemetry = Telemetry("moe")
+        self.decisions = DecisionLog("moe")
 
     def shard_loads(self, loads: np.ndarray) -> np.ndarray:
         e_loc = self.e // self.n
@@ -120,15 +133,18 @@ class PlacementController:
         tot = max(c.sum(), 1e-9)
         self.loads_ewma = (1 - self.alpha) * self.loads_ewma + self.alpha * (c / tot)
         self.steps += 1
+        self.telemetry.record_batch(float(c.sum()))
 
     def maybe_update(self) -> tuple[bool, ExpertPlacement, np.ndarray]:
         """Returns (changed, placement, slot_perm) where ``slot_perm[p_new] =
         p_old`` is the permutation to apply to stacked expert weights."""
         sl = self.shard_loads(self.loads_ewma)
-        imb = float(sl.max() / max(sl.mean(), 1e-12))
-        if (imb < self.trigger or self.e <= self.n
-                or self.steps - self.last_update < self.min_steps_between):
+        signals = self.telemetry.snapshot(loads=sl, num_workers=self.n)
+        action = self.policy.evaluate(self, signals)
+        self.decisions.record(action, tick=self.steps, imbalance=signals.imbalance)
+        if not isinstance(action, Replace):
             return False, self.placement, np.arange(self.e, dtype=np.int32)
+        imb = signals.imbalance
 
         hist = Histogram.from_counts(np.arange(self.e), np.maximum(self.loads_ewma, 1e-9))
         # previous placement as a Partitioner (explicit routing for all keys)
@@ -150,8 +166,7 @@ class PlacementController:
         # whose weights currently sit at old slot inv_old[new.place[p]]
         perm = self.placement.inv_place[new.place].astype(np.int32)
         moved = int((perm != np.arange(self.e)).sum())
-        new_sl = self.shard_loads(self.loads_ewma) if False else (
-            self.loads_ewma[new.place].reshape(self.n, -1).sum(axis=1))
+        new_sl = self.loads_ewma[new.place].reshape(self.n, -1).sum(axis=1)
         self.history.append({
             "step": self.steps, "imbalance_before": imb,
             "imbalance_planned": float(new_sl.max() / max(new_sl.mean(), 1e-12)),

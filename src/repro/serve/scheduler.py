@@ -12,6 +12,12 @@ gain.
 Replicas here are modeled objects (queue depths), keeping the scheduler
 testable without spinning 16 engines; ``ServeEngine`` is the per-replica
 execution unit.
+
+``checkpoint`` is a thin control-plane driver: it feeds the window's
+telemetry (queue depths, routed records) into ``DRMaster.evaluate`` and
+executes whatever typed action the shared policy stack returns — replica
+scale-out/in (``Resize``) or session re-routing (``Repartition``) — always
+returning the same result schema.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.control import Repartition, Resize, Telemetry
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS
 from repro.core.partitioner import uniform_partitioner
@@ -41,7 +48,8 @@ class DRScheduler:
         heavy_cap = int(np.ceil(max(1.0, cfg.lam * num_replicas) / 128.0) * 128)
         init = uniform_partitioner(num_replicas, DEFAULT_NUM_HOSTS, seed,
                                    heavy_capacity=heavy_cap)
-        self.drm = DRMaster(init, cfg)
+        self.drm = DRMaster(init, cfg, consumer="serve")
+        self.telemetry = Telemetry("serve")
         self.migration_token_cost = migration_token_cost
         self.migrations = 0
         self.routed = 0
@@ -61,35 +69,41 @@ class DRScheduler:
         for rep in self.replicas:
             rep.queued_tokens = max(0.0, rep.queued_tokens - tokens_per_replica)
 
-    # -- safe point: observe + maybe repartition --------------------------
+    # -- safe point: feed signals, execute the stack's action --------------
     def checkpoint(self, window_keys: np.ndarray) -> dict:
-        keys, counts = np.unique(np.asarray(window_keys, np.int64), return_counts=True)
+        """One decision point: telemetry in, typed action out, executed.
+
+        Always returns the same schema — ``repartitioned``, ``resized``,
+        ``num_replicas``, ``imbalance``, ``moved_sessions``, ``reason`` —
+        whatever the decision was (including declines, whose reason comes
+        from the decision log's record).
+        """
+        window_keys = np.asarray(window_keys, np.int64)
+        keys, counts = np.unique(window_keys, return_counts=True)
         self.drm.observe(keys.reshape(1, -1), counts.reshape(1, -1))
         loads = np.array([r.queued_tokens for r in self.replicas])
-        # elastic scale-out/in first — a resize is this decision point's action
-        target = self.drm.decide_resize(loads + 1e-9)
-        if target is not None and target != len(self.replicas):
-            old_n = len(self.replicas)
-            moved_sessions = self.resize(target)
-            return {
-                "repartitioned": True,
-                "resized": True,
-                "num_replicas": len(self.replicas),
-                "imbalance": float(loads.max() / max(loads.mean(), 1e-9)),
-                "moved_sessions": moved_sessions,
-                "reason": f"resize {old_n}->{len(self.replicas)}",
-            }
-        before = self.drm.partitioner
-        decision = self.drm.decide(loads + 1e-9)
+        self.telemetry.record_batch(float(len(window_keys)))
+        self.telemetry.record_queues(loads)
+        # replicas are *elastic* partitions, not a fixed physical worker set:
+        # num_workers=1 keeps the resize floor at min_partitions (scale-in
+        # must stay reachable) and session moves costed replica-to-replica
+        signals = self.telemetry.snapshot(loads=loads + 1e-9, num_workers=1)
+        action = self.drm.evaluate(signals)
         moved_sessions = 0
-        if decision.repartition:
+        if isinstance(action, Resize):
+            # elastic scale-out/in — a resize is this decision point's action
+            moved_sessions = self.resize(action.target)
+        elif isinstance(action, Repartition):
             # migrate each moved session's KV cache
             moved_sessions = self._reroute_sessions(self.drm.partitioner)
             self.migrations += moved_sessions
         return {
-            "repartitioned": decision.repartition,
-            "imbalance": decision.measured_imbalance,
+            "repartitioned": action.taken,
+            "resized": isinstance(action, Resize),
+            "num_replicas": len(self.replicas),
+            "imbalance": float(signals.imbalance),
             "moved_sessions": moved_sessions,
+            "reason": action.reason,
         }
 
     def imbalance(self) -> float:

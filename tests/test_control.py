@@ -1,0 +1,386 @@
+"""Control plane: signals, policy stack, cooldown guard, decision log.
+
+Covers the tentpole wiring (all three consumers route through
+``repro.control``) plus the oscillation-guard and throughput-shrink
+policy rules, at both the unit (synthetic ``Signals``) and end-to-end
+(``StreamingJob`` on a sawtooth workload) level.
+"""
+import numpy as np
+import pytest
+
+from repro.control import NoOp, Repartition, Replace, Resize, Signals, Telemetry
+from repro.core.drm import DRConfig, DRMaster
+from repro.core.migration import (
+    exchange_lane_cost,
+    fold_to_workers,
+    migration_capacity,
+    plan_migration,
+)
+from repro.core.partitioner import uniform_partitioner
+from repro.core.streaming import StreamingJob
+from repro.data.generators import sawtooth_skew
+from repro.moe.kip_placement import PlacementController
+from repro.serve.scheduler import DRScheduler
+
+HOT = np.array([10.0, 1.0, 1.0, 1.0])
+FLAT = np.array([1.0, 1.0, 1.0, 1.0])
+
+
+def _warm_drm(cfg=None, n=4) -> DRMaster:
+    """DRM with a skewed sketch so the repartition policy has a histogram.
+
+    ``total_records`` is double the summary mass, so half the traffic is
+    untracked tail riding the host tables — the cost model must account it
+    when hosts are re-binned."""
+    drm = DRMaster(uniform_partitioner(n, heavy_capacity=128), cfg or DRConfig())
+    keys = np.arange(8, dtype=np.int64)
+    counts = np.array([400.0, 100, 50, 25, 12, 6, 3, 1])
+    drm.observe(keys[None], counts[None], total_records=2.0 * float(counts.sum()))
+    return drm
+
+
+# ---------------------------------------------------------------------------
+# signals + telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_signals_derived_metrics():
+    s = Signals(loads=np.array([4.0, 2, 1, 1]), num_workers=2,
+                records=600.0, window_wall_s=2.0)
+    assert s.imbalance == pytest.approx(2.0)
+    np.testing.assert_allclose(s.worker_loads, [5.0, 3.0])  # p % 2 folding
+    assert s.worker_imbalance == pytest.approx(1.25)
+    assert s.throughput == pytest.approx(300.0)
+    assert s.per_worker_throughput == pytest.approx(150.0)
+    empty = Signals(loads=np.zeros(4))
+    assert empty.imbalance == 1.0 and empty.throughput == 0.0
+
+
+def test_telemetry_window_accumulates_until_safe_point():
+    t = Telemetry("stream")
+    t.record_batch(100)
+    t.record_exchange(64, 0.5)
+    peek = t.snapshot(loads=FLAT, at_safe_point=False)  # peek: no reset
+    t.record_batch(100)
+    t.record_overflow(shuffle=3, migration=2)
+    s = t.snapshot(loads=FLAT, num_workers=2, state_rows=7)
+    assert peek.records == 100 and s.records == 200  # window spanned both
+    assert s.exchange_rows == 64 and s.exchange_wall_s == pytest.approx(0.5)
+    assert s.shuffle_overflow == 3 and s.migration_overflow == 2
+    assert s.state_rows == 7 and s.consumer == "stream"
+    fresh = t.snapshot(loads=FLAT)  # the safe point reset the window
+    assert fresh.records == 0 and fresh.exchange_rows == 0
+
+
+def test_fold_to_workers_vector_and_matrix():
+    loads = np.array([5.0, 1, 2, 3, 4, 6])
+    np.testing.assert_allclose(fold_to_workers(loads, 2), [11.0, 10.0])
+    m = np.zeros((4, 4))
+    m[0, 3] = 5.0  # worker 0 -> worker 1
+    m[2, 0] = 2.0  # worker 0 -> worker 0 (same worker after folding)
+    folded = fold_to_workers(m, 2)
+    assert folded[0, 1] == 5.0 and folded[0, 0] == 2.0
+
+
+def test_exchange_lane_cost_matches_capacity_rule():
+    """The policy's cost estimate is migration_capacity's sizing rule minus
+    the row quantization — same fold, same slack, same peak."""
+    old = uniform_partitioner(4, seed=0)
+    new = uniform_partitioner(4, seed=3)
+    live = np.arange(512, dtype=np.int64)
+    plan = plan_migration(old, new, live)
+    cost = exchange_lane_cost(plan, num_workers=2)
+    cap = migration_capacity(plan, num_workers=2)
+    assert cost > 0
+    assert cap == max(8, int(np.ceil(cost / 8.0) * 8))
+    # unfolded (unknown workers): partition-level lanes are the unit — the
+    # peak of finer lanes can only be <= the worker-folded aggregate's
+    assert 0 < exchange_lane_cost(plan) <= cost
+
+
+# ---------------------------------------------------------------------------
+# the policy stack through DRMaster.evaluate
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_not_safe_point_declines_without_logging():
+    drm = _warm_drm()
+    a = drm.evaluate(Signals(loads=HOT, at_safe_point=False))
+    assert isinstance(a, NoOp) and a.reason == "not-checkpoint-tick"
+    # a peek is not a decision: the log counts safe points only
+    assert len(drm.decisions) == 0 and drm.decisions.counts() == (0, 0)
+
+
+def test_decision_log_bounded_with_exact_counts():
+    drm = _warm_drm(DRConfig())
+    drm.decisions.max_records = 16
+    for _ in range(40):
+        drm.evaluate(Signals(loads=FLAT), policies_enabled=False)
+    assert len(drm.decisions.records) == 16  # trimmed ...
+    assert drm.decisions.counts() == (0, 40)  # ... counters stay cumulative
+
+
+def test_evaluate_requested_resize_wins():
+    drm = _warm_drm(DRConfig(elastic=True))
+    a = drm.evaluate(Signals(loads=HOT), requested_resize=8)
+    assert isinstance(a, Resize) and a.target == 8 and a.requested
+    assert a.reason == "resize 4->8"
+    # a request equal to the current topology falls through to the policies
+    a2 = drm.evaluate(Signals(loads=FLAT), requested_resize=4)
+    assert isinstance(a2, NoOp)
+
+
+def test_evaluate_disabled_policies_noop():
+    drm = _warm_drm()
+    a = drm.evaluate(Signals(loads=HOT), policies_enabled=False)
+    assert isinstance(a, NoOp) and a.reason == "dr-disabled"
+    assert drm.batches_seen == 0  # nothing advanced: no policy ran
+
+
+def test_evaluate_repartition_installs_and_logs():
+    drm = _warm_drm(DRConfig(imbalance_trigger=1.05, migration_cost_weight=0.0))
+    before = drm.partitioner
+    a = drm.evaluate(Signals(loads=np.array([500.0, 30, 30, 37])))
+    assert isinstance(a, Repartition)
+    assert drm.partitioner is a.partitioner and a.prev is before
+    assert a.est_migration > 0  # exchange-lane accounting, not zero
+    taken, declined = drm.decisions.counts()
+    assert (taken, declined) == (1, 0)
+
+
+def test_cost_model_blocks_expensive_migration():
+    drm = _warm_drm(DRConfig(imbalance_trigger=1.05, migration_cost_weight=1e9))
+    a = drm.evaluate(Signals(loads=np.array([500.0, 30, 30, 37])))
+    assert isinstance(a, NoOp) and a.reason.startswith("gain ")
+    assert a.est_migration > 0  # the declined cost is recorded too
+
+
+# ---------------------------------------------------------------------------
+# oscillation guard (cooldown) + throughput shrink
+# ---------------------------------------------------------------------------
+
+
+def _sawtooth_cfg(cooldown: int) -> DRConfig:
+    return DRConfig(elastic=True, min_partitions=4, max_partitions=8,
+                    grow_trigger=1.5, shrink_trigger=1.05, resize_patience=1,
+                    resize_cooldown=cooldown, imbalance_trigger=1e9)
+
+
+def _drive_sawtooth(drm: DRMaster, ticks: int = 12) -> list[int]:
+    """Alternate hot/flat loads through the full stack; execute resizes the
+    way a driver would (replan at the safe point).  Returns topology sizes."""
+    sizes = []
+    for t in range(ticks):
+        loads = HOT if (t // 2) % 2 == 0 else FLAT
+        loads = np.resize(loads, drm.partitioner.num_partitions)
+        a = drm.evaluate(Signals(loads=loads))
+        if isinstance(a, Resize):
+            drm.replan_resize(a.target)
+            sizes.append(a.target)
+    return sizes
+
+
+def test_cooldown_guard_stops_pingpong():
+    # without the guard the sawtooth ping-pongs the partition count
+    sizes = _drive_sawtooth(DRMaster(uniform_partitioner(4), _sawtooth_cfg(0)))
+    dirs = [s > p for s, p in zip(sizes, [4] + sizes[:-1])]
+    assert sum(1 for a, b in zip(dirs, dirs[1:]) if a != b) >= 2, sizes
+    # with it on: the initial grow fires, everything after is declined
+    drm = DRMaster(uniform_partitioner(4), _sawtooth_cfg(100))
+    sizes = _drive_sawtooth(drm)
+    assert sizes == [8]
+    declined = [d for d in drm.decisions.records
+                if d.detail.get("resize_declined") == "resize-cooldown"]
+    assert declined, "cooldown declines must be observable in the log"
+
+
+def test_cooldown_expiry_allows_followup_resize():
+    drm = DRMaster(uniform_partitioner(4), _sawtooth_cfg(3))
+    assert _drive_sawtooth(drm, ticks=2) == [8]   # grow at tick 0
+    # flat ticks inside the cooldown: declined; after expiry: shrink fires
+    sizes = _drive_sawtooth(drm, ticks=2)  # ticks are hot again: at-max
+    for _ in range(6):
+        a = drm.evaluate(Signals(loads=np.resize(FLAT, 8)))
+        if isinstance(a, Resize):
+            drm.replan_resize(a.target)
+            assert a.target == 4
+            return
+    raise AssertionError("shrink never fired after cooldown expiry")
+
+
+def test_throughput_below_target_shrinks_when_balanced():
+    """An idle stream in the trigger dead zone (imbalance can't shrink it)
+    still shrinks on the capacity-target signal."""
+    cfg = DRConfig(elastic=True, min_partitions=2, max_partitions=16,
+                   grow_trigger=1.5, shrink_trigger=0.9,  # imb >= 1 always:
+                   resize_patience=2, target_throughput=1000.0)  # unreachable
+    drm = DRMaster(uniform_partitioner(4), cfg)
+    idle = Signals(loads=np.array([1.2, 1.0, 1.0, 1.0]),  # dead zone
+                   records=100.0, window_wall_s=1.0)      # 100 rec/s << 1000
+    assert isinstance(drm.resize_policy.evaluate(drm, idle), NoOp)  # patience 1/2
+    a = drm.resize_policy.evaluate(drm, idle)
+    assert isinstance(a, Resize) and a.target == 2
+    # same loads at a healthy throughput: dead zone holds, no shrink
+    drm2 = DRMaster(uniform_partitioner(4), cfg)
+    busy = Signals(loads=np.array([1.2, 1.0, 1.0, 1.0]),
+                   records=10_000.0, window_wall_s=1.0)
+    assert isinstance(drm2.resize_policy.evaluate(drm2, busy), NoOp)
+    a2 = drm2.resize_policy.evaluate(drm2, busy)
+    assert isinstance(a2, NoOp) and a2.reason == "dead-zone"
+
+
+def test_low_throughput_never_shrinks_a_hotspot():
+    """Idle + hot-spotted at max_partitions must not shrink: fewer bins
+    would concentrate the hotspot further.  The throughput shrink covers
+    the trigger dead zone only."""
+    cfg = DRConfig(elastic=True, min_partitions=2, max_partitions=4,
+                   grow_trigger=1.5, shrink_trigger=1.05,
+                   resize_patience=1, target_throughput=1000.0)
+    drm = DRMaster(uniform_partitioner(4), cfg)  # n == max_partitions
+    hot_idle = Signals(loads=np.array([100.0, 1.0, 1.0, 1.0]),
+                       records=10.0, window_wall_s=1.0)  # 10 rec/s << 1000
+    for _ in range(4):
+        a = drm.resize_policy.evaluate(drm, hot_idle)
+        assert isinstance(a, NoOp) and a.reason == "at-max", a
+
+
+def test_scheduler_policy_scale_in_on_idle_replicas():
+    """Sustained balanced (idle) queues shrink the replica set through the
+    checkpoint policy path — scale-in must not be floored at the current
+    replica count."""
+    sched = DRScheduler(4, dr=DRConfig(lam=4.0, elastic=True, min_partitions=2,
+                                       max_partitions=8, grow_trigger=1.5,
+                                       shrink_trigger=1.2, resize_patience=2,
+                                       imbalance_trigger=1e9))
+    rng = np.random.default_rng(2)
+    results = []
+    for _ in range(3):
+        window = rng.integers(0, 10_000, 512)  # uniform sessions: balanced
+        for s in window:
+            sched.route(int(s), 1.0)
+        results.append(sched.checkpoint(window))
+        sched.drain(1e9)  # fully idle between windows
+    assert any(r["resized"] for r in results), results
+    assert len(sched.replicas) == 2
+
+
+def test_replan_resize_rewarns_sketch_before_growing():
+    """A grow widens the heavy-key budget (lam * n); stale floor-dominated
+    sketch entries must not surface in the resized heavy table."""
+    drm = DRMaster(uniform_partitioner(4, heavy_capacity=128),
+                   DRConfig(lam=2.0, sketch_capacity=8, sketch_decay=1.0))
+    heavy = np.arange(4, dtype=np.int64)
+    drm.observe(heavy[None], np.full((1, 4), 500.0))
+    for k in range(100, 140):  # one-off parade: evictions raise the floor
+        drm.observe(np.array([[k]], dtype=np.int64), np.array([[1.0]]))
+    assert drm.sketch._floor > 0
+    stale = set(drm.sketch.histogram().keys.tolist()) - set(heavy.tolist())
+    assert stale  # the un-rescaled window would read into these
+    new = drm.replan_resize(8)  # top_b jumps 8 -> 16
+    isolated = set(new.heavy_keys[new.heavy_keys >= 0].tolist())
+    assert isolated & set(heavy.tolist())
+    assert not (isolated & stale), isolated & stale
+
+
+def test_trigger_gap_dead_zone_enforced():
+    with pytest.raises(AssertionError):
+        DRConfig(elastic=True, grow_trigger=1.2, shrink_trigger=1.3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: StreamingJob sawtooth through the full runtime
+# ---------------------------------------------------------------------------
+
+
+def _reversals(sizes: list[int], start: int = 4) -> int:
+    dirs = [s > p for s, p in zip(sizes, [start] + sizes[:-1])]
+    return sum(1 for a, b in zip(dirs, dirs[1:]) if a != b)
+
+
+def test_streaming_sawtooth_no_pingpong_with_guard():
+    """End-to-end oscillation guard: plain DR rebalances contents during the
+    flat phase (so the measured imbalance genuinely flips across the
+    triggers), and the elastic policy ping-pongs the partition count unless
+    the cooldown guard is on."""
+    def run(cooldown):
+        job = StreamingJob(
+            num_partitions=4, state_capacity=8192,
+            dr=DRConfig(elastic=True, min_partitions=4, max_partitions=8,
+                        grow_trigger=2.0, shrink_trigger=1.45,
+                        resize_patience=1, resize_cooldown=cooldown,
+                        imbalance_trigger=1.3, migration_cost_weight=0.05,
+                        sketch_decay=0.5),
+        )
+        ms = job.run(sawtooth_skew(12, 4096, num_keys=2_000, exponent=1.8,
+                                   period=3, seed=7))
+        return job, [m.num_partitions for m in ms if m.resized]
+
+    job_off, sizes_off = run(cooldown=0)
+    assert len(sizes_off) >= 2 and _reversals(sizes_off) >= 2, sizes_off
+    job, sizes = run(cooldown=100)
+    assert sizes == [8], sizes  # grow-under-skew fires once, never reverses
+    assert _reversals(sizes) == 0
+    declined = [d for d in job.drm.decisions.records
+                if d.detail.get("resize_declined") == "resize-cooldown"]
+    assert declined, "cooldown declines must be observable in the log"
+    # BatchMetrics reads the decision log's action/reason
+    first = [m for m in job.metrics if m.resized][0]
+    assert first.action == "resize" and first.reason == "resize 4->8"
+
+
+# ---------------------------------------------------------------------------
+# the other consumers: serving scheduler + MoE placement
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_checkpoint_uniform_schema():
+    """Resize, repartition, and decline branches all return the same keys."""
+    rng = np.random.default_rng(0)
+    sched = DRScheduler(4, dr=DRConfig(lam=4.0, elastic=True, min_partitions=2,
+                                       max_partitions=8, grow_trigger=1.5,
+                                       shrink_trigger=1.02, resize_patience=1,
+                                       imbalance_trigger=1e9))
+    keys = ["repartitioned", "resized", "num_replicas", "imbalance",
+            "moved_sessions", "reason"]
+    results = []
+    for _ in range(2):
+        window = []
+        for _ in range(200):
+            s = 7 if rng.random() < 0.7 else int(rng.integers(100, 5000))
+            sched.route(s, 32.0)
+            window.append(s)
+        results.append(sched.checkpoint(np.array(window)))
+        sched.drain(2000.0)
+    assert any(r["resized"] for r in results)
+    for r in results:
+        assert sorted(r.keys()) == sorted(keys), r
+        assert isinstance(r["reason"], str) and r["reason"]
+    assert len(sched.drm.decisions) == len(results)
+
+
+def test_placement_controller_logs_decisions():
+    ctl = PlacementController(16, 4, trigger=1.05)
+    ctl.observe(np.ones(16))
+    changed, _, _ = ctl.maybe_update()
+    assert not changed
+    assert ctl.decisions.records[-1].reason == "balanced"
+    loads = np.ones(16)
+    loads[0], loads[1] = 20.0, 15.0
+    for _ in range(3):
+        ctl.observe(loads)
+    changed, _, _ = ctl.maybe_update()
+    assert changed
+    d = ctl.decisions.records[-1]
+    assert d.taken and d.kind == "replace" and d.consumer == "moe"
+    taken, declined = ctl.decisions.counts()
+    assert (taken, declined) == (1, 1)
+
+
+def test_batchmetrics_carries_action_kind():
+    job = StreamingJob(num_partitions=4, state_capacity=2048, dr_enabled=False)
+    rng = np.random.default_rng(1)
+    m = job.process_batch(rng.integers(0, 500, 1024))
+    assert m.action == "noop" and m.reason == "dr-disabled"
+    job.resize(8)
+    m2 = job.process_batch(rng.integers(0, 500, 1024))
+    assert m2.action == "resize" and m2.resized

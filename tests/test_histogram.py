@@ -70,6 +70,29 @@ class TestCounterSketch:
         h = cs.histogram(top_b=5)
         assert 7 not in h.keys[:3].tolist()
 
+    def test_rescale_drops_stale_tail(self):
+        """Resize-aware re-warm: after evictions raised the floor, entries
+        with no evidence beyond the inherited floor are dropped, so a grown
+        ``top_b`` window cannot surface them as heavy keys."""
+        cs = CounterSketch(capacity=8)
+        heavy = np.repeat(np.arange(4), 500)  # keys 0..3, 500 each
+        cs.update(heavy)
+        # parade of one-off keys: forces evictions, raises the floor, and
+        # leaves the last arrivals sitting at ~floor + 1 (stale tail)
+        for k in range(100, 140):
+            cs.update(np.array([k]))
+        assert cs._floor > 0
+        before = set(cs.histogram(top_b=16).keys.tolist())
+        assert before - {0, 1, 2, 3}, "parade keys should pollute the window"
+        dropped = cs.rescale()
+        assert dropped > 0
+        after = cs.histogram(top_b=16)
+        assert set(after.keys.tolist()) == {0, 1, 2, 3}
+        # a fresh sketch that never evicted is untouched
+        cs2 = CounterSketch(capacity=64)
+        cs2.update(heavy)
+        assert cs2.rescale() == 0 and cs2.memory_items == 4
+
 
 def test_spacesaving_error_bound():
     """|est - true| <= total/capacity (classic SpaceSaving guarantee)."""
