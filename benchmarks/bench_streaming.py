@@ -1,6 +1,15 @@
 """Fig. 6 — relative streaming-throughput increase from DR vs. Zipf
 exponent, measured on the real micro-batch runtime (StreamingJob on the
 local mesh; stateful count reducer, matching the paper's Flink setup).
+
+Every skewed profile runs under both exchange backends: the dense
+capacity-padded transport and the ragged count-first one.  Per backend the
+CSV carries rows shipped + wall time (``fig6/exchange_*`` with a backend
+column), the ragged rows must be strictly below the dense padded provision
+on these power-law profiles, and the two backends must produce *exactly*
+the same keyed-state counts — any mismatch raises, failing the bench run
+(the CI bench-smoke gate).
+
 Also measures the elastic-resize cost (rows shipped + wall time for a
 grow 4->8 and a shrink 8->4, next to the plain migration rows) and the
 control plane under *nonstationary* drift: a sudden hotspot flip, and a
@@ -16,6 +25,7 @@ import numpy as np
 from repro.core.drm import DRConfig
 from repro.core.streaming import StreamingJob
 from repro.data.generators import drifting_zipf, hotspot_flip, sawtooth_skew, zipf_keys
+from repro.exchange import resolve_backend
 
 EXPONENTS = [1.0, 1.3, 1.6, 2.0]
 
@@ -31,29 +41,76 @@ def _worker_time(job_metrics, per_record_us=1.0, per_batch_overhead_us=2000.0):
 SMOKE = dict(batches=3, batch_size=4_096)  # CI bench-smoke profile
 
 
+def _assert_backend_equivalence(jobs: dict, stream: list[np.ndarray], exp: float):
+    """Exact-count gate: dense and ragged runs must agree bit-for-bit on the
+    keyed state (and on overflow totals).  A mismatch raises, which the
+    bench harness turns into a FAILED row + nonzero exit."""
+    all_keys = np.unique(np.concatenate(stream))
+    sample = all_keys[:: max(1, len(all_keys) // 64)]
+    for key in sample:
+        got = {be: job.state_count(int(key)) for be, (job, _) in jobs.items()}
+        if len(set(got.values())) != 1:
+            raise AssertionError(
+                f"backend count mismatch at exp={exp} key={int(key)}: {got}"
+            )
+    overflow = {be: sum(m.overflow for m in ms) for be, (_, ms) in jobs.items()}
+    if len(set(overflow.values())) != 1:
+        raise AssertionError(f"backend overflow mismatch at exp={exp}: {overflow}")
+
+
 def run(batches: int = 6, batch_size: int = 16_384):
     rows = []
     state_capacity = 16_384
     for exp in EXPONENTS:
-        metrics = {}
-        mig_rows = 0
-        reparts = 0
-        for dr_on in (True, False):
+        stream = list(drifting_zipf(batches, batch_size, num_keys=5_000,
+                                    exponent=exp, drift_every=100, seed=int(exp * 7)))
+        # the DR-on run under both exchange transports (identical results,
+        # different traffic); DR-off once for the throughput-gain baseline
+        jobs = {}
+        for be in ("dense", "ragged"):
             job = StreamingJob(
                 num_partitions=8,
                 state_capacity=state_capacity,
-                dr_enabled=dr_on,
                 dr=DRConfig(imbalance_trigger=1.1, migration_cost_weight=0.2),
+                exchange_backend=be,
             )
-            ms = job.run(drifting_zipf(batches, batch_size, num_keys=5_000,
-                                       exponent=exp, drift_every=100, seed=int(exp * 7)))
-            # throughput proxy: records / straggler-bound time
-            imb = np.mean([m.imbalance for m in ms[1:]])
-            metrics[dr_on] = imb
-            if dr_on:
-                mig_rows = sum(m.migration_rows for m in ms)
-                reparts = sum(m.repartitioned for m in ms)
-        gain = metrics[False] / metrics[True] - 1.0
+            # pin both runs to one migration-pricing rule: the equivalence
+            # gate below asserts bit-identical state, which needs identical
+            # control decisions — backend-specific pricing (the feature
+            # test_repartition_cost_uses_host_backend covers) could
+            # legitimately flip a gain-vs-cost call between the two runs
+            job.drm.exchange_backend = resolve_backend("dense")
+            ms = job.run(stream)
+            jobs[be] = (job, ms)
+            shipped = sum(m.shipped_rows for m in ms)
+            padded = sum(m.padded_rows for m in ms)
+            rows.append((f"fig6/exchange_rows/exp={exp}", shipped,
+                         f"rows shipped over {batches} batches (provisioned {padded})",
+                         be))
+            rows.append((f"fig6/exchange_wall_ms/exp={exp}",
+                         float(np.mean([m.wall_time_s for m in ms[1:]])) * 1e3,
+                         "mean batch wall", be))
+        _assert_backend_equivalence(jobs, stream, exp)
+        dense_padded = sum(m.padded_rows for m in jobs["dense"][1])
+        ragged_shipped = sum(m.shipped_rows for m in jobs["ragged"][1])
+        # count-first traffic tracks real rows: strictly below the padded
+        # provision on every one of these power-law profiles
+        assert ragged_shipped < dense_padded, (exp, ragged_shipped, dense_padded)
+
+        job_off = StreamingJob(
+            num_partitions=8,
+            state_capacity=state_capacity,
+            dr_enabled=False,
+            dr=DRConfig(imbalance_trigger=1.1, migration_cost_weight=0.2),
+        )
+        ms_off = job_off.run(stream)
+        job, ms = jobs["dense"]
+        # throughput proxy: records / straggler-bound time
+        imb_on = np.mean([m.imbalance for m in ms[1:]])
+        imb_off = np.mean([m.imbalance for m in ms_off[1:]])
+        mig_rows = sum(m.migration_rows for m in ms)
+        reparts = sum(m.repartitioned for m in ms)
+        gain = imb_off / imb_on - 1.0
         rows.append((f"fig6/throughput_gain/exp={exp}", gain,
                      "relative increase (paper: biggest at moderate exp)"))
         if reparts:
@@ -141,29 +198,39 @@ def _nonstationary(batches: int, batch_size: int, state_capacity: int):
 
 
 def _resize_cost(base_n: int, target_n: int, batch_size: int, state_capacity: int):
-    """Elastic-resize cost: exchange rows + wall time for one grow/shrink.
+    """Elastic-resize cost: exchange rows + wall time for one grow/shrink,
+    under both exchange backends (the resize migration's sparse lanes are
+    where the count-first transport pays off most).
 
     The resize batch pays the state migration *and* the shuffle-step rebuild
     (jit for the new lane count); a steady-state batch is reported alongside
     so the delta is visible."""
-    job = StreamingJob(
-        num_partitions=base_n,
-        state_capacity=state_capacity,
-        dr=DRConfig(imbalance_trigger=1e9),  # isolate the resize: no plain DR
-    )
-    warm = [zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=s) for s in (20, 21)]
-    for b in warm:
-        steady = job.process_batch(b)
-    job.resize(target_n)
-    t0 = time.perf_counter()
-    m = job.process_batch(zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=22))
-    wall_ms = (time.perf_counter() - t0) * 1e3
-    assert m.resized, m.reason
+    rows = []
     tag = f"grow_{base_n}to{target_n}" if target_n > base_n else f"shrink_{base_n}to{target_n}"
-    full = job.num_workers * state_capacity
-    return [
-        (f"fig6/resize_rows/{tag}", m.migration_rows,
-         f"exchange buffer rows (plan {m.migration_plan_rows}; full-state a2a {full})"),
-        (f"fig6/resize_wall_ms/{tag}", wall_ms,
-         f"resize batch incl. step rebuild (steady batch {steady.wall_time_s * 1e3:.1f} ms)"),
-    ]
+    for be in ("dense", "ragged"):
+        job = StreamingJob(
+            num_partitions=base_n,
+            state_capacity=state_capacity,
+            dr=DRConfig(imbalance_trigger=1e9),  # isolate the resize: no plain DR
+            exchange_backend=be,
+        )
+        warm = [zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=s) for s in (20, 21)]
+        for b in warm:
+            steady = job.process_batch(b)
+        job.resize(target_n)
+        t0 = time.perf_counter()
+        m = job.process_batch(zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=22))
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        assert m.resized, m.reason
+        full = job.num_workers * state_capacity
+        rows += [
+            (f"fig6/resize_rows/{tag}", m.migration_rows,
+             f"exchange buffer rows (plan {m.migration_plan_rows}; full-state a2a {full})",
+             be),
+            (f"fig6/resize_shipped_rows/{tag}", m.shipped_rows,
+             "rows the backend measured moving on the resize batch", be),
+            (f"fig6/resize_wall_ms/{tag}", wall_ms,
+             f"resize batch incl. step rebuild (steady batch {steady.wall_time_s * 1e3:.1f} ms)",
+             be),
+        ]
+    return rows

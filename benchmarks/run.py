@@ -1,12 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (value column is the figure's
-metric: imbalance ratio / speedup / us, per the row name).
+Prints ``name,us_per_call,derived,backend`` CSV rows (value column is the
+figure's metric: imbalance ratio / speedup / us, per the row name; the
+backend column tags rows measured under a specific exchange transport —
+``-`` for backend-independent rows).  Modules return either 3-tuples
+``(name, value, derived)`` or 4-tuples ``(name, value, derived, backend)``.
 
     python -m benchmarks.run [only] [--smoke] [--out bench.csv]
 
 ``only`` filters modules by substring.  ``--smoke`` runs each module's
-small-N profile (its module-level ``SMOKE`` kwargs) — the CI gate profile.
+small-N profile (its module-level ``SMOKE`` kwargs) — the CI gate profile;
+the streaming + migration modules sweep the dense *and* ragged exchange
+backends and raise (nonzero exit) on any exact-count mismatch between them.
 ``--out`` additionally writes the CSV rows to a file (CI artifact).
 
 A module that raises prints a ``<name>/FAILED`` row *and* makes the process
@@ -50,7 +55,7 @@ def main(argv: list[str] | None = None) -> int:
         lines.append(line)
         print(line)
 
-    emit("name,us_per_call,derived")
+    emit("name,us_per_call,derived,backend")
     failures: list[tuple[str, BaseException]] = []
     for name in MODULES:
         if args.only and args.only not in name:
@@ -62,10 +67,12 @@ def main(argv: list[str] | None = None) -> int:
             rows = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
-            emit(f"{name}/FAILED,0,{type(e).__name__}: {e}")
+            emit(f"{name}/FAILED,0,{type(e).__name__}: {e},-")
             continue
-        for row_name, value, derived in rows:
-            emit(f"{row_name},{value:.6g},{derived}")
+        for row in rows:
+            row_name, value, derived = row[:3]
+            backend = row[3] if len(row) > 3 else "-"
+            emit(f"{row_name},{value:.6g},{derived},{backend}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
     if args.out:

@@ -66,6 +66,18 @@ class Resize(Action):
 @dataclasses.dataclass(frozen=True)
 class Replace(Action):
     """Re-place experts onto shards (MoE expert placement — state migration
-    is a permutation of the stacked expert arrays)."""
+    is a permutation of the stacked expert arrays).
 
+    When the policy priced candidate placements (expert-weight bytes through
+    the exchange backend's sizing rule), the winning placement rides the
+    action: ``placement``/``perm`` are the chosen tables, ``choice`` names
+    the candidate, and ``est_migration`` is its weight-bytes cost.  A bare
+    ``Replace`` (all defaults) asks the host to compute the placement
+    itself — the pre-costing behavior."""
+
+    placement: object = None       # ExpertPlacement | None
+    perm: object = None            # int32[E_phys] slot permutation | None
+    choice: str = ""               # candidate name ("" = host decides)
+    planned_imbalance: float = 0.0
+    est_migration: float = 0.0     # expert-weight bytes through the exchange
     kind: ClassVar[str] = "replace"

@@ -3,11 +3,16 @@
 One log per policy host.  ``BatchMetrics`` reads the latest record's reason,
 and the benchmarks read the taken/declined counters into their CSV rows, so
 a run's decision history (including *why* nothing happened) is first-class
-output rather than something to reconstruct from prints.
+output rather than something to reconstruct from prints.  ``to_arrays`` /
+``from_arrays`` round-trip the log through flat (npz-friendly) arrays so
+any host's snapshot can carry its history.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+
+import numpy as np
 
 from repro.control.actions import Action
 
@@ -82,3 +87,46 @@ class DecisionLog:
 
     def __len__(self) -> int:
         return len(self.records)
+
+    # -- persistence (flat arrays, npz-friendly) ---------------------------
+    def to_arrays(self, prefix: str = "decisions_") -> dict:
+        """Columnar snapshot of the log: records as parallel arrays (details
+        JSON-encoded) plus the cumulative counters."""
+        taken, declined = self.counts()
+        return {
+            f"{prefix}consumer": np.str_(self.consumer),
+            f"{prefix}tick": np.array([d.tick for d in self.records], np.int64),
+            f"{prefix}kind": np.array([d.kind for d in self.records], np.str_),
+            f"{prefix}taken": np.array([d.taken for d in self.records], bool),
+            f"{prefix}reason": np.array([d.reason for d in self.records], np.str_),
+            f"{prefix}imbalance": np.array(
+                [d.imbalance for d in self.records], np.float64
+            ),
+            f"{prefix}detail": np.array(
+                [json.dumps(d.detail) for d in self.records], np.str_
+            ),
+            f"{prefix}counts": np.array([taken, declined], np.int64),
+        }
+
+    @classmethod
+    def from_arrays(cls, snap: dict, prefix: str = "decisions_") -> "DecisionLog":
+        """Rebuild a log from :meth:`to_arrays` output (tolerates snapshots
+        that predate persistence — those restore empty)."""
+        log = cls(str(snap.get(f"{prefix}consumer", "")))
+        if f"{prefix}tick" not in snap:
+            return log
+        for tick, kind, taken, reason, imb, detail in zip(
+            np.asarray(snap[f"{prefix}tick"]),
+            np.asarray(snap[f"{prefix}kind"]),
+            np.asarray(snap[f"{prefix}taken"]),
+            np.asarray(snap[f"{prefix}reason"]),
+            np.asarray(snap[f"{prefix}imbalance"]),
+            np.asarray(snap[f"{prefix}detail"]),
+        ):
+            log.records.append(Decision(
+                tick=int(tick), consumer=log.consumer, kind=str(kind),
+                taken=bool(taken), reason=str(reason),
+                imbalance=float(imb), detail=json.loads(str(detail)),
+            ))
+        log._taken, log._declined = (int(x) for x in np.asarray(snap[f"{prefix}counts"]))
+        return log

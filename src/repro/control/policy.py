@@ -5,9 +5,10 @@ Mapping onto the paper's §4 decision rules:
 * :class:`RepartitionPolicy` — §4's core trigger: repartition when the
   measured imbalance exceeds the trigger *and* "the gains for repartitioning
   exceed state migration costs".  The migration cost is estimated with the
-  exchange plane's own lane-sizing rule
-  (:func:`repro.core.migration.exchange_lane_cost`, the quantity
-  ``migration_capacity`` rounds into lane rows) evaluated on the candidate
+  *active exchange backend's* sizing rule
+  (:func:`repro.core.migration.exchange_lane_cost` over
+  ``host.exchange_backend`` — the dense transport pads every lane to the
+  peak, a ragged transport averages real rows) evaluated on the candidate
   plan — real exchange-lane accounting instead of the old
   heavy-key-frequency sum.
 * :class:`ResizePolicy` — the same trigger one level up: sustained imbalance
@@ -101,7 +102,8 @@ class RepartitionPolicy:
             np.add.at(transfer, (old_hp[moved], new_hp[moved]),
                       hist.tail_mass / len(old_hp))
         plan = dataclasses.replace(plan, transfer=transfer)
-        est = exchange_lane_cost(plan, num_workers=signals.num_workers)
+        est = exchange_lane_cost(plan, num_workers=signals.num_workers,
+                                 backend=getattr(host, "exchange_backend", None))
         cost = cfg.migration_cost_weight * est
         if gain <= cost:
             return NoOp(f"gain {gain:.3f} <= cost {cost:.3f}",
@@ -172,9 +174,18 @@ class ResizePolicy:
 
 
 class PlacementPolicy:
-    """Expert re-placement trigger over shard loads (see module doc).  The
-    host (``PlacementController``) computes the actual KIP placement when
-    the answer is :class:`Replace`; the policy only decides *whether*."""
+    """Expert re-placement trigger over shard loads (see module doc).
+
+    Without weight costing (``host.expert_weight_bytes == 0``) the policy
+    only decides *whether*: the host computes the KIP placement on a bare
+    :class:`Replace`.  With it, the policy also gates *which* placement
+    wins, mirroring the streaming cost model: the host's candidate
+    placements (``plan_candidates``) are priced by folding expert-weight
+    bytes through :func:`~repro.core.migration.exchange_lane_cost` on the
+    shard-to-shard weight-transfer matrix, and the candidate minimizing
+    ``planned_imbalance + cost_weight * moved_bytes / total_bytes`` is
+    chosen — including the zero-move "stay" candidate, so a re-placement
+    whose balance gain cannot pay for its weight movement is declined."""
 
     def evaluate(self, host, signals: Signals) -> Action:
         imb = signals.imbalance
@@ -185,4 +196,32 @@ class PlacementPolicy:
         guard = CooldownGuard(host.min_steps_between)
         if not guard.ready(host.steps, host.last_update):
             return NoOp("cooldown", imb, imb)
-        return Replace(reason=f"imbalance {imb:.3f} >= trigger {host.trigger:.3f}")
+        weight_bytes = float(getattr(host, "expert_weight_bytes", 0.0))
+        if weight_bytes <= 0:
+            return Replace(reason=f"imbalance {imb:.3f} >= trigger {host.trigger:.3f}")
+        total = weight_bytes * host.e
+        candidates = host.plan_candidates()
+        cost_w = float(getattr(host, "cost_weight", 1.0))
+
+        def score(c: dict) -> float:
+            return c["planned_imbalance"] + cost_w * c["est_migration"] / max(total, 1e-12)
+
+        best = min(candidates, key=score)
+        if best["moved"] == 0:
+            # the stay candidate won: no placement's gain pays for its bytes
+            alt = min((c for c in candidates if c["moved"]), key=score, default=None)
+            detail = (f" (best alternative {alt['choice']}: imb "
+                      f"{alt['planned_imbalance']:.3f}, "
+                      f"{alt['est_migration']:.0f} bytes)" if alt else "")
+            return NoOp(f"placement gain <= migration cost{detail}",
+                        imb, best["planned_imbalance"], 0.0)
+        return Replace(
+            reason=(f"placement {best['choice']}: imbalance {imb:.3f} -> "
+                    f"{best['planned_imbalance']:.3f}, "
+                    f"{best['est_migration']:.0f} bytes"),
+            placement=best["placement"],
+            perm=best["perm"],
+            choice=best["choice"],
+            planned_imbalance=best["planned_imbalance"],
+            est_migration=best["est_migration"],
+        )

@@ -4,11 +4,12 @@ The paper's repartitioning decisions are "system-aware": they key on
 measured load, not static assumptions.  :class:`Signals` is the one record
 every consumer hands the policy stack at a safe point — per-partition
 loads, per-worker throughput against a capacity target, overflow counts,
-actual exchange-lane accounting (rows shipped + wall time), and serving
-queue depths.  :class:`Telemetry` is the accumulator the runtimes feed
-during normal work (no extra measurement passes — the DRW principle); a
-``snapshot`` at a safe point turns the window into a ``Signals`` record and
-opens the next window.
+actual exchange-lane accounting (rows the active backend *shipped* vs. the
+rows the spec *provisioned*, wall time, and the per-lane overflow vector
+that localizes a hot lane), and serving queue depths.  :class:`Telemetry`
+is the accumulator the runtimes feed during normal work (no extra
+measurement passes — the DRW principle); a ``snapshot`` at a safe point
+turns the window into a ``Signals`` record and opens the next window.
 """
 from __future__ import annotations
 
@@ -39,8 +40,10 @@ class Signals:
     window_wall_s: float = 0.0             # wall time the window spanned
     shuffle_overflow: int = 0              # shuffle rows dropped for capacity
     migration_overflow: int = 0            # migration rows dropped for capacity
-    exchange_rows: int = 0                 # rows shipped through exchange lanes
+    exchange_rows: int = 0                 # rows the backend shipped through lanes
+    exchange_padded_rows: int = 0          # rows the specs provisioned (L * capacity)
     exchange_wall_s: float = 0.0           # wall time inside the exchange path
+    lane_overflow: np.ndarray | None = None  # int64[L] capacity drops per lane
     queue_depths: np.ndarray | None = None # serving replica queue depths
     state_rows: int = 0                    # live keyed-state rows (migration scale)
     at_safe_point: bool = True             # decisions may act only when True
@@ -81,6 +84,24 @@ class Signals:
         beyond imbalance)."""
         return self.throughput / max(self.num_workers, 1)
 
+    @property
+    def exchange_padding_fraction(self) -> float:
+        """Shipped / provisioned rows over the window — how much of the
+        padded all-to-all the active backend actually moved (1.0 for the
+        dense transport, < 1 when a ragged backend compacts empty lanes,
+        0.0 when the window saw no exchange)."""
+        if self.exchange_padded_rows <= 0:
+            return 0.0
+        return self.exchange_rows / self.exchange_padded_rows
+
+    @property
+    def hot_lane(self) -> int:
+        """Lane with the most capacity drops this window, or -1 when nothing
+        overflowed — the localized view the scalar overflow can't give."""
+        if self.lane_overflow is None or not np.any(self.lane_overflow):
+            return -1
+        return int(np.argmax(self.lane_overflow))
+
 
 class Telemetry:
     """Windowed accumulator turning runtime counters into ``Signals``.
@@ -102,7 +123,9 @@ class Telemetry:
         self._shuffle_overflow = 0
         self._migration_overflow = 0
         self._exchange_rows = 0
+        self._exchange_padded_rows = 0
         self._exchange_wall_s = 0.0
+        self._lane_overflow: np.ndarray | None = None
         self._queues: np.ndarray | None = None
         # the window clock starts at the first recording, not at reset:
         # setup/idle time between construction (or a checkpoint) and the
@@ -118,12 +141,38 @@ class Telemetry:
         self._touch()
         self._records += float(records)
 
-    def record_exchange(self, rows: int, wall_s: float = 0.0) -> None:
-        """Exchange-lane accounting: rows one call shipped (``ExchangeSpec.rows``
-        per worker) and the wall time the exchange path took."""
+    def record_exchange(
+        self,
+        rows: int,
+        wall_s: float = 0.0,
+        *,
+        padded_rows: int | None = None,
+        lane_overflow: np.ndarray | None = None,
+    ) -> None:
+        """Exchange-lane accounting for one call: ``rows`` the backend
+        shipped (its measured ``shipped_rows``, per worker), ``padded_rows``
+        the spec provisioned (``ExchangeSpec.rows``; defaults to ``rows``
+        for a dense transport, where the two coincide), the wall time the
+        exchange path took, and the per-lane overflow vector so ``Signals``
+        can localize which lane filled up."""
         self._touch()
         self._exchange_rows += int(rows)
+        self._exchange_padded_rows += int(rows if padded_rows is None else padded_rows)
         self._exchange_wall_s += float(wall_s)
+        if lane_overflow is not None:
+            v = np.asarray(lane_overflow, np.int64)
+            if self._lane_overflow is None:
+                self._lane_overflow = v.copy()
+            elif len(v) == len(self._lane_overflow):
+                self._lane_overflow = self._lane_overflow + v
+            else:
+                # lane count changed mid-window (elastic resize): fold both
+                # onto the wider vector so no drop is lost
+                w = max(len(v), len(self._lane_overflow))
+                out = np.zeros(w, np.int64)
+                out[: len(self._lane_overflow)] += self._lane_overflow
+                out[: len(v)] += v
+                self._lane_overflow = out
 
     def record_overflow(self, shuffle: int = 0, migration: int = 0) -> None:
         self._touch()
@@ -152,7 +201,9 @@ class Telemetry:
             shuffle_overflow=self._shuffle_overflow,
             migration_overflow=self._migration_overflow,
             exchange_rows=self._exchange_rows,
+            exchange_padded_rows=self._exchange_padded_rows,
             exchange_wall_s=self._exchange_wall_s,
+            lane_overflow=self._lane_overflow,
             queue_depths=self._queues,
             state_rows=int(state_rows),
             at_safe_point=at_safe_point,

@@ -29,6 +29,7 @@ from repro.control.policy import RepartitionPolicy, ResizePolicy
 from repro.control.signals import Signals
 from repro.core.histogram import CounterSketch
 from repro.core.partitioner import Partitioner, resize_partitioner
+from repro.exchange.backends import resolve_backend
 
 __all__ = ["DRConfig", "DRMaster", "DRDecision"]
 
@@ -81,9 +82,14 @@ class DRDecision:
 
 class DRMaster:
     def __init__(self, initial: Partitioner, config: DRConfig = DRConfig(),
-                 *, consumer: str = "stream"):
+                 *, consumer: str = "stream",
+                 exchange_backend: str | object | None = None):
         self.config = config
         self.partitioner = initial
+        # the transport the hosted runtime exchanges through — its sizing
+        # rule prices candidate migration plans (exchange_lane_cost), so the
+        # repartition gate reflects what would actually move.  None = dense.
+        self.exchange_backend = resolve_backend(exchange_backend)
         self.sketch = CounterSketch(config.sketch_capacity, decay=config.sketch_decay)
         self.batches_seen = 0
         self.last_repartition = -(10**9)
@@ -249,6 +255,9 @@ class DRMaster:
             "last_resize": np.int64(self.last_resize),
             "grow_streak": np.int64(self.grow_streak),
             "shrink_streak": np.int64(self.shrink_streak),
+            "exchange_backend": np.str_(self.exchange_backend.name),
+            # decision log: a restored job keeps its decision history
+            **self.decisions.to_arrays(),
         }
 
     @classmethod
@@ -260,7 +269,9 @@ class DRMaster:
             np.asarray(snap["host_to_part"]),
             int(snap["seed"]),
         )
-        drm = cls(p, config)
+        drm = cls(p, config, consumer=str(snap.get("decisions_consumer", "stream")),
+                  exchange_backend=str(snap["exchange_backend"])
+                  if "exchange_backend" in snap else None)
         drm.sketch._keys = np.asarray(snap["sketch_keys"])
         drm.sketch._counts = np.asarray(snap["sketch_counts"])
         drm.sketch._floor = float(snap["sketch_floor"])
@@ -272,4 +283,7 @@ class DRMaster:
         drm.last_resize = int(snap.get("last_resize", -(10**9)))
         drm.grow_streak = int(snap.get("grow_streak", 0))
         drm.shrink_streak = int(snap.get("shrink_streak", 0))
+        # decision history (older snapshots predate the log — empty is fine)
+        if "decisions_tick" in snap:
+            drm.decisions = DecisionLog.from_arrays(snap)
         return drm

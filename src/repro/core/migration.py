@@ -143,22 +143,28 @@ def exchange_lane_cost(
     *,
     num_workers: int | None = None,
     slack: float = 1.25,
+    backend=None,
 ) -> float:
-    """Migration-cost estimate from the exchange plane's own sizing rule.
+    """Migration-cost estimate from the *active exchange backend's* sizing
+    rule.
 
-    This is the quantity :func:`migration_capacity` quantizes into lane
-    rows — the peak planned (src, dst) transfer times ``slack`` — left in
-    the plan's own weight units so it can be evaluated on a *relative*
-    (frequency-weighted) candidate plan before any state exists.  The
-    control plane's :class:`~repro.control.policy.RepartitionPolicy` weighs
-    this against the planned balance gain, replacing the old
-    heavy-key-frequency-sum heuristic with what the exchange would actually
-    provision.
+    The default (dense) rule is the quantity :func:`migration_capacity`
+    quantizes into lane rows — the peak planned (src, dst) transfer times
+    ``slack``, since a capacity-padded transport provisions every lane to
+    the peak.  A ragged backend's rule averages real rows over the lanes
+    (``backend.cost``), and a local backend is free — so the control
+    plane's :class:`~repro.control.policy.RepartitionPolicy` weighs the
+    balance gain against what the transport the job actually runs would
+    move, not a one-size heuristic.  The estimate stays in the plan's own
+    weight units so it can be evaluated on a *relative* (frequency-weighted)
+    candidate plan before any state exists.
 
     With ``num_workers > 1`` the transfer folds to worker granularity and
     same-worker moves cost nothing (they never cross the exchange); on a
     single worker — or when the worker count is unknown — partition-level
-    lanes are the accounting unit.
+    lanes are the accounting unit.  ``backend`` is any object with the
+    :class:`~repro.exchange.backends.ExchangeBackend` ``cost`` verb (or
+    ``None`` for the dense rule).
     """
     transfer = plan.transfer
     if transfer.size == 0:
@@ -166,4 +172,6 @@ def exchange_lane_cost(
     if num_workers is not None and num_workers > 1:
         transfer = fold_to_workers(transfer, num_workers)
         np.fill_diagonal(transfer, 0.0)
+    if backend is not None:
+        return float(backend.cost(None, transfer, slack=slack))
     return float(transfer.max()) * slack

@@ -6,8 +6,9 @@ entirely on the unified exchange plane (``repro.exchange``):
 1. every worker routes its local keys with the fused lookup+dispatch path
    (Pallas on TPU, jnp twin elsewhere — bit-identical),
 2. the exchange primitive bucketizes records into a capacity-padded
-   ``[W, cap]`` send buffer (overflow is counted, never silently lost),
-   runs ``jax.lax.all_to_all``, and unpacks the received rows,
+   ``[W, cap]`` send buffer (overflow is counted per lane, never silently
+   lost), runs the selected backend's collective — dense capacity-padded or
+   ragged count-first — and unpacks the received rows,
 3. the DRW hook emits the local top-k histogram + global per-partition loads
    (a ``psum`` — reusing normal DDPS communication, as the paper requires).
 
@@ -18,7 +19,9 @@ State migration (``make_migrate_step``) is the *same* exchange with lanes
 sized by the planner: ``repro.core.migration.migration_capacity`` bounds the
 per-lane rows to the planned peak transfer x slack, so a repartition ships a
 buffer proportional to what actually moves instead of ``W * state_capacity``
-rows.
+rows.  Both steps report the backend's measured ``shipped_rows`` (globally
+summed) next to the spec's padded provision, so the control plane sees what
+the transport moved, not just what it reserved.
 """
 from __future__ import annotations
 
@@ -32,7 +35,13 @@ from repro.compat import shard_map
 from repro.core.hashing import KEY_SENTINEL
 from repro.core.histogram import local_topk_histogram
 from repro.core.partitioner import PartitionerTables, lookup_device
-from repro.exchange import ExchangeSpec, Payload, make_exchange, route_dispatch
+from repro.exchange import (
+    ExchangeBackend,
+    ExchangeSpec,
+    Payload,
+    make_exchange,
+    route_dispatch,
+)
 
 __all__ = ["ShuffleResult", "make_shuffle_step", "make_migrate_step"]
 
@@ -46,6 +55,8 @@ class ShuffleResult(NamedTuple):
     hist_keys: jax.Array  # int32[W, K]       DRW local top-k keys
     hist_counts: jax.Array  # int32[W, K]
     overflow: jax.Array   # int32[]           records dropped for capacity globally
+    lane_overflow: jax.Array  # int32[W]      global per-lane capacity drops
+    shipped_rows: jax.Array   # int32[]       rows the backend moved, all workers
 
 
 def make_shuffle_step(
@@ -57,16 +68,20 @@ def make_shuffle_step(
     num_hosts: int,
     seed: int = 0,
     axis: str = "data",
+    backend: str | ExchangeBackend | None = None,
 ):
     """Build the jitted shuffle step for a fixed mesh/capacity/topology.
 
     An elastic resize rebuilds the step: ``num_partitions`` fixes the loads
     vector width, so the new topology needs a new closure (the migrate step
     does *not* — it routes at worker granularity, see
-    :func:`make_migrate_step`).
+    :func:`make_migrate_step`).  ``backend`` selects the exchange transport
+    (dense / ragged / an :class:`ExchangeBackend` instance).
     """
     num_workers = mesh.shape[axis]
-    ex = make_exchange(ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis))
+    ex = make_exchange(
+        ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis), backend
+    )
 
     def _local(tables, keys, vals, valid):
         # keys [n] local records of this worker
@@ -88,6 +103,8 @@ def make_shuffle_step(
         my_loads = jnp.zeros(num_partitions, jnp.int32).at[dest].add(valid.astype(jnp.int32))
         loads = jax.lax.psum(my_loads, axis)
         overflow = jax.lax.psum(res.send.overflow, axis)
+        lane_overflow = jax.lax.psum(res.send.lane_overflow, axis)
+        shipped = jax.lax.psum(res.shipped_rows, axis)
         return (
             rk[None],
             rv[None],
@@ -97,6 +114,8 @@ def make_shuffle_step(
             hk[None],
             hc[None],
             overflow,
+            lane_overflow,
+            shipped,
         )
 
     mapped = shard_map(
@@ -108,14 +127,16 @@ def make_shuffle_step(
             P(axis),
             P(axis),
         ),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis), P(), P(), P()),
         check_vma=False,
     )
 
     @jax.jit
     def step(tables: PartitionerTables, keys, vals, valid) -> ShuffleResult:
-        rk, rv, rva, rp, loads, hk, hc, ov = mapped(tuple(tables), keys, vals, valid)
-        return ShuffleResult(rk, rv, rva, rp, loads, hk, hc, ov)
+        rk, rv, rva, rp, loads, hk, hc, ov, lov, shipped = mapped(
+            tuple(tables), keys, vals, valid
+        )
+        return ShuffleResult(rk, rv, rva, rp, loads, hk, hc, ov, lov, shipped)
 
     return step
 
@@ -129,6 +150,7 @@ def make_migrate_step(
     seed: int = 0,
     axis: str = "data",
     spec: ExchangeSpec | None = None,
+    backend: str | ExchangeBackend | None = None,
 ):
     """Jitted operator-state migration for a partitioner swap.
 
@@ -139,16 +161,18 @@ def make_migrate_step(
     the planned peak transfer x slack instead of the full state table
     (defaults to ``state_capacity``, the correctness-first upper bound).
     ``spec`` overrides the derived :class:`ExchangeSpec` entirely (the
-    elastic-resize path re-derives the shuffle's spec).  The migrate step
-    routes at *worker* granularity (``lookup % W``), so one step serves any
-    partition count — a resize migration reuses the same jit cache.
-    Returns the kept state + received rows + relative-migration metric.
+    elastic-resize path re-derives the shuffle's spec); ``backend`` selects
+    the transport.  The migrate step routes at *worker* granularity
+    (``lookup % W``), so one step serves any partition count — a resize
+    migration reuses the same jit cache.
+    Returns the kept state + received rows + relative-migration metric +
+    overflow + per-lane overflow + globally shipped rows.
     """
     num_workers = mesh.shape[axis]
     if spec is None:
         cap = state_capacity if lane_capacity is None else min(lane_capacity, state_capacity)
         spec = ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis)
-    ex = make_exchange(spec)
+    ex = make_exchange(spec, backend)
     cap = spec.capacity
 
     def _local(new_tables, state_keys, state_vals):
@@ -177,6 +201,8 @@ def make_migrate_step(
         kept_valid = valid & ~moving
         moved_total = jax.lax.psum(moved_w, axis)
         overflow = jax.lax.psum(res.send.overflow, axis)
+        lane_overflow = jax.lax.psum(res.send.lane_overflow, axis)
+        shipped = jax.lax.psum(res.shipped_rows, axis)
         return (
             kept_keys[None],
             state_vals[None],
@@ -187,13 +213,15 @@ def make_migrate_step(
             moved_total,
             total_w,
             overflow,
+            lane_overflow,
+            shipped,
         )
 
     mapped = shard_map(
         _local,
         mesh=mesh,
         in_specs=((P(), P(), P()), P(axis), P(axis)),
-        out_specs=(P(axis),) * 6 + (P(), P(), P()),
+        out_specs=(P(axis),) * 6 + (P(), P(), P(), P(), P()),
         check_vma=False,
     )
 

@@ -16,11 +16,15 @@ the Spark-style integration; setting ``checkpoint_interval > 1`` gates
 decisions on checkpoint ticks, the Flink-style integration.
 
 Both the shuffle and the migration ride the unified exchange plane
-(``repro.exchange``).  Migration lanes are sized from the host-side plan
-(``plan_migration`` + ``migration_capacity``): the all-to-all ships the
-planned peak transfer x slack instead of ``W * state_capacity`` rows.  Lane
-capacities are rounded up to powers of two so repeated repartitions reuse a
-handful of jitted migrate steps instead of recompiling per plan.
+(``repro.exchange``) on the transport ``exchange_backend`` selects — the
+dense capacity-padded all-to-all or the ragged count-first one; results are
+bit-identical, only the traffic differs, and the DRM prices candidate
+repartitions with the *same* backend's sizing rule.  Migration lanes are
+sized from the host-side plan (``plan_migration`` + ``migration_capacity``):
+the all-to-all ships the planned peak transfer x slack instead of
+``W * state_capacity`` rows.  Lane capacities are rounded up to powers of
+two so repeated repartitions reuse a handful of jitted migrate steps
+instead of recompiling per plan.
 
 **Elastic resize** is the same mechanism one level up: changing the *number*
 of partitions (the job's logical worker count) instead of their contents.
@@ -51,7 +55,7 @@ from repro.core.migration import migration_capacity, plan_migration
 from repro.core.partitioner import Partitioner, uniform_partitioner
 from repro.core.shuffle import make_migrate_step, make_shuffle_step
 from repro.core.state import empty_state, merge_into
-from repro.exchange import ExchangeSpec
+from repro.exchange import ExchangeSpec, resolve_backend
 
 __all__ = ["StreamingJob", "BatchMetrics"]
 
@@ -72,6 +76,9 @@ class BatchMetrics:
     num_partitions: int = 0     # topology after this batch (post-resize)
     migration_plan_rows: int = 0  # migration_capacity() of the plan (pre-pow2)
     action: str = "noop"        # control-plane action kind this safe point took
+    shipped_rows: int = 0       # rows the backend moved this batch (per worker)
+    padded_rows: int = 0        # rows the specs provisioned (per worker)
+    backend: str = "dense"      # exchange backend the batch ran on
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -100,6 +107,7 @@ class StreamingJob:
         initial: Partitioner | None = None,
         hist_k: int = 64,
         seed: int = 0,
+        exchange_backend: str | None = None,
     ):
         self.mesh = mesh or _default_mesh()
         self.num_workers = self.mesh.shape["data"]
@@ -112,12 +120,16 @@ class StreamingJob:
         self.checkpoint_interval = checkpoint_interval
         self.hist_k = hist_k
         self.seed = seed
+        # the exchange transport both jitted steps ride (dense / ragged);
+        # the DRM gets the same backend so policy costing prices the plan
+        # by what this job's transport would actually move
+        self.exchange_backend = resolve_backend(exchange_backend or "dense")
         cfg = dr or DRConfig()
         heavy_cap = int(np.ceil(max(1.0, cfg.lam * self.num_partitions) / 128.0) * 128)
         part = initial or uniform_partitioner(
             self.num_partitions, DEFAULT_NUM_HOSTS, seed, heavy_capacity=heavy_cap
         )
-        self.drm = DRMaster(part, cfg)
+        self.drm = DRMaster(part, cfg, exchange_backend=self.exchange_backend)
         self.telemetry = Telemetry("stream")
         self._shuffle = None
         self._shuffle_sig = None  # (capacity, num_partitions) the step was built for
@@ -149,6 +161,7 @@ class StreamingJob:
             hist_k=self.hist_k,
             num_hosts=self.drm.partitioner.num_hosts,
             seed=self.seed,
+            backend=self.exchange_backend,
         )
 
     def _migrate_step(self, lane_capacity: int):
@@ -170,6 +183,7 @@ class StreamingJob:
                 num_hosts=self.drm.partitioner.num_hosts,
                 seed=self.seed,
                 spec=ExchangeSpec(num_lanes=self.num_workers, capacity=cap, axis="data"),
+                backend=self.exchange_backend,
             )
         return self._migrate_steps[cap], cap
 
@@ -199,9 +213,16 @@ class StreamingJob:
         )
         loads = np.asarray(res.loads)  # forces the batch's device work
 
-        # telemetry: signals gathered during normal work (no extra passes)
-        self.telemetry.record_exchange(self._shuffle_spec.rows,
-                                       time.perf_counter() - t_ex)
+        # telemetry: signals gathered during normal work (no extra passes).
+        # shipped is the backend's measured traffic (per worker, averaged),
+        # padded what the spec provisioned; under dense the two coincide.
+        shuffle_shipped = int(np.asarray(res.shipped_rows)) // w
+        self.telemetry.record_exchange(
+            shuffle_shipped,
+            time.perf_counter() - t_ex,
+            padded_rows=self._shuffle_spec.rows,
+            lane_overflow=np.asarray(res.lane_overflow),
+        )
         self.telemetry.record_overflow(shuffle=int(res.overflow))
         self.telemetry.record_batch(float(loads.sum()))
 
@@ -223,13 +244,15 @@ class StreamingJob:
                                    policies_enabled=self.dr_enabled)
 
         # execute the action (state only moves here, at the safe point)
-        rel_mig, mig_overflow, mig_rows, plan_rows = 0.0, 0, 0, 0
+        rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped = 0.0, 0, 0, 0, 0
         if isinstance(action, Resize):
-            rel_mig, mig_overflow, mig_rows, plan_rows = self._apply_resize(action.target)
+            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped = \
+                self._apply_resize(action.target)
         elif isinstance(action, Repartition):
-            rel_mig, mig_overflow, mig_rows, plan_rows = self._migrate_state(action.prev)
+            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped = \
+                self._migrate_state(action.prev)
         if mig_rows:
-            self.telemetry.record_exchange(mig_rows)
+            self.telemetry.record_exchange(mig_shipped, padded_rows=mig_rows)
             self.telemetry.record_overflow(migration=mig_overflow)
 
         m = BatchMetrics(
@@ -247,6 +270,9 @@ class StreamingJob:
             num_partitions=self.num_partitions,
             migration_plan_rows=plan_rows,
             action=action.kind,
+            shipped_rows=shuffle_shipped + mig_shipped,
+            padded_rows=self._shuffle_spec.rows + mig_rows,
+            backend=self.exchange_backend.name,
         )
         self.metrics.append(m)
         return m
@@ -273,7 +299,7 @@ class StreamingJob:
             )
         self._pending_resize = n
 
-    def _apply_resize(self, n: int) -> tuple[float, int, int, int]:
+    def _apply_resize(self, n: int) -> tuple[float, int, int, int, int]:
         """Execute a resize at a safe point: re-plan cross-size, migrate
         state through freshly sized exchange lanes, rebuild the step cache."""
         old = self.drm.partitioner
@@ -286,14 +312,16 @@ class StreamingJob:
         self._shuffle_sig = None
         return stats
 
-    def _migrate_state(self, old_part: Partitioner) -> tuple[float, int, int, int]:
+    def _migrate_state(self, old_part: Partitioner) -> tuple[float, int, int, int, int]:
         """Ship keyed state to where ``self.drm.partitioner`` now maps it.
 
         Plans on the driver (``plan_migration`` diffs the partitioners over
         the live keys — cross-size safe), sizes the exchange lanes from the
         plan (``migration_capacity``), and folds received rows back into the
         local state tables.  Returns ``(relative_migration, overflow,
-        buffer_rows, planned_lane_rows)``.
+        buffer_rows, planned_lane_rows, shipped_rows)`` — ``buffer_rows``
+        is the per-worker provision, ``shipped_rows`` what the backend
+        measured moving.
         """
         sk = np.asarray(self.state_keys).reshape(-1)
         live = sk[sk != KEY_SENTINEL].astype(np.int64)
@@ -301,12 +329,19 @@ class StreamingJob:
         plan_rows = migration_capacity(plan, num_workers=self.num_workers)
         migrate, lane_cap = self._migrate_step(plan_rows)
         out = migrate(self.drm.partitioner.tables(), self.state_keys, self.state_vals)
-        kk, vv, kv_valid, rk, rv, rva, moved, total, mig_ov = out
+        kk, vv, kv_valid, rk, rv, rva, moved, total, mig_ov, mig_lane_ov, mig_shipped = out
         kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
         self.state_keys, self.state_vals, _ = self._merge(kept_keys, vv, rk, rv, rva)
         rel_mig = float(moved) / max(float(total), 1e-9)
         mig_rows = self.num_workers * lane_cap  # rows received per worker
-        return rel_mig, int(mig_ov), mig_rows, plan_rows
+        # rows/wall are recorded by process_batch (one call per migration);
+        # the hot-lane vector is only available here, so it rides a
+        # zero-row record into the same telemetry window
+        self.telemetry.record_exchange(
+            0, padded_rows=0, lane_overflow=np.asarray(mig_lane_ov)
+        )
+        return (rel_mig, int(mig_ov), mig_rows, plan_rows,
+                int(np.asarray(mig_shipped)) // self.num_workers)
 
     # ------------------------------------------------------------------
     def run(self, batches: Iterable[np.ndarray]) -> list[BatchMetrics]:
@@ -333,6 +368,7 @@ class StreamingJob:
         self.state_vals = jnp.asarray(snap["state_vals"])
         drm_snap = {k[4:]: v for k, v in snap.items() if k.startswith("drm_")}
         self.drm = DRMaster.restore(drm_snap, self.drm.config)
+        self.drm.exchange_backend = self.exchange_backend  # job's transport wins
         # resume the snapshotted topology: the snapshot may have been taken
         # after an elastic resize, in which case this job's construction-time
         # partition count is stale and the step cache must be rebuilt

@@ -1,5 +1,15 @@
 """Unified exchange plane — one routed all-to-all subsystem for shuffle,
-state migration, and MoE dispatch.  See :mod:`repro.exchange.plane`."""
+state migration, and MoE dispatch, split spec + backend.  See
+:mod:`repro.exchange.plane` (binding), :mod:`repro.exchange.spec` (shapes),
+and :mod:`repro.exchange.backends` (transports)."""
+from repro.exchange.backends import (
+    DenseBackend,
+    ExchangeBackend,
+    LocalBackend,
+    RaggedBackend,
+    backend_name,
+    resolve_backend,
+)
 from repro.exchange.plane import (
     Exchange,
     ExchangeResult,
@@ -12,12 +22,18 @@ from repro.exchange.plane import (
 )
 
 __all__ = [
+    "DenseBackend",
     "Exchange",
+    "ExchangeBackend",
     "ExchangeResult",
     "ExchangeSpec",
+    "LocalBackend",
     "Payload",
+    "RaggedBackend",
     "SendInfo",
+    "backend_name",
     "make_exchange",
+    "resolve_backend",
     "route_dispatch",
     "take_from",
 ]

@@ -1,0 +1,275 @@
+"""Exchange backends: the *how* of a routed exchange.
+
+An :class:`ExchangeBackend` implements the four verbs of the plane —
+``bucketize`` / ``all_to_all`` / ``backhaul`` / ``cost`` — against one
+:class:`~repro.exchange.spec.ExchangeSpec`.  Three transports ship:
+
+* :class:`DenseBackend` — the capacity-padded all-to-all: every lane is
+  padded to ``spec.capacity`` and the collective moves the whole
+  ``[L, capacity]`` buffer.  Simple, one device round, and the worst case
+  under skew: every consumer ships ``L * capacity`` rows even when the
+  observed key distribution leaves most lanes nearly empty.
+* :class:`RaggedBackend` — the count-first two-phase exchange: phase 1
+  all-to-alls the per-lane *counts* (one int per lane), phase 2 ships
+  row-compacted lanes sized by the measured occupancy, so traffic tracks
+  real rows instead of padding (Partial Key Grouping's bounded per-worker
+  load, AutoFlow's load-adapted routing).  On this build the row phase
+  rides the dense collective (jax < 0.5 has no ``ragged_all_to_all``;
+  ``_ship`` is the one seam a ragged/NCCL collective slots into) with the
+  receive buffer masked to the exchanged counts, so results are
+  bit-identical to dense while ``shipped_rows`` reports what a ragged
+  transport would actually move.
+* :class:`LocalBackend` — the ``axis=None`` single-host fast path: pure
+  bucketize, no collective, zero shipped rows.
+
+``cost(spec, plan_rows)`` is each backend's sizing rule on a candidate
+migration plan — what the control plane's
+:func:`repro.core.migration.exchange_lane_cost` evaluates so
+``RepartitionPolicy`` prices a repartition by what the *active* transport
+would move: the dense rule pads every lane to the peak, the ragged rule
+averages real rows over the lanes, a local exchange is free.
+
+All device code is pure jnp and runs inside ``jit`` / ``shard_map``.
+Backends are stateless; one instance may serve any number of specs.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.exchange.spec import ExchangeResult, ExchangeSpec, Payload, SendInfo
+from repro.kernels import ref as kref
+
+__all__ = [
+    "ExchangeBackend",
+    "DenseBackend",
+    "RaggedBackend",
+    "LocalBackend",
+    "resolve_backend",
+    "backend_name",
+]
+
+
+@runtime_checkable
+class ExchangeBackend(Protocol):
+    """The four verbs every exchange transport implements."""
+
+    name: str
+
+    def bucketize(
+        self,
+        spec: ExchangeSpec,
+        lane: jax.Array,
+        valid: jax.Array,
+        payloads: Sequence[Payload],
+        slot: jax.Array | None = None,
+    ) -> ExchangeResult: ...
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult: ...
+
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array: ...
+
+    def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
+             slack: float = 1.25) -> float: ...
+
+
+def _bucketize(
+    spec: ExchangeSpec,
+    lane: jax.Array,
+    valid: jax.Array,
+    payloads: Sequence[Payload],
+    slot: jax.Array | None = None,
+) -> ExchangeResult:
+    """Scatter records into ``[L, capacity]`` buffers; count overflow.
+
+    Shared by every backend — the send-side layout is transport-independent
+    (a backend that wanted a different layout would override).  ``slot`` may
+    be precomputed (e.g. by the fused route kernel); otherwise it is derived
+    with ``dispatch_count``.
+    """
+    lane = jnp.where(valid, lane, 0).astype(jnp.int32)
+    if slot is None:
+        slot, _ = kref.dispatch_count_ref(lane, valid, num_parts=spec.num_lanes)
+    # a valid record is lost either to a full lane or to a lane outside
+    # [0, num_lanes) — both are counted, never silently dropped
+    in_range = (lane >= 0) & (lane < spec.num_lanes)
+    ok = valid & in_range & (slot >= 0) & (slot < spec.capacity)
+    overflow = jnp.sum(valid & (~in_range | (slot >= spec.capacity))).astype(jnp.int32)
+    # per-lane view of the capacity drops: which lane filled up (out-of-range
+    # records have no lane to charge — they count in the scalar only)
+    lane_overflow = (
+        jnp.zeros(spec.num_lanes, jnp.int32)
+        .at[lane]
+        .add((valid & in_range & (slot >= spec.capacity)).astype(jnp.int32), mode="drop")
+    )
+    # rows without a slot land at column `capacity` and are dropped by
+    # the out-of-range scatter (mode='drop') — counted above, never lost
+    # silently.
+    s = jnp.where(ok, slot, spec.capacity)
+    shape = (spec.num_lanes, spec.capacity)
+    buf_valid = jnp.zeros(shape, bool).at[lane, s].set(ok, mode="drop")
+    bufs = tuple(
+        jnp.full(shape + p.data.shape[1:], p.fill, p.data.dtype)
+        .at[lane, s].set(p.data, mode="drop")
+        for p in payloads
+    )
+    return ExchangeResult(
+        buf_valid, bufs, SendInfo(lane, slot, ok, overflow, lane_overflow),
+        shipped_rows=jnp.zeros((), jnp.int32),
+    )
+
+
+def _a2a(x: jax.Array, axis: str) -> jax.Array:
+    """Tiled all-to-all over ``axis``: row j of the leading dim -> shard j."""
+    return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
+
+
+class DenseBackend:
+    """The capacity-padded transport (the pre-backend exchange, verbatim)."""
+
+    name = "dense"
+
+    def bucketize(self, spec, lane, valid, payloads, slot=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot)
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        """Exchange lane-major buffers across ``spec.axis`` (row j -> shard j)."""
+        if spec.axis is None:
+            return buffers
+        return ExchangeResult(
+            _a2a(buffers.valid, spec.axis),
+            tuple(_a2a(b, spec.axis) for b in buffers.payloads),
+            buffers.send,
+            shipped_rows=jnp.asarray(spec.rows, jnp.int32),  # the whole pad
+        )
+
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array:
+        """Reverse collective for already-laned response buffers."""
+        if spec.axis is None:
+            return buffers
+        return _a2a(buffers, spec.axis)
+
+    def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
+             slack: float = 1.25) -> float:
+        """Every lane provisions (and ships) the peak planned lane mass."""
+        plan_rows = np.asarray(plan_rows, np.float64)
+        if plan_rows.size == 0:
+            return 0.0
+        return float(plan_rows.max()) * slack
+
+
+class RaggedBackend:
+    """Count-first two-phase transport: ship counts, then compacted rows."""
+
+    name = "ragged"
+
+    def bucketize(self, spec, lane, valid, payloads, slot=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot)
+
+    def _ship(self, spec: ExchangeSpec, buffers: ExchangeResult,
+              recv_counts: jax.Array) -> ExchangeResult:
+        """Phase 2: move the rows.  On this transport the row phase rides the
+        dense collective and the receive buffer is masked to the exchanged
+        counts — a ``ragged_all_to_all`` / NCCL path replaces exactly this
+        method, everything else (count phase, accounting, consumers) holds.
+        """
+        live = jnp.arange(spec.capacity, dtype=jnp.int32)[None, :] < recv_counts[:, None]
+        valid = _a2a(buffers.valid, spec.axis) & live
+        return ExchangeResult(
+            valid, tuple(_a2a(b, spec.axis) for b in buffers.payloads), buffers.send,
+            shipped_rows=buffers.shipped_rows,
+        )
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        if spec.axis is None:
+            return buffers
+        # phase 1: exchange per-lane occupancy (one int32 per lane) so every
+        # receiver knows how many rows each peer actually sends
+        counts = jnp.sum(buffers.valid, axis=1, dtype=jnp.int32)  # [L] sent per lane
+        recv_counts = _a2a(counts, spec.axis)
+        # measured traffic: the rows this worker's lanes actually hold plus
+        # the count phase itself (one row-equivalent per lane, conservatively)
+        shipped = (jnp.sum(counts) + spec.num_lanes).astype(jnp.int32)
+        return self._ship(
+            spec, buffers._replace(shipped_rows=shipped), recv_counts
+        )
+
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array:
+        """Response rows ride the request lanes back; their occupancy was
+        fixed by the forward hop, so the return trip needs no second count
+        phase — it ships dense on this transport."""
+        if spec.axis is None:
+            return buffers
+        return _a2a(buffers, spec.axis)
+
+    def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
+             slack: float = 1.25) -> float:
+        """A ragged transport moves real rows: the per-lane *average* planned
+        mass (empty lanes are free), never more than the dense peak."""
+        plan_rows = np.asarray(plan_rows, np.float64)
+        if plan_rows.size == 0:
+            return 0.0
+        return float(plan_rows.sum()) / plan_rows.size * slack
+
+
+class LocalBackend:
+    """``axis=None`` fast path: bucketize only, no collective, nothing ships."""
+
+    name = "local"
+
+    def bucketize(self, spec, lane, valid, payloads, slot=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot)
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        assert spec.axis is None, (
+            f"LocalBackend cannot cross mesh axis {spec.axis!r}; "
+            "use the dense or ragged backend"
+        )
+        return buffers
+
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array:
+        assert spec.axis is None, spec.axis
+        return buffers
+
+    def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
+             slack: float = 1.25) -> float:
+        return 0.0
+
+
+_BACKENDS = {
+    "dense": DenseBackend,
+    "ragged": RaggedBackend,
+    "local": LocalBackend,
+}
+
+
+def resolve_backend(
+    backend: str | ExchangeBackend | None, spec: ExchangeSpec | None = None
+) -> ExchangeBackend:
+    """Turn a backend name (or instance, or ``None``) into an instance.
+
+    ``None`` auto-selects: the local fast path when the spec has no mesh
+    axis, otherwise dense — the pre-backend behavior, bit-identical.
+    """
+    if backend is None:
+        return LocalBackend() if spec is not None and spec.axis is None else DenseBackend()
+    if isinstance(backend, str):
+        try:
+            return _BACKENDS[backend]()
+        except KeyError:
+            raise ValueError(
+                f"unknown exchange backend {backend!r}; have {sorted(_BACKENDS)}"
+            ) from None
+    return backend
+
+
+def backend_name(backend: str | ExchangeBackend | None) -> str:
+    """Stable display/cache name for a backend selection (``None`` = auto)."""
+    if backend is None:
+        return "auto"
+    if isinstance(backend, str):
+        return backend
+    return getattr(backend, "name", type(backend).__name__)

@@ -1,24 +1,19 @@
 """The unified exchange plane: ``route -> bucketize -> all_to_all -> unpack``.
 
 The paper's DR module works because repartitioning "reuses normal DDPS
-communication".  This module is that communication, implemented once: a
-routed, capacity-padded all-to-all primitive shared by the micro-batch
+communication".  This module is that communication, implemented once and
+split **spec + backend**: an :class:`~repro.exchange.spec.ExchangeSpec`
+names the static shape of one exchange (lanes x capacity over an optional
+mesh axis), an :class:`~repro.exchange.backends.ExchangeBackend` moves the
+buffers (dense capacity-padded, ragged count-first, or local no-collective),
+and :class:`Exchange` binds the two for the consumers — the micro-batch
 shuffle (``repro.core.shuffle``), operator-state migration
 (``make_migrate_step``) and MoE expert dispatch (``repro.moe.layer``).
 Following Partial Key Grouping / AutoFlow, the routing+exchange primitive is
 the pluggable unit; the balancing policy (KIP, KIP placement, migration
-planning) layers on top and never touches collectives directly.
-
-Vocabulary:
-
-* **lane** — one destination of the exchange: a worker shard for an
-  all-to-all, or a local bucket (e.g. an expert) for a pure dispatch.
-* **slot** — a record's stable rank within its lane (``dispatch_count``),
-  which makes the scatter into the ``[L, capacity]`` send buffer
-  collision-free.
-* **capacity** — static rows per lane.  XLA collectives need static shapes,
-  so lanes are padded to ``capacity`` and anything beyond it is *counted*
-  (never silently lost) in ``SendInfo.overflow``.
+planning) layers on top and never touches collectives directly — and the
+backend's measured ``shipped_rows`` / ``cost`` feed the control plane, so
+policy decisions price what the active transport would actually move.
 
 All functions are pure jnp and run inside ``jit`` / ``shard_map``.  The
 routing hot path has a fused Pallas kernel
@@ -27,13 +22,19 @@ is the default off-TPU.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Sequence
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.partitioner import PartitionerTables
+from repro.exchange.backends import ExchangeBackend, resolve_backend
+from repro.exchange.spec import (
+    ExchangeResult,
+    ExchangeSpec,
+    Payload,
+    SendInfo,
+    take_from,
+)
 from repro.kernels import ref as kref
 
 __all__ = [
@@ -46,85 +47,6 @@ __all__ = [
     "route_dispatch",
     "take_from",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class ExchangeSpec:
-    """Static shape of one exchange: ``num_lanes`` destinations of
-    ``capacity`` rows each, optionally crossed over mesh ``axis``.
-
-    ``axis=None`` is a *local* exchange: records are bucketized into
-    ``[num_lanes, capacity]`` buffers with no collective (MoE's second
-    dispatch hop — per-expert batching on the receiving shard).
-    """
-
-    num_lanes: int
-    capacity: int
-    axis: str | None = None
-
-    @property
-    def rows(self) -> int:
-        """Rows one exchange call ships per worker (``num_lanes * capacity``)
-        — the static accounting unit the control plane's telemetry records
-        per call (``Telemetry.record_exchange``), so policy cost models see
-        what the plane actually provisions rather than a heuristic."""
-        return self.num_lanes * self.capacity
-
-    def resized(
-        self, *, num_lanes: int | None = None, capacity: int | None = None
-    ) -> "ExchangeSpec":
-        """Re-derive the spec for a resized topology.
-
-        Elastic resize (changing the lane count after a worker grow/shrink)
-        and re-capacitating (a migration whose planned peak transfer differs
-        from the last one) are both one-spec changes: everything downstream —
-        bucketize buffers, the collective, unpack — follows from the spec.
-        """
-        return dataclasses.replace(
-            self,
-            num_lanes=self.num_lanes if num_lanes is None else int(num_lanes),
-            capacity=self.capacity if capacity is None else int(capacity),
-        )
-
-
-class Payload(NamedTuple):
-    """One array travelling through the exchange; ``fill`` pads empty slots."""
-
-    data: jax.Array  # [n, ...] one row per record
-    fill: int | float = 0
-
-
-class SendInfo(NamedTuple):
-    """Send-side bookkeeping — enough to reverse the exchange.
-
-    ``take_from(buffers, send)`` gathers each record's row back out of
-    lane-major buffers (the MoE combine / any request-response pattern).
-    """
-
-    lane: jax.Array      # int32[n] destination lane per record
-    slot: jax.Array      # int32[n] rank within lane, -1 for invalid
-    ok: jax.Array        # bool[n]  accepted into the send buffer
-    overflow: jax.Array  # int32[]  local records dropped for capacity
-
-
-class ExchangeResult(NamedTuple):
-    valid: jax.Array     # bool[L, capacity] occupancy of the (received) buffer
-    payloads: tuple      # each [L, capacity, ...], same order as the inputs
-    send: SendInfo
-
-    def unpack(self):
-        """Flatten lane-major buffers to record-major ``[L*capacity, ...]``."""
-        l, c = self.valid.shape
-        flat = tuple(p.reshape((l * c,) + p.shape[2:]) for p in self.payloads)
-        return self.valid.reshape(-1), flat
-
-
-def take_from(buffers: jax.Array, send: SendInfo) -> jax.Array:
-    """Gather each record's row from ``[L, capacity, ...]`` buffers, zeroing
-    records that never made it into a slot (the reverse of ``bucketize``)."""
-    rows = buffers[send.lane, jnp.where(send.ok, send.slot, 0)]
-    mask = send.ok.reshape(send.ok.shape + (1,) * (rows.ndim - 1))
-    return jnp.where(mask, rows, 0)
 
 
 def route_dispatch(
@@ -161,16 +83,19 @@ def route_dispatch(
 
 
 class Exchange:
-    """The exchange primitive bound to one :class:`ExchangeSpec`.
+    """One :class:`ExchangeSpec` bound to one :class:`ExchangeBackend`.
 
     Calling it runs the full ``bucketize -> all_to_all -> unpack`` sequence;
     ``bucketize`` alone builds the lane-major send buffers (local dispatch),
     and ``backhaul`` runs the reverse collective for request-response
-    patterns (MoE combine).
+    patterns (MoE combine).  The backend decides *how* buffers move and what
+    ``shipped_rows`` the move costs; the call sites are identical across
+    backends.
     """
 
-    def __init__(self, spec: ExchangeSpec):
+    def __init__(self, spec: ExchangeSpec, backend: str | ExchangeBackend | None = None):
         self.spec = spec
+        self.backend = resolve_backend(backend, spec)
 
     # -- step 2: capacity-padded send-buffer builder -----------------------
     def bucketize(
@@ -180,48 +105,14 @@ class Exchange:
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
     ) -> ExchangeResult:
-        """Scatter records into ``[L, capacity]`` buffers; count overflow.
-
-        ``slot`` may be precomputed (e.g. by the fused route kernel);
-        otherwise it is derived with ``dispatch_count``.
-        """
-        spec = self.spec
-        lane = jnp.where(valid, lane, 0).astype(jnp.int32)
-        if slot is None:
-            slot, _ = kref.dispatch_count_ref(lane, valid, num_parts=spec.num_lanes)
-        # a valid record is lost either to a full lane or to a lane outside
-        # [0, num_lanes) — both are counted, never silently dropped
-        in_range = (lane >= 0) & (lane < spec.num_lanes)
-        ok = valid & in_range & (slot >= 0) & (slot < spec.capacity)
-        overflow = jnp.sum(valid & (~in_range | (slot >= spec.capacity))).astype(jnp.int32)
-        # rows without a slot land at column `capacity` and are dropped by
-        # the out-of-range scatter (mode='drop') — counted above, never lost
-        # silently.
-        s = jnp.where(ok, slot, spec.capacity)
-        shape = (spec.num_lanes, spec.capacity)
-        buf_valid = jnp.zeros(shape, bool).at[lane, s].set(ok, mode="drop")
-        bufs = tuple(
-            jnp.full(shape + p.data.shape[1:], p.fill, p.data.dtype)
-            .at[lane, s].set(p.data, mode="drop")
-            for p in payloads
-        )
-        return ExchangeResult(buf_valid, bufs, SendInfo(lane, slot, ok, overflow))
+        return self.backend.bucketize(self.spec, lane, valid, payloads, slot=slot)
 
     # -- step 3: the collective -------------------------------------------
     def all_to_all(self, buffers: ExchangeResult) -> ExchangeResult:
-        """Exchange lane-major buffers across ``spec.axis`` (row j -> shard j)."""
-        if self.spec.axis is None:
-            return buffers
-        a2a = lambda b: jax.lax.all_to_all(b, self.spec.axis, 0, 0, tiled=True)
-        return ExchangeResult(
-            a2a(buffers.valid), tuple(a2a(b) for b in buffers.payloads), buffers.send
-        )
+        return self.backend.all_to_all(self.spec, buffers)
 
     def backhaul(self, buffers: jax.Array) -> jax.Array:
-        """Reverse collective for already-laned response buffers."""
-        if self.spec.axis is None:
-            return buffers
-        return jax.lax.all_to_all(buffers, self.spec.axis, 0, 0, tiled=True)
+        return self.backend.backhaul(self.spec, buffers)
 
     # -- the full primitive ------------------------------------------------
     def __call__(
@@ -234,6 +125,13 @@ class Exchange:
         return self.all_to_all(self.bucketize(lane, valid, payloads, slot=slot))
 
 
-def make_exchange(spec: ExchangeSpec) -> Exchange:
-    """Build the exchange primitive for one static spec."""
-    return Exchange(spec)
+def make_exchange(
+    spec: ExchangeSpec, backend: str | ExchangeBackend | None = None
+) -> Exchange:
+    """Build the exchange primitive for one static spec.
+
+    ``backend`` selects the transport — ``"dense"`` / ``"ragged"`` /
+    ``"local"``, an :class:`ExchangeBackend` instance, or ``None`` to
+    auto-select (local when ``spec.axis is None``, else dense).
+    """
+    return Exchange(spec, backend)

@@ -1,0 +1,118 @@
+"""Exchange vocabulary: the *what* of a routed exchange, backend-free.
+
+``ExchangeSpec`` describes the static shape of one exchange (lanes x
+capacity over an optional mesh axis); ``Payload``/``SendInfo``/
+``ExchangeResult`` describe what travels through it.  The *how* — which
+transport moves the buffers — lives in :mod:`repro.exchange.backends`;
+nothing in this module touches a collective.
+
+Vocabulary:
+
+* **lane** — one destination of the exchange: a worker shard for an
+  all-to-all, or a local bucket (e.g. an expert) for a pure dispatch.
+* **slot** — a record's stable rank within its lane (``dispatch_count``),
+  which makes the scatter into the ``[L, capacity]`` send buffer
+  collision-free.
+* **capacity** — static rows per lane.  XLA collectives need static shapes,
+  so lanes are padded to ``capacity`` and anything beyond it is *counted*
+  (never silently lost) in ``SendInfo.overflow`` — per lane in
+  ``SendInfo.lane_overflow``, summed in ``SendInfo.overflow``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ExchangeSpec", "Payload", "SendInfo", "ExchangeResult", "take_from"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """Static shape of one exchange: ``num_lanes`` destinations of
+    ``capacity`` rows each, optionally crossed over mesh ``axis``.
+
+    ``axis=None`` is a *local* exchange: records are bucketized into
+    ``[num_lanes, capacity]`` buffers with no collective (MoE's second
+    dispatch hop — per-expert batching on the receiving shard).
+    """
+
+    num_lanes: int
+    capacity: int
+    axis: str | None = None
+
+    @property
+    def rows(self) -> int:
+        """Rows one exchange call *provisions* per worker
+        (``num_lanes * capacity``) — the static accounting unit the control
+        plane's telemetry records per call as the padded side of
+        ``Telemetry.record_exchange``; the active backend's measured
+        ``shipped_rows`` is the other side."""
+        return self.num_lanes * self.capacity
+
+    def resized(
+        self, *, num_lanes: int | None = None, capacity: int | None = None
+    ) -> "ExchangeSpec":
+        """Re-derive the spec for a resized topology.
+
+        Elastic resize (changing the lane count after a worker grow/shrink)
+        and re-capacitating (a migration whose planned peak transfer differs
+        from the last one) are both one-spec changes: everything downstream —
+        bucketize buffers, the collective, unpack — follows from the spec.
+        """
+        return dataclasses.replace(
+            self,
+            num_lanes=self.num_lanes if num_lanes is None else int(num_lanes),
+            capacity=self.capacity if capacity is None else int(capacity),
+        )
+
+
+class Payload(NamedTuple):
+    """One array travelling through the exchange; ``fill`` pads empty slots."""
+
+    data: jax.Array  # [n, ...] one row per record
+    fill: int | float = 0
+
+
+class SendInfo(NamedTuple):
+    """Send-side bookkeeping — enough to reverse the exchange.
+
+    ``take_from(buffers, send)`` gathers each record's row back out of
+    lane-major buffers (the MoE combine / any request-response pattern).
+    ``lane_overflow`` localizes capacity drops to the lane that filled up;
+    records whose lane fell outside ``[0, num_lanes)`` have no lane to
+    charge, so they appear in the summed ``overflow`` only.
+    """
+
+    lane: jax.Array           # int32[n] destination lane per record
+    slot: jax.Array           # int32[n] rank within lane, -1 for invalid
+    ok: jax.Array             # bool[n]  accepted into the send buffer
+    overflow: jax.Array       # int32[]  local records dropped (all causes)
+    lane_overflow: jax.Array = None  # int32[L] capacity drops per lane
+
+
+class ExchangeResult(NamedTuple):
+    valid: jax.Array     # bool[L, capacity] occupancy of the (received) buffer
+    payloads: tuple      # each [L, capacity, ...], same order as the inputs
+    send: SendInfo
+    # rows the transport actually moved for this worker: the dense backend
+    # ships the whole padded buffer (L * capacity), the ragged backend its
+    # measured occupancy, a local exchange nothing.  0 until the collective
+    # has run (a bare bucketize ships nothing).
+    shipped_rows: jax.Array = None  # int32[]
+
+    def unpack(self):
+        """Flatten lane-major buffers to record-major ``[L*capacity, ...]``."""
+        l, c = self.valid.shape
+        flat = tuple(p.reshape((l * c,) + p.shape[2:]) for p in self.payloads)
+        return self.valid.reshape(-1), flat
+
+
+def take_from(buffers: jax.Array, send: SendInfo) -> jax.Array:
+    """Gather each record's row from ``[L, capacity, ...]`` buffers, zeroing
+    records that never made it into a slot (the reverse of ``bucketize``)."""
+    rows = buffers[send.lane, jnp.where(send.ok, send.slot, 0)]
+    mask = send.ok.reshape(send.ok.shape + (1,) * (rows.ndim - 1))
+    return jnp.where(mask, rows, 0)

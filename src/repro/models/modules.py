@@ -42,6 +42,8 @@ class Policy:
     slstm_unroll: int = 1            # steps per sLSTM scan tick (§Perf)
     remat_policy: str = "nothing"    # "nothing" | "save_moe"
     moe_capacity_factor: float = 0.0  # 0 = use config value
+    exchange_backend: object = None  # MoE dispatch transport: "dense" |
+                                     # "ragged" | ExchangeBackend | None=auto
 
     def cast(self, x: Array) -> Array:
         return x.astype(self.compute_dtype)

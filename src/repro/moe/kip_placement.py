@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.control import DecisionLog, PlacementPolicy, Replace, Telemetry
 from repro.core.histogram import CounterSketch, Histogram
+from repro.core.migration import MigrationPlan, exchange_lane_cost
 from repro.core.partitioner import Partitioner, kip_update, uniform_partitioner
+from repro.exchange.backends import resolve_backend
 
 __all__ = ["ExpertPlacement", "PlacementController", "apply_placement_to_weights"]
 
@@ -106,14 +108,30 @@ def placement_from_assignment(
 
 
 class PlacementController:
-    """DRM for experts: EWMA load sketch + KIP placement updates."""
+    """DRM for experts: EWMA load sketch + KIP placement updates.
+
+    ``expert_weight_bytes`` (bytes one expert's weights + moments occupy)
+    turns on the richer placement costing: candidate placements are priced
+    by folding the bytes they would move through the exchange backend's
+    sizing rule (:func:`~repro.core.migration.exchange_lane_cost`), and the
+    :class:`~repro.control.policy.PlacementPolicy` picks the candidate —
+    including "stay" — whose balance gain best pays for its weight
+    movement (``cost_weight`` scales how many imbalance units one full
+    weight-set move is worth).  At 0.0 (default) the pre-costing behavior
+    holds: the policy decides *whether*, this host computes the placement.
+    """
 
     def __init__(self, num_experts: int, n_shards: int, *, eps: float = 0.02,
-                 alpha: float = 0.5, trigger: float = 1.15, min_steps_between: int = 1):
+                 alpha: float = 0.5, trigger: float = 1.15, min_steps_between: int = 1,
+                 expert_weight_bytes: float = 0.0, cost_weight: float = 1.0,
+                 exchange_backend: str | object | None = None):
         self.placement = ExpertPlacement.identity(num_experts, n_shards)
         self.e, self.n = num_experts, n_shards
         self.eps, self.alpha, self.trigger = eps, alpha, trigger
         self.min_steps_between = min_steps_between
+        self.expert_weight_bytes = float(expert_weight_bytes)
+        self.cost_weight = float(cost_weight)
+        self.exchange_backend = resolve_backend(exchange_backend)
         self.loads_ewma = np.zeros(num_experts)
         self.steps = 0
         self.last_update = -(10**9)
@@ -135,42 +153,99 @@ class PlacementController:
         self.steps += 1
         self.telemetry.record_batch(float(c.sum()))
 
-    def maybe_update(self) -> tuple[bool, ExpertPlacement, np.ndarray]:
-        """Returns (changed, placement, slot_perm) where ``slot_perm[p_new] =
-        p_old`` is the permutation to apply to stacked expert weights."""
-        sl = self.shard_loads(self.loads_ewma)
-        signals = self.telemetry.snapshot(loads=sl, num_workers=self.n)
-        action = self.policy.evaluate(self, signals)
-        self.decisions.record(action, tick=self.steps, imbalance=signals.imbalance)
-        if not isinstance(action, Replace):
-            return False, self.placement, np.arange(self.e, dtype=np.int32)
-        imb = signals.imbalance
-
-        hist = Histogram.from_counts(np.arange(self.e), np.maximum(self.loads_ewma, 1e-9))
-        # previous placement as a Partitioner (explicit routing for all keys)
-        prev_part = uniform_partitioner(self.n, num_hosts=256, heavy_capacity=0)
+    def _prev_partitioner(self) -> Partitioner:
+        """Previous placement as a Partitioner (explicit routing for all keys)."""
+        base = uniform_partitioner(self.n, num_hosts=256, heavy_capacity=0)
         hk = np.arange(self.e, dtype=np.int32)
         order = np.argsort(hk)
-        prev_part = Partitioner(
+        return Partitioner(
             self.n,
             hk[order],
             self.placement.shard_of(hk[order]).astype(np.int32),
-            prev_part.host_to_part,
+            base.host_to_part,
         )
-        kip = kip_update(prev_part, hist, num_partitions=self.n, eps=self.eps,
-                         heavy_capacity=self.e)
+
+    def _build_candidate(self, choice: str, tight: bool) -> dict:
+        """One KIP placement candidate, priced in expert-weight bytes."""
+        hist = Histogram.from_counts(np.arange(self.e), np.maximum(self.loads_ewma, 1e-9))
+        kip = kip_update(self._prev_partitioner(), hist, num_partitions=self.n,
+                         eps=self.eps, heavy_capacity=self.e, tight=tight)
         shard_of = kip.lookup_np(np.arange(self.e, dtype=np.int32))
         shard_of = _slot_constrained(shard_of, self.loads_ewma, self.n)
         new = placement_from_assignment(shard_of, self.placement, self.n)
         # slot permutation: new physical slot p holds logical new.place[p],
         # whose weights currently sit at old slot inv_old[new.place[p]]
         perm = self.placement.inv_place[new.place].astype(np.int32)
+        return self._describe(choice, new, perm)
+
+    def _describe(self, choice: str, new: ExpertPlacement, perm: np.ndarray) -> dict:
+        ex = np.arange(self.e, dtype=np.int32)
+        old_shard = self.placement.shard_of(ex).astype(np.int32)
+        new_shard = new.shard_of(ex).astype(np.int32)
+        moved_mask = old_shard != new_shard
+        bytes_each = self.expert_weight_bytes or 1.0
+        transfer = np.zeros((self.n, self.n))
+        np.add.at(transfer, (old_shard[moved_mask], new_shard[moved_mask]), bytes_each)
+        plan = MigrationPlan(
+            keys=ex[moved_mask].astype(np.int64),
+            src=old_shard[moved_mask], dst=new_shard[moved_mask],
+            weights=np.full(int(moved_mask.sum()), bytes_each),
+            transfer=transfer,
+            relative_migration=float(moved_mask.mean()),
+            num_src=self.n, num_dst=self.n,
+        )
+        new_sl = self.loads_ewma[new.place].reshape(self.n, -1).sum(axis=1)
+        return {
+            "choice": choice,
+            "placement": new,
+            "perm": perm,
+            "moved": int((perm != np.arange(self.e)).sum()),
+            "planned_imbalance": float(new_sl.max() / max(new_sl.mean(), 1e-12)),
+            # weight bytes through the active transport's sizing rule — the
+            # same cost model the streaming RepartitionPolicy prices with
+            "est_migration": exchange_lane_cost(plan, backend=self.exchange_backend),
+        }
+
+    def plan_candidates(self) -> list[dict]:
+        """Candidate placements for the weight-costed policy gate: the two
+        KIP host-binning modes plus the zero-move "stay" option."""
+        stay = self._describe(
+            "stay", self.placement, np.arange(self.e, dtype=np.int32)
+        )
+        return [
+            stay,
+            self._build_candidate("pack", tight=False),
+            self._build_candidate("waterfill", tight=True),
+        ]
+
+    def maybe_update(self) -> tuple[bool, ExpertPlacement, np.ndarray]:
+        """Returns (changed, placement, slot_perm) where ``slot_perm[p_new] =
+        p_old`` is the permutation to apply to stacked expert weights."""
+        sl = self.shard_loads(self.loads_ewma)
+        signals = self.telemetry.snapshot(loads=sl, num_workers=self.n)
+        action = self.policy.evaluate(self, signals)
+        detail = {"choice": action.choice} if isinstance(action, Replace) and action.choice else {}
+        self.decisions.record(action, tick=self.steps, imbalance=signals.imbalance,
+                              detail=detail)
+        if not isinstance(action, Replace):
+            return False, self.placement, np.arange(self.e, dtype=np.int32)
+        imb = signals.imbalance
+
+        if action.placement is not None:
+            # the policy already picked the winning (weight-costed) candidate
+            new, perm = action.placement, np.asarray(action.perm, np.int32)
+            est = action.est_migration
+        else:
+            cand = self._build_candidate("pack", tight=False)
+            new, perm, est = cand["placement"], cand["perm"], cand["est_migration"]
         moved = int((perm != np.arange(self.e)).sum())
         new_sl = self.loads_ewma[new.place].reshape(self.n, -1).sum(axis=1)
         self.history.append({
             "step": self.steps, "imbalance_before": imb,
             "imbalance_planned": float(new_sl.max() / max(new_sl.mean(), 1e-12)),
             "experts_moved": moved,
+            "migration_bytes": float(est) if self.expert_weight_bytes else 0.0,
+            "choice": action.choice or "pack",
         })
         self.placement = new
         self.last_update = self.steps

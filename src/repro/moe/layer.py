@@ -13,10 +13,12 @@ Two evaluation paths:
 * ``moe_ref``     — dense oracle (every expert on every token, exact
   combine); used by tests and tiny CPU configs.
 * ``moe_apply``   — the distributed dispatch (shard_map over (dp..., tp)):
-  hop 1 ships records to the owning EP shard (a cross-shard exchange),
-  hop 2 buckets received records into per-expert buffers (a local exchange),
-  and the combine rides the same lanes back (``backhaul`` + ``take_from``).
-  With generous capacity its output equals ``moe_ref`` exactly.
+  hop 1 ships records to the owning EP shard (a cross-shard exchange on the
+  transport ``Policy.exchange_backend`` selects — dense or count-first
+  ragged), hop 2 buckets received records into per-expert buffers (the
+  local no-collective backend), and the combine rides the same lanes back
+  (``backhaul`` + ``take_from``).  With generous capacity its output equals
+  ``moe_ref`` exactly, whatever the backend.
 """
 from __future__ import annotations
 
@@ -143,9 +145,12 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
         dev = phys // e_loc
         eloc = phys % e_loc
 
-        # hop 1: ship records to the owning EP shard (cross-shard exchange)
+        # hop 1: ship records to the owning EP shard (cross-shard exchange);
+        # the transport comes from the policy (dense / ragged), the combine
+        # backhauls over the same backend
         c1 = max(8, int(np.ceil(cf * tn * k / ntp / 8.0) * 8))
-        ship = make_exchange(ExchangeSpec(num_lanes=ntp, capacity=c1, axis=tp))
+        ship = make_exchange(ExchangeSpec(num_lanes=ntp, capacity=c1, axis=tp),
+                             pol.exchange_backend)
         res1 = ship(
             dev,
             jnp.ones_like(dev, bool),
@@ -154,6 +159,7 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
         rvalid, (rxf, ref_) = res1.unpack()
 
         # hop 2: bucket received records into local per-expert buffers
+        # (axis-free spec -> the local no-collective backend)
         c2 = max(8, int(np.ceil(cf * tn * k / e_loc / 8.0) * 8))
         local = make_exchange(ExchangeSpec(num_lanes=e_loc, capacity=c2))
         res2 = local.bucketize(ref_, rvalid, [Payload(rxf, 0)])

@@ -42,13 +42,17 @@ class ReplicaState:
 
 class DRScheduler:
     def __init__(self, num_replicas: int, *, dr: DRConfig | None = None, seed: int = 0,
-                 migration_token_cost: float = 64.0):
+                 migration_token_cost: float = 64.0,
+                 exchange_backend: str | None = None):
         self.replicas = [ReplicaState(i) for i in range(num_replicas)]
         cfg = dr or DRConfig(lam=4.0, imbalance_trigger=1.25)
         heavy_cap = int(np.ceil(max(1.0, cfg.lam * num_replicas) / 128.0) * 128)
         init = uniform_partitioner(num_replicas, DEFAULT_NUM_HOSTS, seed,
                                    heavy_capacity=heavy_cap)
-        self.drm = DRMaster(init, cfg, consumer="serve")
+        # the transport KV-cache migrations would ride; its sizing rule
+        # prices session-move plans inside the policy stack
+        self.drm = DRMaster(init, cfg, consumer="serve",
+                            exchange_backend=exchange_backend or "dense")
         self.telemetry = Telemetry("serve")
         self.migration_token_cost = migration_token_cost
         self.migrations = 0

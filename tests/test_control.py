@@ -18,6 +18,7 @@ from repro.core.migration import (
 )
 from repro.core.partitioner import uniform_partitioner
 from repro.core.streaming import StreamingJob
+from repro.exchange import resolve_backend
 from repro.data.generators import sawtooth_skew
 from repro.moe.kip_placement import PlacementController
 from repro.serve.scheduler import DRScheduler
@@ -329,6 +330,120 @@ def test_streaming_sawtooth_no_pingpong_with_guard():
 
 
 # ---------------------------------------------------------------------------
+# decision-log persistence: snapshot/restore carries the history
+# ---------------------------------------------------------------------------
+
+
+def test_decision_log_snapshot_restore_roundtrip():
+    """A restored DRM keeps its decision history — records, reasons,
+    details, and the cumulative taken/declined counters — and keeps
+    logging into the same history."""
+    drm = _warm_drm(DRConfig(elastic=True, imbalance_trigger=1.05,
+                             migration_cost_weight=0.0, resize_cooldown=100))
+    drm.exchange_backend = resolve_backend("ragged")
+    drm.evaluate(Signals(loads=np.array([500.0, 30, 30, 37])))  # repartition
+    drm.evaluate(Signals(loads=FLAT))                           # declined
+    snap = drm.snapshot()
+    restored = DRMaster.restore(snap, drm.config)
+    # the restored master prices plans with the same transport it ran on
+    assert restored.exchange_backend.name == "ragged"
+    assert restored.decisions.counts() == drm.decisions.counts() == (1, 1)
+    assert len(restored.decisions) == len(drm.decisions)
+    for a, b in zip(restored.decisions.records, drm.decisions.records):
+        assert a == b, (a, b)
+    assert restored.decisions.consumer == drm.decisions.consumer
+    # the restored log keeps accumulating on the shared counters
+    restored.evaluate(Signals(loads=FLAT), policies_enabled=False)
+    assert restored.decisions.counts() == (1, 2)
+
+
+def test_decision_log_restore_tolerates_old_snapshots():
+    drm = _warm_drm()
+    snap = drm.snapshot()
+    for k in list(snap):
+        if k.startswith("decisions_"):
+            snap.pop(k)
+    restored = DRMaster.restore(snap, drm.config)
+    assert len(restored.decisions) == 0 and restored.decisions.counts() == (0, 0)
+
+
+def test_streaming_snapshot_carries_decision_log():
+    """End-to-end: a StreamingJob restore resumes with its decision history
+    (ROADMAP open item: the log used to live in memory per run)."""
+    job = StreamingJob(num_partitions=4, state_capacity=2048)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        job.process_batch(rng.integers(0, 200, 1024))
+    snap = job.snapshot()
+    fresh = StreamingJob(num_partitions=4, state_capacity=2048)
+    fresh.restore(snap)
+    assert fresh.drm.decisions.counts() == job.drm.decisions.counts()
+    assert [d.reason for d in fresh.drm.decisions.records] == \
+        [d.reason for d in job.drm.decisions.records]
+
+
+# ---------------------------------------------------------------------------
+# backend-priced migration cost + exchange padded-vs-shipped signals
+# ---------------------------------------------------------------------------
+
+
+def test_repartition_cost_uses_host_backend():
+    """The same skewed stream priced under dense vs ragged transports: the
+    ragged rule (mean real rows) is cheaper than the dense rule (padded
+    peak), so a gain that cannot pay for the dense pad can still pay for
+    the ragged traffic — the transport changes the decision."""
+    from repro.exchange import DenseBackend, RaggedBackend
+
+    loads = np.array([500.0, 30, 30, 37])
+
+    def decide(backend, weight):
+        drm = _warm_drm(DRConfig(imbalance_trigger=1.05,
+                                 migration_cost_weight=weight))
+        drm.exchange_backend = backend
+        return drm.evaluate(Signals(loads=loads, num_workers=4))
+
+    dense_free = decide(DenseBackend(), 0.0)
+    assert isinstance(dense_free, Repartition)
+    est_dense = dense_free.est_migration
+    ragged_free = decide(RaggedBackend(), 0.0)
+    assert isinstance(ragged_free, Repartition)
+    est_ragged = ragged_free.est_migration
+    assert 0 < est_ragged < est_dense
+    # a weight between the two gains: dense declines, ragged proceeds
+    gain = dense_free.measured_imbalance - dense_free.planned_imbalance
+    weight = gain / ((est_dense + est_ragged) / 2.0)
+    dense_gated = decide(DenseBackend(), weight)
+    ragged_gated = decide(RaggedBackend(), weight)
+    assert isinstance(dense_gated, NoOp) and dense_gated.reason.startswith("gain ")
+    assert isinstance(ragged_gated, Repartition)
+
+
+def test_telemetry_padded_vs_shipped_and_hot_lane():
+    t = Telemetry("stream")
+    t.record_exchange(100, 0.1, padded_rows=400, lane_overflow=np.array([0, 7, 0]))
+    t.record_exchange(50)  # dense-style: shipped == padded
+    t.record_exchange(0, padded_rows=0, lane_overflow=np.array([0, 2, 1]))
+    s = t.snapshot(loads=FLAT)
+    assert s.exchange_rows == 150 and s.exchange_padded_rows == 450
+    assert s.exchange_padding_fraction == pytest.approx(150 / 450)
+    np.testing.assert_array_equal(s.lane_overflow, [0, 9, 1])
+    assert s.hot_lane == 1
+    empty = t.snapshot(loads=FLAT)
+    assert empty.hot_lane == -1 and empty.exchange_padding_fraction == 0.0
+
+
+def test_telemetry_lane_overflow_survives_lane_count_change():
+    """An elastic resize changes the lane count mid-window; both vectors
+    fold onto the wider one, no drop lost."""
+    t = Telemetry("stream")
+    t.record_exchange(8, lane_overflow=np.array([1, 2]))
+    t.record_exchange(8, lane_overflow=np.array([0, 1, 5, 0]))
+    s = t.snapshot(loads=FLAT)
+    np.testing.assert_array_equal(s.lane_overflow, [1, 3, 5, 0])
+    assert s.hot_lane == 2
+
+
+# ---------------------------------------------------------------------------
 # the other consumers: serving scheduler + MoE placement
 # ---------------------------------------------------------------------------
 
@@ -374,6 +489,48 @@ def test_placement_controller_logs_decisions():
     assert d.taken and d.kind == "replace" and d.consumer == "moe"
     taken, declined = ctl.decisions.counts()
     assert (taken, declined) == (1, 1)
+
+
+def test_placement_weight_costing_gates_which_placement_wins():
+    """With expert-weight bytes folded through exchange_lane_cost, the
+    policy prices every candidate (including "stay"): a prohibitive cost
+    weight declines the re-placement outright, a free one re-places — the
+    §4 gain-vs-migration-cost rule applied to expert weights."""
+    loads = np.ones(16)
+    loads[0], loads[1] = 20.0, 15.0
+
+    def drive(cost_weight):
+        ctl = PlacementController(16, 4, trigger=1.05,
+                                  expert_weight_bytes=4096.0,
+                                  cost_weight=cost_weight)
+        for _ in range(3):
+            ctl.observe(loads)
+        return ctl, ctl.maybe_update()
+
+    ctl, (changed, _, perm) = drive(cost_weight=0.0)
+    assert changed and (perm != np.arange(16)).any()
+    assert ctl.history[-1]["migration_bytes"] > 0
+    assert ctl.history[-1]["choice"] in ("pack", "waterfill")
+    assert ctl.decisions.records[-1].detail["choice"] == ctl.history[-1]["choice"]
+
+    ctl, (changed, _, perm) = drive(cost_weight=1e9)
+    assert not changed and (perm == np.arange(16)).all()
+    d = ctl.decisions.records[-1]
+    assert not d.taken and d.reason.startswith("placement gain <= migration cost")
+
+
+def test_placement_costing_off_keeps_legacy_behavior():
+    """expert_weight_bytes=0 (default): the policy only decides whether, the
+    host computes the KIP placement — the pre-costing path."""
+    ctl = PlacementController(16, 4, trigger=1.05)
+    loads = np.ones(16)
+    loads[0] = 20.0
+    for _ in range(3):
+        ctl.observe(loads)
+    changed, _, _ = ctl.maybe_update()
+    assert changed
+    assert ctl.decisions.records[-1].reason.startswith("imbalance ")
+    assert ctl.history[-1]["migration_bytes"] == 0.0
 
 
 def test_batchmetrics_carries_action_kind():
