@@ -59,4 +59,31 @@ def run(n: int = 8192):
     part_r, slot_r, _ = jit_f(keys)
     ok = bool(jnp.all(part_p == part_r) & jnp.all(slot_p == slot_r))
     rows.append(("kernel/lookup_dispatch_pallas_matches", float(ok), "interpret=True"))
+
+    # bucketize: deriving slots+counts inside vs. reusing the fused route
+    # kernel's outputs (the reuse path also skips the O(n) lane_overflow
+    # scatter — per-lane drops fall out of the counts)
+    from repro.exchange import ExchangeSpec, Payload
+    from repro.exchange.backends import _bucketize
+
+    lanes = 16
+    spec = ExchangeSpec(num_lanes=lanes, capacity=int(np.ceil(n / lanes / 8) * 8))
+    bvals = jnp.ones((n, 8), jnp.float32)
+    jit_slot = jax.jit(lambda d: kref.dispatch_count_ref(d, valid, num_parts=lanes))
+    slot, counts = jit_slot(dest)
+    slot.block_until_ready()
+
+    jit_derive = jax.jit(
+        lambda d: _bucketize(spec, d, valid, [Payload(bvals, 0)]).valid)
+    jit_fused = jax.jit(
+        lambda d, s, c: _bucketize(spec, d, valid, [Payload(bvals, 0)],
+                                   slot=s, counts=c).valid)
+    jit_derive(dest).block_until_ready()
+    jit_fused(dest, slot, counts).block_until_ready()
+    rows.append(("kernel/bucketize_derive_slots", timer(
+        lambda: jit_derive(dest).block_until_ready()),
+        f"{n} records, {lanes} lanes (dispatch_count + overflow scatter inside)"))
+    rows.append(("kernel/bucketize_fused_route", timer(
+        lambda: jit_fused(dest, slot, counts).block_until_ready()),
+        f"{n} records, {lanes} lanes (slots+counts from the route pass)"))
     return rows

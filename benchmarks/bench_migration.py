@@ -38,8 +38,10 @@ def _backend_rows(plan) -> tuple[int, int]:
 
     Dense: every worker ships ``W`` lanes of ``migration_capacity`` rows
     each — the static provision.  Ragged: the rows that actually cross
-    workers (same-worker moves never ship) plus the count phase, one
-    row-equivalent per lane per worker.
+    workers (same-worker moves never ship) plus the count phase priced in
+    bytes-normalized row units — these modeled rows are bare 4-byte keys,
+    so one 4-byte count per lane is exactly one row-equivalent (the rule
+    ``RaggedBackend`` applies on device).
     """
     cap = migration_capacity(plan, num_workers=WORKERS)
     dense = WORKERS * WORKERS * cap  # all workers x all lanes x padded rows

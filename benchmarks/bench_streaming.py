@@ -22,6 +22,7 @@ import time
 
 import numpy as np
 
+from repro.compat import has_ragged_all_to_all
 from repro.core.drm import DRConfig
 from repro.core.streaming import StreamingJob
 from repro.data.generators import drifting_zipf, hotspot_flip, sawtooth_skew, zipf_keys
@@ -61,6 +62,7 @@ def _assert_backend_equivalence(jobs: dict, stream: list[np.ndarray], exp: float
 def run(batches: int = 6, batch_size: int = 16_384):
     rows = []
     state_capacity = 16_384
+    wall_pairs: list[tuple[float, float]] = []  # (dense, ragged) wall per exp
     for exp in EXPONENTS:
         stream = list(drifting_zipf(batches, batch_size, num_keys=5_000,
                                     exponent=exp, drift_every=100, seed=int(exp * 7)))
@@ -90,12 +92,22 @@ def run(batches: int = 6, batch_size: int = 16_384):
             rows.append((f"fig6/exchange_wall_ms/exp={exp}",
                          float(np.mean([m.wall_time_s for m in ms[1:]])) * 1e3,
                          "mean batch wall", be))
+            # the exchange step alone (shuffle dispatch + collective +
+            # reduce), batch 0 excluded (it pays the jit): the wall-clock
+            # side of the rows-shipped story, per backend
+            rows.append((f"fig6/exchange_step_wall_ms/exp={exp}",
+                         float(np.mean([m.exchange_wall_s for m in ms[1:]])) * 1e3,
+                         "mean exchange-path wall per batch", be))
         _assert_backend_equivalence(jobs, stream, exp)
         dense_padded = sum(m.padded_rows for m in jobs["dense"][1])
         ragged_shipped = sum(m.shipped_rows for m in jobs["ragged"][1])
         # count-first traffic tracks real rows: strictly below the padded
         # provision on every one of these power-law profiles
         assert ragged_shipped < dense_padded, (exp, ragged_shipped, dense_padded)
+        wall_pairs.append((
+            float(np.sum([m.exchange_wall_s for m in jobs["dense"][1][1:]])),
+            float(np.sum([m.exchange_wall_s for m in jobs["ragged"][1][1:]])),
+        ))
 
         job_off = StreamingJob(
             num_partitions=8,
@@ -120,9 +132,17 @@ def run(batches: int = 6, batch_size: int = 16_384):
             rows.append((f"fig6/migration_rows_fraction/exp={exp}",
                          mig_rows / reparts / full,
                          f"{reparts} repartitions, full-state a2a = 1"))
+    if has_ragged_all_to_all():
+        # with the native collective the wall-clock must follow the rows:
+        # ragged no slower than dense across the skewed profiles (aggregated
+        # over all exponents; 25% headroom absorbs shared-CI timer noise)
+        dense_wall = sum(d for d, _ in wall_pairs)
+        ragged_wall = sum(r for _, r in wall_pairs)
+        assert ragged_wall <= dense_wall * 1.25, (ragged_wall, dense_wall)
     rows.extend(_resize_cost(4, 8, batch_size, state_capacity))
     rows.extend(_resize_cost(8, 4, batch_size, state_capacity))
     rows.extend(_nonstationary(batches, batch_size, state_capacity))
+    rows.extend(_auto_backend(batches, batch_size, state_capacity))
     return rows
 
 
@@ -194,6 +214,45 @@ def _nonstationary(batches: int, batch_size: int, state_capacity: int):
             # initial grow-under-sustained-skew still fires
             assert reversals == 0, sizes
             assert sizes and sizes[0] == 8, sizes
+    return rows
+
+
+def _auto_backend(batches: int, batch_size: int, state_capacity: int):
+    """The transport as an actuator: a generously padded job starts dense,
+    the ``BackendPolicy`` watches the measured padding fraction stay low and
+    flips it to ragged at a safe point.  The decision trajectory lands in
+    the CSV (``fig6/backend_switches/*``) next to decisions_taken/declined,
+    so the flip is visible output, not something to infer from row counts.
+    """
+    ticks = max(6, batches)
+    job = StreamingJob(
+        num_partitions=8,
+        state_capacity=state_capacity,
+        capacity_factor=4.0,  # generous pad: the lanes run ~25% full
+        dr=DRConfig(imbalance_trigger=1e9, auto_backend=True,
+                    backend_patience=2, backend_cooldown=4 * ticks),
+    )
+    ms = job.run(zipf_keys(batch_size, num_keys=4_000, exponent=1.2, seed=31 + t)
+                 for t in range(ticks))
+    switches = [(m.batch, m.backend) for m in ms if m.action == "switch_backend"]
+    # the flip fires once (patience), lands on ragged, and never reverses
+    # inside the cooldown — the oscillation guard, one actuator over
+    assert len(switches) == 1, [m.action for m in ms]
+    assert job.exchange_backend.name == "ragged", job.exchange_backend.name
+    sw = switches[0][0]
+    trajectory = "->".join(
+        f"{m.backend}@{m.batch}" for m in ms if m.batch in (0, sw, sw + 1)
+    )
+    rows = [
+        ("fig6/backend_switches/auto", len(switches), f"trajectory {trajectory}"),
+        ("fig6/backend_switches/flip_batch", sw,
+         f"padding fraction stayed under {job.drm.config.backend_ragged_below}"),
+        ("fig6/backend_switches/post_flip_shipped_fraction",
+         float(np.mean([m.shipped_rows / max(m.padded_rows, 1)
+                        for m in ms[sw + 1:]])),
+         "shipped/provisioned after the flip (dense = 1)"),
+    ]
+    rows.extend(_decision_rows("auto_backend", job))
     return rows
 
 

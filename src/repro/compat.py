@@ -9,6 +9,16 @@ jax directly, so the repo tracks exactly one spelling of each API:
   jax names the *manual* ones).
 * ``set_mesh``   — ``jax.set_mesh`` (new) vs entering the ``Mesh`` context
   manager (old); both forms support ``with set_mesh(mesh): ...``.
+* ``ragged_all_to_all`` — ``jax.lax.ragged_all_to_all`` (>= 0.5), the real
+  ragged collective: each shard sends ``send_sizes[i]`` rows to shard ``i``
+  instead of the full capacity pad.  On jax 0.4.x the fallback rides the
+  dense tiled all-to-all with the receive buffer masked to ``recv_sizes`` —
+  bit-identical output, dense wall-clock.  The fallback supports the
+  *lane-major regular layout only* (``input_offsets[i] == i * capacity``,
+  ``output_offsets[i] == axis_index * capacity``), which is the one layout
+  the exchange plane uses: ``bucketize`` packs each lane's rows
+  contiguously from slot 0, so lane ``i``'s live rows start at row
+  ``i * capacity`` of the flattened send buffer.
 
 Call sites use the modern spellings (``check_vma=``, ``axis_names=``); the
 shim rewrites them for whatever jax is installed.
@@ -16,8 +26,10 @@ shim rewrites them for whatever jax is installed.
 from __future__ import annotations
 
 import inspect
+import os
 
 import jax
+import jax.numpy as jnp
 
 try:  # jax >= 0.6: top-level export
     from jax import shard_map as _shard_map  # type: ignore[attr-defined]
@@ -26,7 +38,63 @@ except ImportError:  # jax <= 0.4.x
 
 _PARAMS = frozenset(inspect.signature(_shard_map).parameters)
 
-__all__ = ["shard_map", "set_mesh"]
+_NATIVE_RAGGED = hasattr(jax.lax, "ragged_all_to_all")
+
+__all__ = ["shard_map", "set_mesh", "ragged_all_to_all", "has_ragged_all_to_all"]
+
+
+def has_ragged_all_to_all() -> bool:
+    """True when the installed jax provides the native ragged collective.
+
+    ``REPRO_DISABLE_NATIVE_RAGGED=1`` forces the masked-dense fallback even
+    on jax >= 0.5 — the escape hatch benches use to measure the fallback,
+    and tests use to compare the two paths bit-for-bit on one build.
+    (``0``/``false``/unset leave the native path on.)
+    """
+    disabled = os.environ.get("REPRO_DISABLE_NATIVE_RAGGED", "")
+    return _NATIVE_RAGGED and disabled.lower() in ("", "0", "false")
+
+
+def ragged_all_to_all(
+    operand,
+    output,
+    input_offsets,
+    send_sizes,
+    output_offsets,
+    recv_sizes,
+    *,
+    axis_name: str,
+):
+    """``jax.lax.ragged_all_to_all`` with a jax 0.4.x fallback.
+
+    Native (jax >= 0.5): shard ``j`` receives ``send_sizes[j]`` rows read
+    from ``operand[input_offsets[j]:]`` and writes them at
+    ``output_offsets[j]`` of *its* ``output``; regions of ``output`` that
+    receive nothing keep their initial values.  Only the measured rows cross
+    the interconnect — the wall-clock follows the row counts.
+
+    Fallback (jax 0.4.x): the dense tiled all-to-all ships the whole padded
+    buffer and the receive side is masked to ``recv_sizes``, with unfilled
+    rows taken from ``output`` — bit-identical results, padded traffic.
+    Requires the lane-major regular layout (see module doc); offsets are
+    trusted, not checked, because they are static under that layout.  For
+    buffers whose pad rows already equal ``output``'s values (the exchange
+    plane's bucketize-packed buffers) the mask selects identical bits — the
+    cost of keeping one uniform shim contract is one fused select XLA folds
+    into the all-to-all's consumer.
+    """
+    if has_ragged_all_to_all():
+        return jax.lax.ragged_all_to_all(
+            operand, output, input_offsets, send_sizes, output_offsets,
+            recv_sizes, axis_name=axis_name,
+        )
+    num_lanes = send_sizes.shape[0]
+    capacity = operand.shape[0] // num_lanes
+    bufs = operand.reshape((num_lanes, capacity) + operand.shape[1:])
+    recvd = jax.lax.all_to_all(bufs, axis_name, 0, 0, tiled=True)
+    live = jnp.arange(capacity, dtype=jnp.int32)[None, :] < recv_sizes[:, None]
+    live = live.reshape((num_lanes * capacity,) + (1,) * (operand.ndim - 1))
+    return jnp.where(live, recvd.reshape(operand.shape), output)
 
 
 def shard_map(

@@ -9,20 +9,29 @@ gain.  This package is where every such decision lives:
   points, and the :class:`Telemetry` accumulator that builds it during
   normal work.
 * :mod:`repro.control.actions` — the typed decisions a policy can return:
-  :class:`NoOp`, :class:`Repartition`, :class:`Resize`, :class:`Replace`.
+  :class:`NoOp`, :class:`Repartition`, :class:`Resize`, :class:`Replace`,
+  :class:`SwitchBackend`.
 * :mod:`repro.control.policy` — composable policy objects
   (:class:`RepartitionPolicy`, :class:`ResizePolicy`,
-  :class:`PlacementPolicy`) sharing one exchange-lane cost model and one
-  :class:`CooldownGuard` hysteresis rule.
+  :class:`PlacementPolicy`, :class:`BackendPolicy`) sharing one
+  exchange-lane cost model and one :class:`CooldownGuard` hysteresis rule.
 * :mod:`repro.control.log` — the :class:`DecisionLog` recording every
   decision, including declined ones, with reasons.
 
 ``repro.core.drm.DRMaster`` hosts the stack; the runtimes are thin drivers
 that feed signals in and execute the returned actions.
 """
-from repro.control.actions import Action, NoOp, Repartition, Replace, Resize
+from repro.control.actions import (
+    Action,
+    NoOp,
+    Repartition,
+    Replace,
+    Resize,
+    SwitchBackend,
+)
 from repro.control.log import Decision, DecisionLog
 from repro.control.policy import (
+    BackendPolicy,
     CooldownGuard,
     PlacementPolicy,
     RepartitionPolicy,
@@ -32,6 +41,7 @@ from repro.control.signals import Signals, Telemetry
 
 __all__ = [
     "Action",
+    "BackendPolicy",
     "CooldownGuard",
     "Decision",
     "DecisionLog",
@@ -43,5 +53,6 @@ __all__ = [
     "Resize",
     "ResizePolicy",
     "Signals",
+    "SwitchBackend",
     "Telemetry",
 ]

@@ -13,7 +13,7 @@ from typing import ClassVar
 
 from repro.core.partitioner import Partitioner
 
-__all__ = ["Action", "NoOp", "Repartition", "Resize", "Replace"]
+__all__ = ["Action", "NoOp", "Repartition", "Resize", "Replace", "SwitchBackend"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,6 +22,11 @@ class Action:
 
     reason: str
     kind: ClassVar[str] = "action"
+    # whether executing this action migrates state (rows, sessions, expert
+    # weights).  Consumers that count "repartitions" — anything dividing
+    # migration rows by a taken-action count — gate on this instead of
+    # re-listing the exceptions at every call site.
+    moves_state: ClassVar[bool] = True
 
     @property
     def taken(self) -> bool:
@@ -81,3 +86,18 @@ class Replace(Action):
     planned_imbalance: float = 0.0
     est_migration: float = 0.0     # expert-weight bytes through the exchange
     kind: ClassVar[str] = "replace"
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchBackend(Action):
+    """Swap the exchange *transport* (dense <-> ragged) at a safe point —
+    the transport as one more control-plane actuator.  The driver rebuilds
+    its jitted shuffle/migrate steps for the new backend exactly like a
+    resize rebuilds them for a new lane count; no state moves.
+    ``padding_fraction`` records the occupancy signal the decision keyed on.
+    """
+
+    backend: str = ""              # target transport name ("dense" | "ragged")
+    padding_fraction: float = 0.0  # occupied / provisioned rows this window
+    kind: ClassVar[str] = "switch_backend"
+    moves_state: ClassVar[bool] = False  # steps rebuild; no rows migrate

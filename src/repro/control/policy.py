@@ -20,6 +20,14 @@ Mapping onto the paper's §4 decision rules:
 * :class:`PlacementPolicy` — §4 for experts: shard-load imbalance from
   router statistics triggers a KIP re-placement, with the same cooldown
   guard (``min_steps_between``) spacing weight migrations.
+* :class:`BackendPolicy` — the transport as an actuator: when the measured
+  ``exchange_padding_fraction`` (occupied / provisioned rows) stays low, a
+  dense job is shipping padding the ragged count-first transport would
+  skip — flip it; when a ragged job's fraction nears 1.0 the count phase
+  buys nothing — flip back.  The thresholds leave a dead zone and a
+  :class:`CooldownGuard` (``DRConfig.backend_cooldown``) adds hysteresis on
+  top of the patience streak, so dense <-> ragged never ping-pongs on a
+  workload that straddles a threshold.
 
 Policies are stateless evaluators over a *host* (``DRMaster`` or
 ``PlacementController``) that carries the durable decision state (sketch,
@@ -31,12 +39,25 @@ import dataclasses
 
 import numpy as np
 
-from repro.control.actions import Action, NoOp, Repartition, Replace, Resize
+from repro.control.actions import (
+    Action,
+    NoOp,
+    Repartition,
+    Replace,
+    Resize,
+    SwitchBackend,
+)
 from repro.control.signals import Signals
 from repro.core.migration import exchange_lane_cost, plan_migration
 from repro.core.partitioner import expected_loads, kip_update
 
-__all__ = ["CooldownGuard", "RepartitionPolicy", "ResizePolicy", "PlacementPolicy"]
+__all__ = [
+    "CooldownGuard",
+    "RepartitionPolicy",
+    "ResizePolicy",
+    "PlacementPolicy",
+    "BackendPolicy",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +192,46 @@ class ResizePolicy:
         if imb <= cfg.shrink_trigger or low_throughput:
             return NoOp("at-floor", imb, imb)
         return NoOp("dead-zone", imb, imb)
+
+
+class BackendPolicy:
+    """Dense <-> ragged transport selection over the measured lane occupancy
+    (see module doc).  Streak state lives on the host (``backend_streak``,
+    ``last_backend_switch``) so snapshots carry it; the host installs a
+    taken switch via ``note_backend_switch`` so its plan pricing
+    (``exchange_lane_cost``) immediately follows the new transport."""
+
+    def evaluate(self, host, signals: Signals) -> Action:
+        cfg = host.config
+        imb = signals.imbalance
+        if not cfg.auto_backend:
+            return NoOp("auto-backend-disabled", imb, imb)
+        frac = signals.exchange_padding_fraction
+        if signals.exchange_padded_rows <= 0:
+            # no exchange ran this window: nothing measured, keep the streak
+            return NoOp("backend-no-exchange-window", imb, imb)
+        name = getattr(host.exchange_backend, "name", str(host.exchange_backend))
+        if name == "dense" and frac < cfg.backend_ragged_below:
+            target = "ragged"
+        elif name == "ragged" and frac > cfg.backend_dense_above:
+            target = "dense"
+        else:
+            host.backend_streak = 0
+            return NoOp(f"backend-dead-zone {frac:.2f}", imb, imb)
+        host.backend_streak += 1
+        if host.backend_streak < cfg.backend_patience:
+            return NoOp(
+                f"backend-patience {host.backend_streak}/{cfg.backend_patience}",
+                imb, imb,
+            )
+        guard = CooldownGuard(cfg.backend_cooldown)
+        if not guard.ready(host.batches_seen, host.last_backend_switch):
+            return NoOp("backend-cooldown", imb, imb)
+        return SwitchBackend(
+            reason=f"backend {name}->{target} (padding fraction {frac:.2f})",
+            backend=target,
+            padding_fraction=frac,
+        )
 
 
 class PlacementPolicy:

@@ -42,6 +42,12 @@ class Signals:
     migration_overflow: int = 0            # migration rows dropped for capacity
     exchange_rows: int = 0                 # rows the backend shipped through lanes
     exchange_padded_rows: int = 0          # rows the specs provisioned (L * capacity)
+    exchange_occupied_rows: int | None = None  # rows actually live in the
+                                           # buffers — backend-independent
+                                           # occupancy (what a ragged transport
+                                           # would ship); None when the window
+                                           # recorded no exchange (0 is a real
+                                           # measurement: all-empty lanes)
     exchange_wall_s: float = 0.0           # wall time inside the exchange path
     lane_overflow: np.ndarray | None = None  # int64[L] capacity drops per lane
     queue_depths: np.ndarray | None = None # serving replica queue depths
@@ -86,13 +92,21 @@ class Signals:
 
     @property
     def exchange_padding_fraction(self) -> float:
-        """Shipped / provisioned rows over the window — how much of the
-        padded all-to-all the active backend actually moved (1.0 for the
-        dense transport, < 1 when a ragged backend compacts empty lanes,
-        0.0 when the window saw no exchange)."""
+        """Occupied / provisioned rows over the window — how full the padded
+        lanes actually ran, whatever transport moved them (0.0 when the
+        window saw no exchange).  This is the :class:`~repro.control.policy
+        .BackendPolicy`'s signal: a dense job whose fraction stays low is
+        paying for padding a ragged transport would not ship; a ragged job
+        whose fraction nears 1.0 is paying the count phase for nothing.
+        Falls back to shipped rows when the consumer recorded no occupancy
+        (for a dense job the two then coincide at 1.0); an *explicit*
+        occupancy of zero is a real measurement — all-empty lanes — not a
+        missing one."""
         if self.exchange_padded_rows <= 0:
             return 0.0
-        return self.exchange_rows / self.exchange_padded_rows
+        rows = (self.exchange_rows if self.exchange_occupied_rows is None
+                else self.exchange_occupied_rows)
+        return rows / self.exchange_padded_rows
 
     @property
     def hot_lane(self) -> int:
@@ -124,6 +138,7 @@ class Telemetry:
         self._migration_overflow = 0
         self._exchange_rows = 0
         self._exchange_padded_rows = 0
+        self._exchange_occupied_rows: int | None = None
         self._exchange_wall_s = 0.0
         self._lane_overflow: np.ndarray | None = None
         self._queues: np.ndarray | None = None
@@ -147,17 +162,25 @@ class Telemetry:
         wall_s: float = 0.0,
         *,
         padded_rows: int | None = None,
+        occupied_rows: int | None = None,
         lane_overflow: np.ndarray | None = None,
     ) -> None:
         """Exchange-lane accounting for one call: ``rows`` the backend
         shipped (its measured ``shipped_rows``, per worker), ``padded_rows``
         the spec provisioned (``ExchangeSpec.rows``; defaults to ``rows``
-        for a dense transport, where the two coincide), the wall time the
-        exchange path took, and the per-lane overflow vector so ``Signals``
-        can localize which lane filled up."""
+        for a dense transport, where the two coincide), ``occupied_rows``
+        the rows actually live in the buffers (backend-independent — what a
+        ragged transport would ship; defaults to ``rows``), the wall time
+        the exchange path took, and the per-lane overflow vector so
+        ``Signals`` can localize which lane filled up."""
         self._touch()
         self._exchange_rows += int(rows)
         self._exchange_padded_rows += int(rows if padded_rows is None else padded_rows)
+        add = int(rows if occupied_rows is None else occupied_rows)
+        self._exchange_occupied_rows = (
+            add if self._exchange_occupied_rows is None
+            else self._exchange_occupied_rows + add
+        )
         self._exchange_wall_s += float(wall_s)
         if lane_overflow is not None:
             v = np.asarray(lane_overflow, np.int64)
@@ -202,6 +225,7 @@ class Telemetry:
             migration_overflow=self._migration_overflow,
             exchange_rows=self._exchange_rows,
             exchange_padded_rows=self._exchange_padded_rows,
+            exchange_occupied_rows=self._exchange_occupied_rows,
             exchange_wall_s=self._exchange_wall_s,
             lane_overflow=self._lane_overflow,
             queue_depths=self._queues,

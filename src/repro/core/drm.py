@@ -23,9 +23,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.control.actions import Action, NoOp, Repartition, Resize
+from repro.control.actions import Action, NoOp, Repartition, Resize, SwitchBackend
 from repro.control.log import DecisionLog
-from repro.control.policy import RepartitionPolicy, ResizePolicy
+from repro.control.policy import BackendPolicy, RepartitionPolicy, ResizePolicy
 from repro.control.signals import Signals
 from repro.core.histogram import CounterSketch
 from repro.core.partitioner import Partitioner, resize_partitioner
@@ -61,12 +61,27 @@ class DRConfig:
     target_throughput: float = 0.0   # per-worker records/s capacity target;
                                      # sustained below => shrink even if the
                                      # imbalance sits in the trigger dead zone
+    # -- exchange-transport actuator (dense <-> ragged auto-selection) -----
+    auto_backend: bool = False       # let the BackendPolicy flip the transport
+    backend_ragged_below: float = 0.5  # dense -> ragged when the padding
+                                     # fraction stays below this
+    backend_dense_above: float = 0.9 # ragged -> dense when it stays above
+                                     # (the gap between the two is the dead
+                                     # zone that stops threshold straddling)
+    backend_patience: int = 2        # consecutive safe points before flipping
+    backend_cooldown: int = 0        # min safe points between flips (0 = off)
 
     def __post_init__(self):
         if self.elastic:
             assert self.grow_trigger > self.shrink_trigger, (
                 "elastic resize needs a trigger-gap dead zone: "
                 f"grow_trigger {self.grow_trigger} <= shrink_trigger {self.shrink_trigger}"
+            )
+        if self.auto_backend:
+            assert self.backend_ragged_below < self.backend_dense_above, (
+                "backend auto-selection needs a threshold dead zone: "
+                f"backend_ragged_below {self.backend_ragged_below} >= "
+                f"backend_dense_above {self.backend_dense_above}"
             )
 
 
@@ -94,14 +109,19 @@ class DRMaster:
         self.batches_seen = 0
         self.last_repartition = -(10**9)
         self.last_resize = -(10**9)
+        self.last_backend_switch = -(10**9)
         self.history: list[dict] = []
         # elastic-resize policy state: how many consecutive safe points the
         # grow/shrink condition has held (the "sustained" part of the policy)
         self.grow_streak = 0
         self.shrink_streak = 0
+        # backend-actuator state: how long the padding fraction has sat
+        # beyond the active transport's flip threshold
+        self.backend_streak = 0
         # the policy stack this master hosts + its decision log
         self.repartition_policy = RepartitionPolicy()
         self.resize_policy = ResizePolicy()
+        self.backend_policy = BackendPolicy()
         self.decisions = DecisionLog(consumer)
 
     # -- DRW ingestion ------------------------------------------------------
@@ -154,6 +174,15 @@ class DRMaster:
                 action = self.repartition_policy.evaluate(self, signals)
                 if isinstance(action, Repartition):
                     self._install(action)
+                elif isinstance(action, NoOp):
+                    # nothing structural fired: the transport actuator may
+                    # still flip dense <-> ragged on the measured occupancy
+                    switch = self.backend_policy.evaluate(self, signals)
+                    if isinstance(switch, SwitchBackend):
+                        self.note_backend_switch(switch.backend)
+                        action = switch
+                    elif switch.reason != "auto-backend-disabled":
+                        detail["backend_declined"] = switch.reason
         self.decisions.record(action, tick=self.batches_seen,
                               imbalance=signals.imbalance, detail=detail)
         return action
@@ -217,6 +246,25 @@ class DRMaster:
         self.note_resize(new)
         return new
 
+    def note_backend_switch(self, backend: str | object) -> None:
+        """Install a taken backend switch (DRM bookkeeping).
+
+        The DRM's own transport flips immediately — plan pricing
+        (``exchange_lane_cost``) must follow the transport the job is about
+        to run — and the cooldown stamp starts the hysteresis window.  The
+        *driver* rebuilds its jitted steps for the new backend (same
+        contract as a resize: state never moves here).
+        """
+        old = self.exchange_backend.name
+        self.exchange_backend = resolve_backend(backend)
+        self.last_backend_switch = self.batches_seen
+        self.backend_streak = 0
+        self.history.append({
+            "batch": self.batches_seen,
+            "backend": (old, self.exchange_backend.name),
+            "reason": f"backend {old}->{self.exchange_backend.name}",
+        })
+
     def note_resize(self, new: Partitioner) -> None:
         """Install a resized partitioner at a safe point (DRM bookkeeping).
 
@@ -255,6 +303,8 @@ class DRMaster:
             "last_resize": np.int64(self.last_resize),
             "grow_streak": np.int64(self.grow_streak),
             "shrink_streak": np.int64(self.shrink_streak),
+            "last_backend_switch": np.int64(self.last_backend_switch),
+            "backend_streak": np.int64(self.backend_streak),
             "exchange_backend": np.str_(self.exchange_backend.name),
             # decision log: a restored job keeps its decision history
             **self.decisions.to_arrays(),
@@ -283,6 +333,8 @@ class DRMaster:
         drm.last_resize = int(snap.get("last_resize", -(10**9)))
         drm.grow_streak = int(snap.get("grow_streak", 0))
         drm.shrink_streak = int(snap.get("shrink_streak", 0))
+        drm.last_backend_switch = int(snap.get("last_backend_switch", -(10**9)))
+        drm.backend_streak = int(snap.get("backend_streak", 0))
         # decision history (older snapshots predate the log — empty is fine)
         if "decisions_tick" in snap:
             drm.decisions = DecisionLog.from_arrays(snap)

@@ -25,6 +25,7 @@ the transport moved, not just what it reserved.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -86,15 +87,19 @@ def make_shuffle_step(
     def _local(tables, keys, vals, valid):
         # keys [n] local records of this worker
         tables = PartitionerTables(*tables)
-        dest, slot = route_dispatch(
+        dest, slot, counts = route_dispatch(
             tables, keys, valid, num_hosts=num_hosts, seed=seed, num_lanes=num_workers
         )
         dest = jnp.where(valid, dest, 0)
+        # the fused route pass already produced slots *and* per-lane counts:
+        # bucketize derives neither again (no dispatch_count, no overflow
+        # scatter), and the ragged backend's count phase reuses the counts
         res = ex(
             dest % num_workers,
             valid,
             [Payload(keys, KEY_SENTINEL), Payload(vals, 0), Payload(dest, 0)],
             slot=slot,
+            counts=counts,
         )
         rva, (rk, rv, rp) = res.unpack()
         # DRW: sample local keys during normal work (no extra pass)
@@ -131,7 +136,11 @@ def make_shuffle_step(
         check_vma=False,
     )
 
-    @jax.jit
+    # donate the per-batch buffers so the exchange compaction reuses them
+    # instead of double-allocating (CPU has no donation — skip the warning)
+    donate = () if jax.default_backend() == "cpu" else (1, 2, 3)
+
+    @functools.partial(jax.jit, donate_argnums=donate)
     def step(tables: PartitionerTables, keys, vals, valid) -> ShuffleResult:
         rk, rv, rva, rp, loads, hk, hc, ov, lov, shipped = mapped(
             tuple(tables), keys, vals, valid
@@ -225,7 +234,11 @@ def make_migrate_step(
         check_vma=False,
     )
 
-    @jax.jit
+    # donate the state tables: the kept/received outputs alias them, so the
+    # exchange compaction doesn't double-allocate the state (CPU: no-op)
+    donate = () if jax.default_backend() == "cpu" else (1, 2)
+
+    @functools.partial(jax.jit, donate_argnums=donate)
     def migrate(new_tables, state_keys, state_vals):
         return mapped(tuple(new_tables), state_keys, state_vals)
 

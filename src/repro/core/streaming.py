@@ -36,6 +36,15 @@ grow re-bins hosts onto the new ones), the state ships through a migrate
 step whose lanes are sized by the *cross-size* plan, the shuffle step is
 rebuilt for the new topology, and the new topology lands in
 ``BatchMetrics`` and snapshots so a restore resumes resized.
+
+**The transport is an actuator too**: with ``DRConfig(auto_backend=True)``
+the ``BackendPolicy`` watches the measured lane occupancy
+(``Signals.exchange_padding_fraction``) and flips dense <-> ragged at a
+safe point when the padded lanes run empty (or the count phase stops
+paying).  The job rebuilds its jitted steps for the new backend exactly
+like a resize rebuilds them for a new lane count, the switch lands in the
+``DecisionLog``/``BatchMetrics``, and snapshots carry the active backend so
+a restore resumes on the switched transport.
 """
 from __future__ import annotations
 
@@ -48,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.control import NoOp, Repartition, Resize, Telemetry
+from repro.control import NoOp, Repartition, Resize, SwitchBackend, Telemetry
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL
 from repro.core.migration import migration_capacity, plan_migration
@@ -79,6 +88,7 @@ class BatchMetrics:
     shipped_rows: int = 0       # rows the backend moved this batch (per worker)
     padded_rows: int = 0        # rows the specs provisioned (per worker)
     backend: str = "dense"      # exchange backend the batch ran on
+    exchange_wall_s: float = 0.0  # wall time inside the shuffle exchange path
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -202,6 +212,7 @@ class StreamingJob:
             values = np.concatenate([values, np.zeros((pad,) + values.shape[1:], np.float32)])
         valid = keys != KEY_SENTINEL
         self._build(local_n * w)
+        batch_backend = self.exchange_backend.name  # the transport this batch rode
 
         t_ex = time.perf_counter()
         tables = self.drm.partitioner.tables()
@@ -212,15 +223,20 @@ class StreamingJob:
             self.state_keys, self.state_vals, res.keys, res.values, res.valid
         )
         loads = np.asarray(res.loads)  # forces the batch's device work
+        exchange_wall = time.perf_counter() - t_ex
 
         # telemetry: signals gathered during normal work (no extra passes).
         # shipped is the backend's measured traffic (per worker, averaged),
-        # padded what the spec provisioned; under dense the two coincide.
+        # padded what the spec provisioned, occupied the rows actually live
+        # in the lanes (backend-independent — the BackendPolicy's signal;
+        # under dense shipped == padded while occupied tracks the real load).
         shuffle_shipped = int(np.asarray(res.shipped_rows)) // w
+        shuffle_occupied = max(int(loads.sum()) - int(res.overflow), 0) // w
         self.telemetry.record_exchange(
             shuffle_shipped,
-            time.perf_counter() - t_ex,
+            exchange_wall,
             padded_rows=self._shuffle_spec.rows,
+            occupied_rows=shuffle_occupied,
             lane_overflow=np.asarray(res.lane_overflow),
         )
         self.telemetry.record_overflow(shuffle=int(res.overflow))
@@ -244,22 +260,34 @@ class StreamingJob:
                                    policies_enabled=self.dr_enabled)
 
         # execute the action (state only moves here, at the safe point)
-        rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped = 0.0, 0, 0, 0, 0
+        rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
+            0.0, 0, 0, 0, 0, 0
         if isinstance(action, Resize):
-            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped = \
+            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
                 self._apply_resize(action.target)
         elif isinstance(action, Repartition):
-            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped = \
+            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
                 self._migrate_state(action.prev)
+        elif isinstance(action, SwitchBackend):
+            # the DRM already installed the new transport (note_backend_switch);
+            # the job adopts it and rebuilds its jitted steps, exactly like a
+            # resize rebuilds them for a new lane count.  No state moves.
+            self._apply_backend_switch()
         if mig_rows:
-            self.telemetry.record_exchange(mig_shipped, padded_rows=mig_rows)
+            self.telemetry.record_exchange(
+                mig_shipped, padded_rows=mig_rows,
+                occupied_rows=max(mig_moved - mig_overflow, 0) // w,
+            )
             self.telemetry.record_overflow(migration=mig_overflow)
 
         m = BatchMetrics(
             batch=len(self.metrics),
             imbalance=signals.imbalance,
             worker_imbalance=signals.worker_imbalance,
-            repartitioned=action.taken,
+            # a backend switch is taken but moves no state — it must not
+            # count as a repartition (consumers divide migration rows by
+            # this flag's sum)
+            repartitioned=action.taken and action.moves_state,
             relative_migration=rel_mig,
             overflow=int(res.overflow) + mig_overflow,
             state_rows=signals.state_rows if isinstance(action, NoOp) else self._state_rows(),
@@ -272,7 +300,8 @@ class StreamingJob:
             action=action.kind,
             shipped_rows=shuffle_shipped + mig_shipped,
             padded_rows=self._shuffle_spec.rows + mig_rows,
-            backend=self.exchange_backend.name,
+            backend=batch_backend,
+            exchange_wall_s=exchange_wall,
         )
         self.metrics.append(m)
         return m
@@ -299,7 +328,18 @@ class StreamingJob:
             )
         self._pending_resize = n
 
-    def _apply_resize(self, n: int) -> tuple[float, int, int, int, int]:
+    def _apply_backend_switch(self) -> None:
+        """Adopt the DRM's newly installed transport at a safe point.
+
+        The jitted shuffle/migrate steps were built for the old backend, so
+        both caches drop — the next batch rebuilds them for the new
+        transport (the same rebuild contract as an elastic resize)."""
+        self.exchange_backend = self.drm.exchange_backend
+        self._shuffle = None
+        self._shuffle_sig = None
+        self._migrate_steps.clear()
+
+    def _apply_resize(self, n: int) -> tuple[float, int, int, int, int, int]:
         """Execute a resize at a safe point: re-plan cross-size, migrate
         state through freshly sized exchange lanes, rebuild the step cache."""
         old = self.drm.partitioner
@@ -312,16 +352,17 @@ class StreamingJob:
         self._shuffle_sig = None
         return stats
 
-    def _migrate_state(self, old_part: Partitioner) -> tuple[float, int, int, int, int]:
+    def _migrate_state(self, old_part: Partitioner) -> tuple[float, int, int, int, int, int]:
         """Ship keyed state to where ``self.drm.partitioner`` now maps it.
 
         Plans on the driver (``plan_migration`` diffs the partitioners over
         the live keys — cross-size safe), sizes the exchange lanes from the
         plan (``migration_capacity``), and folds received rows back into the
         local state tables.  Returns ``(relative_migration, overflow,
-        buffer_rows, planned_lane_rows, shipped_rows)`` — ``buffer_rows``
-        is the per-worker provision, ``shipped_rows`` what the backend
-        measured moving.
+        buffer_rows, planned_lane_rows, shipped_rows, moved_rows)`` —
+        ``buffer_rows`` is the per-worker provision, ``shipped_rows`` what
+        the backend measured moving, ``moved_rows`` the rows that actually
+        crossed workers (the occupancy side of the telemetry).
         """
         sk = np.asarray(self.state_keys).reshape(-1)
         live = sk[sk != KEY_SENTINEL].astype(np.int64)
@@ -341,7 +382,7 @@ class StreamingJob:
             0, padded_rows=0, lane_overflow=np.asarray(mig_lane_ov)
         )
         return (rel_mig, int(mig_ov), mig_rows, plan_rows,
-                int(np.asarray(mig_shipped)) // self.num_workers)
+                int(np.asarray(mig_shipped)) // self.num_workers, int(moved))
 
     # ------------------------------------------------------------------
     def run(self, batches: Iterable[np.ndarray]) -> list[BatchMetrics]:
@@ -368,13 +409,21 @@ class StreamingJob:
         self.state_vals = jnp.asarray(snap["state_vals"])
         drm_snap = {k[4:]: v for k, v in snap.items() if k.startswith("drm_")}
         self.drm = DRMaster.restore(drm_snap, self.drm.config)
-        self.drm.exchange_backend = self.exchange_backend  # job's transport wins
+        if "exchange_backend" in drm_snap:
+            # the snapshot's *active* transport wins: a BackendPolicy switch
+            # taken before the snapshot survives the restore, whatever
+            # backend this job object was constructed with
+            self.exchange_backend = self.drm.exchange_backend
+        else:  # legacy snapshot predating backends: job's transport stands
+            self.drm.exchange_backend = self.exchange_backend
         # resume the snapshotted topology: the snapshot may have been taken
-        # after an elastic resize, in which case this job's construction-time
-        # partition count is stale and the step cache must be rebuilt
+        # after an elastic resize or a backend switch, in which case this
+        # job's construction-time partition count / transport is stale and
+        # the step caches must be rebuilt
         n = self.drm.partitioner.num_partitions
         assert n >= self.num_workers, (n, self.num_workers)
         self.num_partitions = n
         self._shuffle = None
         self._shuffle_sig = None
+        self._migrate_steps.clear()
         self._pending_resize = None

@@ -13,12 +13,15 @@ An :class:`ExchangeBackend` implements the four verbs of the plane —
   all-to-alls the per-lane *counts* (one int per lane), phase 2 ships
   row-compacted lanes sized by the measured occupancy, so traffic tracks
   real rows instead of padding (Partial Key Grouping's bounded per-worker
-  load, AutoFlow's load-adapted routing).  On this build the row phase
-  rides the dense collective (jax < 0.5 has no ``ragged_all_to_all``;
-  ``_ship`` is the one seam a ragged/NCCL collective slots into) with the
-  receive buffer masked to the exchanged counts, so results are
-  bit-identical to dense while ``shipped_rows`` reports what a ragged
-  transport would actually move.
+  load, AutoFlow's load-adapted routing).  The row phase rides
+  :func:`repro.compat.ragged_all_to_all`: on jax >= 0.5 that is the native
+  ragged collective — only the measured rows cross the interconnect, so the
+  wall-clock follows the row counts — and on jax 0.4.x the bit-identical
+  fallback that ships the dense pad with the receive buffer masked to the
+  exchanged counts (``shipped_rows`` reports the ragged traffic either
+  way).  The same counts make the *return* trip ragged for free: a
+  ``backhaul`` handed the forward hop's counts ships compacted response
+  rows with no second count phase.
 * :class:`LocalBackend` — the ``axis=None`` single-host fast path: pure
   bucketize, no collective, zero shipped rows.
 
@@ -40,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import ragged_all_to_all
 from repro.exchange.spec import ExchangeResult, ExchangeSpec, Payload, SendInfo
 from repro.kernels import ref as kref
 
@@ -66,11 +70,19 @@ class ExchangeBackend(Protocol):
         valid: jax.Array,
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
+        counts: jax.Array | None = None,
     ) -> ExchangeResult: ...
 
     def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult: ...
 
-    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array: ...
+    def backhaul(
+        self,
+        spec: ExchangeSpec,
+        buffers: jax.Array,
+        *,
+        send_counts: jax.Array | None = None,
+        recv_counts: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array]: ...
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float: ...
@@ -82,29 +94,42 @@ def _bucketize(
     valid: jax.Array,
     payloads: Sequence[Payload],
     slot: jax.Array | None = None,
+    counts: jax.Array | None = None,
 ) -> ExchangeResult:
     """Scatter records into ``[L, capacity]`` buffers; count overflow.
 
     Shared by every backend — the send-side layout is transport-independent
-    (a backend that wanted a different layout would override).  ``slot`` may
-    be precomputed (e.g. by the fused route kernel); otherwise it is derived
-    with ``dispatch_count``.
+    (a backend that wanted a different layout would override).  ``slot`` and
+    ``counts`` may be precomputed (the fused route kernel emits both);
+    otherwise they are derived with ``dispatch_count``.  With per-lane
+    ``counts`` in hand the capacity drops per lane are just the excess over
+    capacity — no second O(n) scatter pass.
     """
     lane = jnp.where(valid, lane, 0).astype(jnp.int32)
     if slot is None:
-        slot, _ = kref.dispatch_count_ref(lane, valid, num_parts=spec.num_lanes)
+        slot, counts = kref.dispatch_count_ref(lane, valid, num_parts=spec.num_lanes)
     # a valid record is lost either to a full lane or to a lane outside
     # [0, num_lanes) — both are counted, never silently dropped
     in_range = (lane >= 0) & (lane < spec.num_lanes)
     ok = valid & in_range & (slot >= 0) & (slot < spec.capacity)
     overflow = jnp.sum(valid & (~in_range | (slot >= spec.capacity))).astype(jnp.int32)
-    # per-lane view of the capacity drops: which lane filled up (out-of-range
-    # records have no lane to charge — they count in the scalar only)
-    lane_overflow = (
-        jnp.zeros(spec.num_lanes, jnp.int32)
-        .at[lane]
-        .add((valid & in_range & (slot >= spec.capacity)).astype(jnp.int32), mode="drop")
-    )
+    if counts is not None:
+        # per-lane capacity drops fall out of the dispatch counts (slots are
+        # assigned 0..count-1, so the excess over capacity is exactly what
+        # dropped); the buffer occupancy is the clipped count — both O(L)
+        lane_overflow = jnp.maximum(counts - spec.capacity, 0).astype(jnp.int32)
+        lane_counts = jnp.minimum(counts, spec.capacity).astype(jnp.int32)
+    else:
+        # per-lane view of the capacity drops: which lane filled up
+        # (out-of-range records have no lane to charge — they count in the
+        # scalar only)
+        lane_overflow = (
+            jnp.zeros(spec.num_lanes, jnp.int32)
+            .at[lane]
+            .add((valid & in_range & (slot >= spec.capacity)).astype(jnp.int32),
+                 mode="drop")
+        )
+        lane_counts = None
     # rows without a slot land at column `capacity` and are dropped by
     # the out-of-range scatter (mode='drop') — counted above, never lost
     # silently.
@@ -119,6 +144,8 @@ def _bucketize(
     return ExchangeResult(
         buf_valid, bufs, SendInfo(lane, slot, ok, overflow, lane_overflow),
         shipped_rows=jnp.zeros((), jnp.int32),
+        lane_counts=lane_counts,
+        fills=tuple(p.fill for p in payloads),
     )
 
 
@@ -127,30 +154,90 @@ def _a2a(x: jax.Array, axis: str) -> jax.Array:
     return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
 
 
+def _static_axis_size(axis: str) -> int:
+    """Mesh axis size as a static int (psum of a unit constant), or -1 when
+    it cannot be resolved statically — callers treat -1 as "not usable"."""
+    try:
+        return int(jax.lax.psum(1, axis))
+    except Exception:  # noqa: BLE001 - traced/unbound axis: no static size
+        return -1
+
+
+def _row_bytes(payloads: tuple) -> int:
+    """Bytes one exchanged row carries across all payload buffers."""
+    return max(1, sum(
+        int(np.prod(b.shape[2:], dtype=np.int64)) * b.dtype.itemsize
+        for b in payloads
+    ))
+
+
+def _count_phase_rows(spec: ExchangeSpec, payloads: tuple) -> int:
+    """The count phase's traffic in row-equivalents: one int32 per lane,
+    normalized by the payload row width so narrow-payload exchanges are not
+    over-charged (a 4-byte count next to a 256-byte row is ~free; next to a
+    4-byte row it is a full row)."""
+    return int(np.ceil(4 * spec.num_lanes / _row_bytes(payloads)))
+
+
+def _ragged_ship(
+    spec: ExchangeSpec,
+    arrays_with_fill: Sequence[tuple[jax.Array, int | float]],
+    send_sizes: jax.Array,
+    recv_sizes: jax.Array,
+) -> tuple[jax.Array, ...]:
+    """Move lane-major ``[L, capacity, ...]`` buffers as compacted rows
+    through :func:`repro.compat.ragged_all_to_all` (native collective on
+    jax >= 0.5, masked dense fallback on 0.4.x).
+
+    ``bucketize`` packs each lane's rows contiguously from slot 0, so the
+    flattened buffer is already in the shim's lane-major regular layout:
+    lane ``i``'s rows start at ``i * capacity``, and this worker's rows land
+    at ``axis_index * capacity`` on every receiver.  Valid only when lanes
+    coincide with the shards on ``spec.axis`` — the shim's offset vectors
+    are indexed by axis peer.  ``fill`` initializes the unreceived region of
+    each output, matching what the dense collective would have shipped
+    there (the sender's pad) bit for bit.
+    """
+    l, cap = spec.num_lanes, spec.capacity
+    me = jax.lax.axis_index(spec.axis)
+    in_off = jnp.arange(l, dtype=jnp.int32) * cap
+    out_off = jnp.full((l,), me * cap, jnp.int32)
+    out = []
+    for b, fill in arrays_with_fill:
+        flat = b.reshape((l * cap,) + b.shape[2:])
+        out.append(ragged_all_to_all(
+            flat, jnp.full_like(flat, fill), in_off, send_sizes, out_off,
+            recv_sizes, axis_name=spec.axis,
+        ).reshape(b.shape))
+    return tuple(out)
+
+
 class DenseBackend:
     """The capacity-padded transport (the pre-backend exchange, verbatim)."""
 
     name = "dense"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
 
     def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         """Exchange lane-major buffers across ``spec.axis`` (row j -> shard j)."""
         if spec.axis is None:
             return buffers
-        return ExchangeResult(
-            _a2a(buffers.valid, spec.axis),
-            tuple(_a2a(b, spec.axis) for b in buffers.payloads),
-            buffers.send,
+        return buffers._replace(
+            valid=_a2a(buffers.valid, spec.axis),
+            payloads=tuple(_a2a(b, spec.axis) for b in buffers.payloads),
             shipped_rows=jnp.asarray(spec.rows, jnp.int32),  # the whole pad
         )
 
-    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array:
-        """Reverse collective for already-laned response buffers."""
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
+                 send_counts: jax.Array | None = None,
+                 recv_counts: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+        """Reverse collective for already-laned response buffers; ships the
+        whole pad back, whatever the counts say."""
         if spec.axis is None:
-            return buffers
-        return _a2a(buffers, spec.axis)
+            return buffers, jnp.zeros((), jnp.int32)
+        return _a2a(buffers, spec.axis), jnp.asarray(spec.rows, jnp.int32)
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float:
@@ -166,21 +253,38 @@ class RaggedBackend:
 
     name = "ragged"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
 
     def _ship(self, spec: ExchangeSpec, buffers: ExchangeResult,
               recv_counts: jax.Array) -> ExchangeResult:
-        """Phase 2: move the rows.  On this transport the row phase rides the
-        dense collective and the receive buffer is masked to the exchanged
-        counts — a ``ragged_all_to_all`` / NCCL path replaces exactly this
-        method, everything else (count phase, accounting, consumers) holds.
+        """Phase 2: move the rows through :func:`repro.compat
+        .ragged_all_to_all` — native on jax >= 0.5 (only the counted rows
+        cross the interconnect), the masked dense collective on 0.4.x.
+        ``bucketize`` packs each lane's rows contiguously from slot 0, so
+        the flattened ``[L * capacity]`` buffer is already in the shim's
+        lane-major regular layout: send offsets are ``lane * capacity``,
+        and this worker's rows land at ``axis_index * capacity`` on every
+        receiver.  The received occupancy needs no collective at all — it
+        is exactly the phase-1 counts.
         """
-        live = jnp.arange(spec.capacity, dtype=jnp.int32)[None, :] < recv_counts[:, None]
-        valid = _a2a(buffers.valid, spec.axis) & live
-        return ExchangeResult(
-            valid, tuple(_a2a(b, spec.axis) for b in buffers.payloads), buffers.send,
-            shipped_rows=buffers.shipped_rows,
+        l, cap = spec.num_lanes, spec.capacity
+        valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < recv_counts[:, None]
+        fills = buffers.fills or (0,) * len(buffers.payloads)
+        # the shim's offset vectors are indexed by axis peer, so it applies
+        # only when lanes coincide with shards (the production layout);
+        # degenerate meshes (tests, axis size 1) ride the bare dense ship —
+        # whose pad rows already carry the payload fill, matching the shim's
+        # output bit for bit, and `valid` above masks them off either way
+        if _static_axis_size(spec.axis) == l:
+            payloads = _ragged_ship(
+                spec, tuple(zip(buffers.payloads, fills)),
+                buffers.lane_counts, recv_counts,
+            )
+        else:
+            payloads = tuple(_a2a(b, spec.axis) for b in buffers.payloads)
+        return buffers._replace(
+            valid=valid, payloads=payloads, recv_counts=recv_counts,
         )
 
     def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
@@ -188,22 +292,44 @@ class RaggedBackend:
             return buffers
         # phase 1: exchange per-lane occupancy (one int32 per lane) so every
         # receiver knows how many rows each peer actually sends
-        counts = jnp.sum(buffers.valid, axis=1, dtype=jnp.int32)  # [L] sent per lane
+        counts = buffers.lane_counts
+        if counts is None:  # bucketize had no dispatch counts to reuse
+            counts = jnp.sum(buffers.valid, axis=1, dtype=jnp.int32)
         recv_counts = _a2a(counts, spec.axis)
         # measured traffic: the rows this worker's lanes actually hold plus
-        # the count phase itself (one row-equivalent per lane, conservatively)
-        shipped = (jnp.sum(counts) + spec.num_lanes).astype(jnp.int32)
+        # the count phase itself, priced in bytes-normalized row units
+        shipped = (jnp.sum(counts)
+                   + _count_phase_rows(spec, buffers.payloads)).astype(jnp.int32)
         return self._ship(
-            spec, buffers._replace(shipped_rows=shipped), recv_counts
+            spec,
+            buffers._replace(shipped_rows=shipped, lane_counts=counts),
+            recv_counts,
         )
 
-    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array:
-        """Response rows ride the request lanes back; their occupancy was
-        fixed by the forward hop, so the return trip needs no second count
-        phase — it ships dense on this transport."""
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
+                 send_counts: jax.Array | None = None,
+                 recv_counts: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+        """Response rows ride the request lanes back.  With the forward
+        hop's counts the return trip is ragged with *no second count phase*:
+        this worker's response occupancy per lane is exactly what it
+        received (``send_counts`` = the forward ``recv_counts``) and what
+        comes back is exactly what it sent (``recv_counts`` = the forward
+        ``lane_counts``).  Without counts (a caller that never ran the
+        forward hop through this backend) the return trip ships dense.
+        Rows beyond a lane's count are unspecified (zeros on the native
+        path, the peer's pad on the fallback) — ``take_from`` never reads
+        them.
+        """
         if spec.axis is None:
-            return buffers
-        return _a2a(buffers, spec.axis)
+            return buffers, jnp.zeros((), jnp.int32)
+        if send_counts is None or recv_counts is None:
+            return _a2a(buffers, spec.axis), jnp.asarray(spec.rows, jnp.int32)
+        shipped = jnp.sum(send_counts).astype(jnp.int32)
+        if _static_axis_size(spec.axis) == spec.num_lanes:
+            rows, = _ragged_ship(spec, ((buffers, 0),), send_counts, recv_counts)
+        else:
+            rows = _a2a(buffers, spec.axis)
+        return rows, shipped
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float:
@@ -220,8 +346,8 @@ class LocalBackend:
 
     name = "local"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
 
     def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         assert spec.axis is None, (
@@ -230,9 +356,11 @@ class LocalBackend:
         )
         return buffers
 
-    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array) -> jax.Array:
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
+                 send_counts: jax.Array | None = None,
+                 recv_counts: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
         assert spec.axis is None, spec.axis
-        return buffers
+        return buffers, jnp.zeros((), jnp.int32)
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float:

@@ -61,25 +61,28 @@ def route_dispatch(
 ):
     """Fused key -> partition lookup + lane slot assignment.
 
-    Returns ``(part[n], slot[n])`` where ``slot`` ranks each valid record
-    within its ``part % num_lanes`` lane.  On TPU this is one fused Pallas
-    kernel (``repro.kernels.lookup_dispatch``); elsewhere the bit-identical
-    jnp twin.
+    Returns ``(part[n], slot[n], counts[num_lanes])`` where ``slot`` ranks
+    each valid record within its ``part % num_lanes`` lane and ``counts``
+    is the per-lane occupancy the same pass already tallied — hand both to
+    ``bucketize`` so it derives neither again (the ragged backend's count
+    phase and the per-lane overflow both reuse them).  On TPU this is one
+    fused Pallas kernel (``repro.kernels.lookup_dispatch``); elsewhere the
+    bit-identical jnp twin.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
         from repro.kernels import ops
 
-        part, slot, _ = ops.route_slots(
+        part, slot, counts = ops.route_slots(
             keys, valid, tables, num_hosts=num_hosts, seed=seed, num_lanes=num_lanes
         )
     else:
-        part, slot, _ = kref.lookup_dispatch_ref(
+        part, slot, counts = kref.lookup_dispatch_ref(
             keys, valid, tables.heavy_keys, tables.heavy_parts, tables.host_to_part,
             seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
         )
-    return part, slot
+    return part, slot, counts
 
 
 class Exchange:
@@ -104,15 +107,35 @@ class Exchange:
         valid: jax.Array,
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
+        counts: jax.Array | None = None,
     ) -> ExchangeResult:
-        return self.backend.bucketize(self.spec, lane, valid, payloads, slot=slot)
+        return self.backend.bucketize(
+            self.spec, lane, valid, payloads, slot=slot, counts=counts
+        )
 
     # -- step 3: the collective -------------------------------------------
     def all_to_all(self, buffers: ExchangeResult) -> ExchangeResult:
         return self.backend.all_to_all(self.spec, buffers)
 
-    def backhaul(self, buffers: jax.Array) -> jax.Array:
-        return self.backend.backhaul(self.spec, buffers)
+    def backhaul(
+        self, buffers: jax.Array, forward: ExchangeResult | None = None
+    ) -> tuple[jax.Array, jax.Array]:
+        """Reverse collective for already-laned response buffers.
+
+        ``forward`` is the exchanged result of the request hop; when it
+        carries counts (the ragged transport's phase 1) the response ships
+        compacted rows with no second count phase — the response occupancy
+        *is* the forward ``recv_counts``, and what comes back is the forward
+        ``lane_counts``.  Returns ``(rows, shipped_rows)``: the response
+        buffers plus the rows this worker's transport measured moving, so
+        request-response consumers (the MoE combine) account both
+        directions.
+        """
+        send_counts = forward.recv_counts if forward is not None else None
+        recv_counts = forward.lane_counts if forward is not None else None
+        return self.backend.backhaul(
+            self.spec, buffers, send_counts=send_counts, recv_counts=recv_counts
+        )
 
     # -- the full primitive ------------------------------------------------
     def __call__(
@@ -121,8 +144,11 @@ class Exchange:
         valid: jax.Array,
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
+        counts: jax.Array | None = None,
     ) -> ExchangeResult:
-        return self.all_to_all(self.bucketize(lane, valid, payloads, slot=slot))
+        return self.all_to_all(
+            self.bucketize(lane, valid, payloads, slot=slot, counts=counts)
+        )
 
 
 def make_exchange(

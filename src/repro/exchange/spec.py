@@ -102,6 +102,18 @@ class ExchangeResult(NamedTuple):
     # measured occupancy, a local exchange nothing.  0 until the collective
     # has run (a bare bucketize ships nothing).
     shipped_rows: jax.Array = None  # int32[]
+    # count bookkeeping a request-response pattern reuses: ``lane_counts``
+    # is the buffer occupancy this worker *sent* per lane (min(count, cap)),
+    # ``recv_counts`` what each peer sent it — the ragged transport's
+    # phase-1 exchange.  A response hop riding the same lanes backward
+    # (``backhaul``) needs no second count phase: its send occupancy is
+    # ``recv_counts`` and its receive sizes are ``lane_counts``.
+    lane_counts: jax.Array = None  # int32[L] rows sent per lane
+    recv_counts: jax.Array = None  # int32[L] rows received per peer
+    # static per-payload pad values (the Payload.fill each buffer was built
+    # with) so a ragged transport can initialize its receive buffers
+    # bit-identically to what the dense collective would have shipped
+    fills: tuple = ()
 
     def unpack(self):
         """Flatten lane-major buffers to record-major ``[L*capacity, ...]``."""

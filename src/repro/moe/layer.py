@@ -17,8 +17,11 @@ Two evaluation paths:
   transport ``Policy.exchange_backend`` selects — dense or count-first
   ragged), hop 2 buckets received records into per-expert buffers (the
   local no-collective backend), and the combine rides the same lanes back
-  (``backhaul`` + ``take_from``).  With generous capacity its output equals
-  ``moe_ref`` exactly, whatever the backend.
+  (``backhaul`` + ``take_from``) — under the ragged transport the return
+  trip reuses the forward hop's counts, so it ships compacted rows with no
+  second count phase, and ``MoEOut.shipped_rows`` accounts both
+  directions.  With generous capacity its output equals ``moe_ref``
+  exactly, whatever the backend.
 """
 from __future__ import annotations
 
@@ -43,6 +46,10 @@ class MoEOut(NamedTuple):
     counts: Array     # f32[E] global tokens routed per logical expert
     overflow: Array   # f32[] dropped (token, expert) pairs
     aux_loss: Array   # f32[] load-balancing auxiliary loss
+    # rows the exchange transport measured moving across *both* dispatch
+    # directions (forward ship + combine backhaul), summed over shards;
+    # None on paths with no cross-shard exchange (oracle, replicated decode)
+    shipped_rows: Array = None  # int32[]
 
 
 def init_moe(key, d: int, spec: MoESpec, ffn_kind: str, dtype) -> dict:
@@ -167,9 +174,12 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
 
         eout = _expert_ffn(wi.astype(cd), wo.astype(cd), res2.payloads[0], ffn_kind)
 
-        # return trip: gather each record's result, ship back, combine
+        # return trip: gather each record's result, ship back over the same
+        # lanes, combine.  The forward hop's exchanged counts make the
+        # backhaul ragged with no second count phase (dense forward: the
+        # return trip ships the pad, exactly as before).
         back = take_from(eout, res2.send).reshape(ntp, c1, d)
-        ret = ship.backhaul(back)
+        ret, back_shipped = ship.backhaul(back, forward=res1)
         val = take_from(ret, res1.send)
         y = jnp.zeros((tn, d), cd).at[rec_tok].add(val * rec_w[:, None].astype(cd))
 
@@ -183,19 +193,23 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
         counts = jax.lax.psum(counts, all_axes)
         overflow = jax.lax.psum(overflow, all_axes)
         aux = jax.lax.pmean(_aux_loss(probs, ids, e), all_axes)
-        return y.reshape(b_l, s_l, d), counts, overflow, aux
+        # both directions of measured traffic: forward ship + combine backhaul
+        shipped = jax.lax.psum(res1.shipped_rows + back_shipped, all_axes)
+        return y.reshape(b_l, s_l, d), counts, overflow, aux, shipped
 
     dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     mapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(tp), P(tp), P(), P(), P(dp_spec, tp, None)),
-        out_specs=(P(dp_spec, tp, None), P(), P(), P()),
+        out_specs=(P(dp_spec, tp, None), P(), P(), P(), P()),
         check_vma=False,
     )
     shared = p.get("shared")
-    y, counts, overflow, aux = mapped(p["router"], p["wi"], p["wo"], shared, inv_place, x)
-    return MoEOut(y, counts, overflow, aux)
+    y, counts, overflow, aux, shipped = mapped(
+        p["router"], p["wi"], p["wo"], shared, inv_place, x
+    )
+    return MoEOut(y, counts, overflow, aux, shipped)
 
 
 def moe_apply_replicated(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,

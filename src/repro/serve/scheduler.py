@@ -25,7 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.control import Repartition, Resize, Telemetry
+from repro.control import Repartition, Resize, SwitchBackend, Telemetry
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS
 from repro.core.partitioner import uniform_partitioner
@@ -78,9 +78,9 @@ class DRScheduler:
         """One decision point: telemetry in, typed action out, executed.
 
         Always returns the same schema — ``repartitioned``, ``resized``,
-        ``num_replicas``, ``imbalance``, ``moved_sessions``, ``reason`` —
-        whatever the decision was (including declines, whose reason comes
-        from the decision log's record).
+        ``num_replicas``, ``imbalance``, ``moved_sessions``, ``reason``,
+        ``backend`` — whatever the decision was (including declines, whose
+        reason comes from the decision log's record).
         """
         window_keys = np.asarray(window_keys, np.int64)
         keys, counts = np.unique(window_keys, return_counts=True)
@@ -101,13 +101,26 @@ class DRScheduler:
             # migrate each moved session's KV cache
             moved_sessions = self._reroute_sessions(self.drm.partitioner)
             self.migrations += moved_sessions
+        elif isinstance(action, SwitchBackend):
+            # the DRM installed the new transport in evaluate
+            # (note_backend_switch); session-move pricing follows it from the
+            # next decision on — nothing to rebuild here, replicas are
+            # modeled objects, not jitted steps.  NOTE: this scheduler
+            # records no exchange-lane telemetry yet (KV migrations are
+            # modeled, not bufferized), so the BackendPolicy declines with
+            # "backend-no-exchange-window" on its own signals — this branch
+            # executes switches restored from snapshots or issued by hosts
+            # that do record lane occupancy (ROADMAP open item).
+            pass
         return {
-            "repartitioned": action.taken,
+            # a backend switch moves no sessions: taken, but not a repartition
+            "repartitioned": action.taken and action.moves_state,
             "resized": isinstance(action, Resize),
             "num_replicas": len(self.replicas),
             "imbalance": float(signals.imbalance),
             "moved_sessions": moved_sessions,
             "reason": action.reason,
+            "backend": self.drm.exchange_backend.name,
         }
 
     def imbalance(self) -> float:

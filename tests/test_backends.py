@@ -28,6 +28,7 @@ from repro.exchange import (
     backend_name,
     make_exchange,
     resolve_backend,
+    take_from,
 )
 
 ALL_BACKENDS = ("dense", "ragged", "local")
@@ -170,6 +171,227 @@ def test_collective_backends_bit_identical(skew):
     assert shipped_d == num_lanes * capacity
     assert shipped_r <= shipped_d
     assert shipped_r == int(valid.sum() if skew == "uniform" else min(valid.sum(), capacity)) + num_lanes
+
+
+def test_bucketize_with_precomputed_counts_bit_identical():
+    """The fused-route fast path (slot + counts handed in) must produce the
+    same buffers, overflow scalar, and per-lane overflow vector as the
+    derive-everything path — the lane_overflow scatter it skips is exactly
+    recomputable from the counts."""
+    rng = np.random.default_rng(11)
+    for n, num_lanes, capacity in [(64, 4, 4), (256, 8, 16), (33, 3, 1)]:
+        lane, valid, vals, ints = _random_input(rng, n, num_lanes)
+        spec = ExchangeSpec(num_lanes=num_lanes, capacity=capacity)
+        from repro.kernels import ref as kref
+
+        slot, counts = kref.dispatch_count_ref(lane, valid, num_parts=num_lanes)
+        ex = make_exchange(spec)
+        derived = ex.bucketize(lane, valid, [Payload(vals, 0), Payload(ints, -1)])
+        fused = ex.bucketize(lane, valid, [Payload(vals, 0), Payload(ints, -1)],
+                             slot=slot, counts=counts)
+        np.testing.assert_array_equal(np.asarray(fused.valid), np.asarray(derived.valid))
+        for g, w in zip(fused.payloads, derived.payloads):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        assert int(fused.send.overflow) == int(derived.send.overflow)
+        np.testing.assert_array_equal(
+            np.asarray(fused.send.lane_overflow), np.asarray(derived.send.lane_overflow)
+        )
+        # both paths also surface the buffer occupancy for the count phase
+        np.testing.assert_array_equal(
+            np.asarray(fused.lane_counts), np.asarray(derived.lane_counts)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(derived.lane_counts),
+            np.minimum(np.asarray(counts), capacity),
+        )
+
+
+def test_ragged_count_phase_priced_in_row_bytes():
+    """The phase-1 count vector is 4 bytes per lane, not a full row per
+    lane: a wide-payload exchange pays a fraction of a row for it, a
+    narrow-payload exchange up to one row per lane — never more.  (The old
+    rule charged num_lanes rows regardless, biasing the policy gate against
+    ragged on small records.)"""
+    rng = np.random.default_rng(5)
+    n, num_lanes, capacity = 128, 8, 32
+    lane = rng.integers(0, num_lanes, n).astype(np.int32)
+    valid = np.ones(n, bool)
+
+    def shipped_with(payload):
+        mesh = jax.make_mesh((1,), ("data",))
+        ex = make_exchange(
+            ExchangeSpec(num_lanes=num_lanes, capacity=capacity, axis="data"), "ragged"
+        )
+
+        def body(lane, valid, data):
+            res = ex(lane, valid, [Payload(data, 0)])
+            return res.shipped_rows
+
+        mapped = shard_map(
+            body, mesh=mesh,
+            in_specs=(P("data"), P("data"), P("data")),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return int(mapped(jnp.asarray(lane), jnp.asarray(valid), payload))
+
+    rows = int(valid.sum())
+    narrow = shipped_with(jnp.zeros(n, jnp.int32))            # 4 B/row
+    wide = shipped_with(jnp.zeros((n, 16), jnp.float32))      # 64 B/row
+    assert narrow == rows + num_lanes            # 4 B count == one 4 B row
+    assert wide == rows + int(np.ceil(4 * num_lanes / 64))  # a fraction, ceil'd
+    assert wide < narrow
+
+
+def test_compat_ragged_all_to_all_shim_contract():
+    """The shim itself, called directly: exactly ``send_sizes`` rows per
+    lane move, and the unreceived region of the output keeps its initial
+    values — the same contract whichever branch the installed jax takes
+    (native collective on >= 0.5, masked dense fallback on 0.4.x)."""
+    from repro.compat import ragged_all_to_all
+
+    mesh = jax.make_mesh((1,), ("data",))
+    operand = jnp.arange(8, dtype=jnp.float32)  # one lane of capacity 8
+
+    def body(op):
+        out = jnp.full_like(op, -1.0)
+        sizes = jnp.asarray([3], jnp.int32)
+        off = jnp.zeros(1, jnp.int32)
+        return ragged_all_to_all(op, out, off, sizes, off, sizes,
+                                 axis_name="data")
+
+    mapped = shard_map(body, mesh=mesh, in_specs=P("data"),
+                       out_specs=P("data"), check_vma=False)
+    got = np.asarray(mapped(operand))
+    np.testing.assert_array_equal(got, [0, 1, 2, -1, -1, -1, -1, -1])
+
+
+# ---------------------------------------------------------------------------
+# backhaul: the response hop rides the request lanes back
+# ---------------------------------------------------------------------------
+
+
+def _run_roundtrip(backend, lane, valid, vals, num_lanes, capacity):
+    """Request-response through one exchange: ship, transform received rows
+    in place, backhaul over the same lanes, gather per-record responses."""
+    mesh = jax.make_mesh((1,), ("data",))
+    ex = make_exchange(
+        ExchangeSpec(num_lanes=num_lanes, capacity=capacity, axis="data"), backend
+    )
+
+    def body(lane, valid, vals):
+        res = ex(lane, valid, [Payload(vals, -1.0)])
+        resp = jnp.where(res.valid, res.payloads[0] * 2.0 + 1.0, 0.0)
+        ret, back_shipped = ex.backhaul(resp, forward=res)
+        out = take_from(ret, res.send)
+        return out, res.shipped_rows + back_shipped
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data")),
+        out_specs=(P("data"), P()),
+        check_vma=False,
+    )
+    out, shipped = mapped(lane, valid, vals)
+    return np.asarray(out), int(shipped)
+
+
+@pytest.mark.parametrize("skew", ["uniform", "hot"])
+def test_backhaul_bit_identical_across_backends(skew):
+    """The combine direction (MoE's return trip) is bit-identical dense vs
+    ragged, and the ragged round trip ships the measured rows both ways —
+    no second count phase."""
+    rng = np.random.default_rng(9)
+    n, num_lanes, capacity = 192, 4, 64
+    lane = (np.zeros(n, np.int32) if skew == "hot"
+            else rng.integers(0, num_lanes, n).astype(np.int32))
+    valid = rng.random(n) < 0.85
+    vals = rng.normal(size=(n,)).astype(np.float32)
+    out = {
+        be: _run_roundtrip(be, jnp.asarray(lane), jnp.asarray(valid),
+                           jnp.asarray(vals), num_lanes, capacity)
+        for be in ("dense", "ragged")
+    }
+    np.testing.assert_array_equal(out["dense"][0], out["ragged"][0])
+    # per-record responses: f(x) = 2x + 1 for accepted records, 0 otherwise;
+    # hot skew overflows lane 0 beyond capacity and dropped records return 0
+    dropped = np.zeros(n, bool)
+    if skew == "hot":
+        order = np.cumsum(valid) - 1  # rank within lane 0
+        dropped = valid & (order >= capacity)
+    expect = np.where(valid & ~dropped, 2.0 * vals + 1.0, 0.0)
+    np.testing.assert_allclose(out["dense"][0], expect)
+    # traffic: dense pays the pad twice, ragged pays counted rows + counts
+    rows = int(np.sum(valid & ~dropped))
+    assert out["dense"][1] == 2 * num_lanes * capacity
+    assert out["ragged"][1] == (rows + num_lanes) + rows  # fwd + backhaul
+    assert out["ragged"][1] < out["dense"][1]
+
+
+def test_ragged_backhaul_without_forward_counts_ships_dense():
+    """A backhaul with no forward result to reuse falls back to the padded
+    return trip — correctness never depends on the counts being threaded."""
+    rng = np.random.default_rng(13)
+    n, num_lanes, capacity = 64, 4, 32
+    lane = rng.integers(0, num_lanes, n).astype(np.int32)
+    valid = np.ones(n, bool)
+    vals = rng.normal(size=(n,)).astype(np.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    ex = make_exchange(
+        ExchangeSpec(num_lanes=num_lanes, capacity=capacity, axis="data"), "ragged"
+    )
+
+    def body(lane, valid, vals):
+        res = ex(lane, valid, [Payload(vals, 0.0)])
+        ret, shipped = ex.backhaul(res.payloads[0])  # no forward threaded
+        return take_from(ret, res.send), shipped
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data")),
+        out_specs=(P("data"), P()),
+        check_vma=False,
+    )
+    out, shipped = mapped(jnp.asarray(lane), jnp.asarray(valid), jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(out), vals)
+    assert int(shipped) == num_lanes * capacity  # the dense pad
+
+
+def test_moe_combine_backhaul_bit_identical_across_backends():
+    """End to end through the MoE layer: dispatch + combine under the dense
+    and ragged transports produce the same output bit for bit, match the
+    dense oracle, and the ragged layer reports less measured traffic."""
+    import dataclasses as dc
+
+    from repro.configs.base import MoESpec
+    from repro.models.modules import Policy
+    from repro.moe.layer import init_moe, moe_apply, moe_ref
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = MoESpec(num_experts=4, top_k=2, d_ff_expert=16, shared_expert=False,
+                   capacity_factor=4.0)
+    d = 8
+    p = init_moe(jax.random.PRNGKey(0), d, spec, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    inv = jnp.arange(4, dtype=jnp.int32)
+    want = moe_ref(p, x, spec, "swiglu", Policy(), inv)
+    got = {}
+    for be in ("dense", "ragged"):
+        pol = Policy(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                     exchange_backend=be)
+        got[be] = jax.jit(
+            lambda pp, xx, pol=pol: moe_apply(pp, xx, spec, "swiglu", pol, inv)
+        )(p, x)
+    np.testing.assert_array_equal(np.asarray(got["dense"].y),
+                                  np.asarray(got["ragged"].y))
+    np.testing.assert_allclose(np.asarray(got["dense"].y), np.asarray(want.y),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(got["dense"].counts),
+                                  np.asarray(got["ragged"].counts))
+    assert float(got["dense"].overflow) == float(got["ragged"].overflow) == 0.0
+    # both directions accounted: the ragged layer moves fewer rows than the
+    # padded round trip the dense layer reports
+    assert int(got["ragged"].shipped_rows) < int(got["dense"].shipped_rows)
 
 
 def test_local_backend_refuses_mesh_axis():

@@ -8,7 +8,15 @@ policy rules, at both the unit (synthetic ``Signals``) and end-to-end
 import numpy as np
 import pytest
 
-from repro.control import NoOp, Repartition, Replace, Resize, Signals, Telemetry
+from repro.control import (
+    NoOp,
+    Repartition,
+    Replace,
+    Resize,
+    Signals,
+    SwitchBackend,
+    Telemetry,
+)
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.migration import (
     exchange_lane_cost,
@@ -444,6 +452,163 @@ def test_telemetry_lane_overflow_survives_lane_count_change():
 
 
 # ---------------------------------------------------------------------------
+# the transport as an actuator: BackendPolicy + SwitchBackend
+# ---------------------------------------------------------------------------
+
+
+def _exchange_signals(fraction: float, padded: int = 1000) -> Signals:
+    """Safe-point signals whose measured lane occupancy is ``fraction``."""
+    return Signals(loads=FLAT, exchange_padded_rows=padded,
+                   exchange_occupied_rows=int(fraction * padded),
+                   exchange_rows=padded)
+
+
+def test_telemetry_explicit_zero_occupancy_is_a_measurement():
+    """Occupancy 0 with a nonzero provision means all-empty lanes (maximal
+    padding waste) — the fraction must read 0.0, not fall back to the
+    shipped rows as if occupancy had never been recorded."""
+    t = Telemetry("stream")
+    t.record_exchange(100, padded_rows=100, occupied_rows=0)
+    s = t.snapshot(loads=FLAT)
+    assert s.exchange_padding_fraction == 0.0
+    # unrecorded occupancy still falls back to shipped rows
+    t.record_exchange(50, padded_rows=100)
+    s2 = t.snapshot(loads=FLAT)
+    assert s2.exchange_occupied_rows == 50
+    assert s2.exchange_padding_fraction == pytest.approx(0.5)
+
+
+def test_backend_policy_flips_dense_to_ragged_with_patience():
+    """Sustained low lane occupancy flips a dense job to the ragged
+    transport after the patience streak; the decline and the switch both
+    land in the decision log, and the DRM's plan pricing follows."""
+    cfg = DRConfig(auto_backend=True, backend_patience=2, imbalance_trigger=1e9)
+    drm = _warm_drm(cfg)
+    a1 = drm.evaluate(_exchange_signals(0.2))
+    assert isinstance(a1, NoOp)
+    assert drm.decisions.records[-1].detail["backend_declined"].startswith(
+        "backend-patience")
+    a2 = drm.evaluate(_exchange_signals(0.2))
+    assert isinstance(a2, SwitchBackend) and a2.backend == "ragged"
+    assert a2.padding_fraction == pytest.approx(0.2)
+    assert drm.exchange_backend.name == "ragged"
+    d = drm.decisions.records[-1]
+    assert d.kind == "switch_backend" and d.taken
+    # a window with no exchange keeps the streak untouched, and occupancy
+    # inside the dead zone resets it
+    drm2 = _warm_drm(cfg)
+    drm2.evaluate(_exchange_signals(0.2))
+    a = drm2.evaluate(Signals(loads=FLAT))
+    assert isinstance(a, NoOp)
+    assert drm2.backend_streak == 1
+    drm2.evaluate(_exchange_signals(0.7))  # dead zone: neither threshold
+    assert drm2.backend_streak == 0
+
+
+def test_backend_switch_oscillation_guard():
+    """A sawtooth occupancy straddling both thresholds ping-pongs the
+    transport with the guard off; with the cooldown spanning the window the
+    same workload produces exactly one switch and zero reversals (the
+    resize ping-pong test, one actuator over)."""
+    def run(cooldown):
+        cfg = DRConfig(auto_backend=True, backend_patience=1,
+                       backend_cooldown=cooldown, imbalance_trigger=1e9)
+        drm = _warm_drm(cfg)
+        switches = []
+        for t in range(12):
+            frac = 0.2 if t % 2 == 0 else 1.0
+            a = drm.evaluate(_exchange_signals(frac))
+            if isinstance(a, SwitchBackend):
+                switches.append(a.backend)
+        return switches
+
+    off = run(0)
+    dirs = [s == "ragged" for s in off]
+    reversals_off = sum(1 for a, b in zip(dirs, dirs[1:]) if a != b)
+    assert reversals_off > 0, off
+    on = run(100)
+    assert on == ["ragged"], on  # one flip, no reversal inside the cooldown
+
+
+def test_backend_switch_survives_snapshot_restore():
+    cfg = DRConfig(auto_backend=True, backend_patience=1,
+                   backend_cooldown=50, imbalance_trigger=1e9)
+    drm = _warm_drm(cfg)
+    a = drm.evaluate(_exchange_signals(0.1))
+    assert isinstance(a, SwitchBackend)
+    restored = DRMaster.restore(drm.snapshot(), cfg)
+    assert restored.exchange_backend.name == "ragged"
+    assert restored.last_backend_switch == drm.last_backend_switch
+    # still inside the cooldown: the restored master cannot reverse
+    b = restored.evaluate(_exchange_signals(1.0))
+    assert isinstance(b, NoOp)
+    assert restored.decisions.records[-1].detail["backend_declined"] == \
+        "backend-cooldown"
+
+
+def test_scheduler_backend_policy_parks_without_lane_telemetry():
+    """The serving scheduler records no exchange-lane occupancy (its KV
+    migrations are modeled, not bufferized), so the actuator declines with
+    the no-exchange-window reason instead of flipping on a signal it never
+    measured — the documented contract until session moves ship through
+    real lanes."""
+    sched = DRScheduler(4, dr=DRConfig(auto_backend=True, backend_patience=1,
+                                       imbalance_trigger=1e9))
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        window = rng.integers(0, 100, 50)
+        for s in window:
+            sched.route(int(s), 8.0)
+        r = sched.checkpoint(window)
+        assert r["backend"] == "dense" and not r["repartitioned"]
+    declines = [d.detail.get("backend_declined")
+                for d in sched.drm.decisions.records]
+    assert all(reason == "backend-no-exchange-window" for reason in declines)
+
+
+def test_streaming_auto_backend_switch_end_to_end():
+    """A generously padded dense job flips to ragged at a safe point, the
+    switch is visible in BatchMetrics and the decision log, never reverses
+    inside the cooldown, changes no results, and survives restore."""
+    dr = DRConfig(auto_backend=True, backend_patience=2, backend_cooldown=50,
+                  imbalance_trigger=1e9)
+    job = StreamingJob(num_partitions=4, state_capacity=2048,
+                       capacity_factor=4.0, dr=dr)
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, 500, 2048) for _ in range(6)]
+    ms = job.run(batches)
+    switches = [m for m in ms if m.action == "switch_backend"]
+    assert len(switches) == 1, [m.action for m in ms]
+    assert job.exchange_backend.name == "ragged"
+    # a switch is taken but moves no state: it must not read as a repartition
+    assert not switches[0].repartitioned and not switches[0].resized
+    sw = switches[0].batch
+    assert all(m.backend == "dense" for m in ms[:sw + 1])
+    assert all(m.backend == "ragged" for m in ms[sw + 1:])
+    # ragged batches ship fewer rows than their padded provision
+    assert all(m.shipped_rows < m.padded_rows for m in ms[sw + 1:])
+    assert any(d.kind == "switch_backend" and d.taken
+               for d in job.drm.decisions.records)
+    # bit-identical state vs. a dense-pinned job on the same stream: the
+    # actuator changes traffic, never results
+    pinned = StreamingJob(num_partitions=4, state_capacity=2048,
+                          capacity_factor=4.0,
+                          dr=DRConfig(imbalance_trigger=1e9))
+    pinned.run(batches)
+    for key in rng.integers(0, 500, 16):
+        assert job.state_count(int(key)) == pinned.state_count(int(key))
+    # restore resumes on the switched transport
+    snap = job.snapshot()
+    fresh = StreamingJob(num_partitions=4, state_capacity=2048,
+                         capacity_factor=4.0, dr=dr)
+    assert fresh.exchange_backend.name == "dense"
+    fresh.restore(snap)
+    assert fresh.exchange_backend.name == "ragged"
+    m = fresh.process_batch(batches[0])
+    assert m.backend == "ragged"
+
+
+# ---------------------------------------------------------------------------
 # the other consumers: serving scheduler + MoE placement
 # ---------------------------------------------------------------------------
 
@@ -456,7 +621,7 @@ def test_scheduler_checkpoint_uniform_schema():
                                        shrink_trigger=1.02, resize_patience=1,
                                        imbalance_trigger=1e9))
     keys = ["repartitioned", "resized", "num_replicas", "imbalance",
-            "moved_sessions", "reason"]
+            "moved_sessions", "reason", "backend"]
     results = []
     for _ in range(2):
         window = []

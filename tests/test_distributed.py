@@ -136,36 +136,49 @@ BACKEND_SCRIPT = textwrap.dedent(
     mesh = jax.make_mesh((8,), ("data",))
     batches = list(drifting_zipf(5, 8192, num_keys=2000, exponent=1.5,
                                  drift_every=2, drift_fraction=0.4, seed=3))
+    # three transports: dense, ragged (native ragged_all_to_all on
+    # jax >= 0.5, masked dense on 0.4.x), and ragged with the native
+    # collective force-disabled — on jax >= 0.5 that makes the run a real
+    # native-vs-fallback bit-identity check across an 8-way all_to_all
     jobs = {}
-    for be in ("dense", "ragged"):
+    for be, force_fallback in (("dense", False), ("ragged", False),
+                               ("ragged_fallback", True)):
+        if force_fallback:
+            os.environ["REPRO_DISABLE_NATIVE_RAGGED"] = "1"
+        else:
+            os.environ.pop("REPRO_DISABLE_NATIVE_RAGGED", None)
         job = StreamingJob(
             mesh=mesh, num_partitions=8, state_capacity=4096,
             dr=DRConfig(imbalance_trigger=1.05, migration_cost_weight=0.0),
-            exchange_backend=be,
+            exchange_backend=be.split("_")[0],
         )
         jobs[be] = (job, job.run(batches))
+    os.environ.pop("REPRO_DISABLE_NATIVE_RAGGED", None)
 
     # 1. backend equivalence across a real 8-way all_to_all: bit-identical
-    #    keyed state (exact aggregation) and identical overflow accounting
+    #    keyed state (exact aggregation) and identical overflow accounting,
+    #    native ragged path included
     all_keys = np.concatenate(batches)
     for key in np.unique(all_keys)[:32]:
         got = {be: job.state_count(int(key)) for be, (job, _) in jobs.items()}
         want = float((all_keys == key).sum())
-        assert got["dense"] == got["ragged"] == want, (key, got, want)
+        assert all(g == want for g in got.values()), (key, got, want)
     ov = {be: [m.overflow for m in ms] for be, (_, ms) in jobs.items()}
-    assert ov["dense"] == ov["ragged"], ov
+    assert ov["dense"] == ov["ragged"] == ov["ragged_fallback"], ov
 
-    # 2. both backends repartitioned identically (same decisions, the
+    # 2. all backends repartitioned identically (same decisions, the
     #    transport must not change the control plane's view of the stream)
     acts = {be: [m.action for m in ms] for be, (_, ms) in jobs.items()}
-    assert acts["dense"] == acts["ragged"], acts
+    assert acts["dense"] == acts["ragged"] == acts["ragged_fallback"], acts
     assert any(m.repartitioned for m in jobs["dense"][1])
 
-    # 3. the ragged transport moved strictly fewer rows than the dense pad
+    # 3. the ragged transport moved strictly fewer rows than the dense pad,
+    #    and the native path reports exactly the fallback's accounting
     shipped = {be: sum(m.shipped_rows for m in ms) for be, (_, ms) in jobs.items()}
     padded = {be: sum(m.padded_rows for m in ms) for be, (_, ms) in jobs.items()}
     assert shipped["dense"] == padded["dense"], (shipped, padded)
     assert shipped["ragged"] < padded["ragged"], (shipped, padded)
+    assert shipped["ragged"] == shipped["ragged_fallback"], shipped
     print("BACKEND-EQUIVALENCE-OK", shipped, padded)
     """
 )
@@ -180,3 +193,66 @@ def test_backend_equivalence_on_8_devices():
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), timeout=600,
     )
     assert "BACKEND-EQUIVALENCE-OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
+MOE_BACKHAUL_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.configs.base import MoESpec
+    from repro.models.modules import Policy
+    from repro.moe.layer import init_moe, moe_ref, moe_apply
+    from repro.compat import set_mesh
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    spec = MoESpec(num_experts=8, top_k=2, d_ff_expert=32, shared_expert=False,
+                   capacity_factor=8.0)  # generous: nothing drops
+    d = 16
+    p = init_moe(jax.random.PRNGKey(0), d, spec, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, d))
+    inv = jnp.arange(8, dtype=jnp.int32)
+    want = moe_ref(p, x, spec, "swiglu", Policy(), inv)
+
+    got = {}
+    for be in ("dense", "ragged"):
+        pol = Policy(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                     exchange_backend=be)
+        with set_mesh(mesh):
+            xs = jax.device_put(x, NamedSharding(mesh, P("data", "model", None)))
+            ps = dict(jax.device_put(p, NamedSharding(mesh, P())))
+            ps["wi"] = jax.device_put(p["wi"], NamedSharding(mesh, P("model")))
+            ps["wo"] = jax.device_put(p["wo"], NamedSharding(mesh, P("model")))
+            got[be] = jax.jit(
+                lambda pp, xx, pol=pol: moe_apply(pp, xx, spec, "swiglu", pol, inv)
+            )(ps, xs)
+
+    # bit-identity across a real 4-way dispatch + backhaul: the ragged
+    # combine (count-reusing return trip, native collective on jax >= 0.5)
+    # must match the dense pad exactly, and both match the oracle
+    np.testing.assert_array_equal(np.asarray(got["dense"].y),
+                                  np.asarray(got["ragged"].y))
+    np.testing.assert_allclose(np.asarray(got["dense"].y), np.asarray(want.y),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(got["dense"].counts),
+                                  np.asarray(got["ragged"].counts))
+    assert float(got["dense"].overflow) == float(got["ragged"].overflow) == 0.0
+    # both directions measured: ragged < the dense round-trip pad
+    sd, sr = int(got["dense"].shipped_rows), int(got["ragged"].shipped_rows)
+    assert 0 < sr < sd, (sr, sd)
+    print("MOE-BACKHAUL-OK", sr, sd)
+    """
+)
+
+
+@pytest.mark.slow
+def test_moe_ragged_backhaul_on_8_devices():
+    """MoE dispatch + ragged combine backhaul vs dense on real shards."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", MOE_BACKHAUL_SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "MOE-BACKHAUL-OK" in out.stdout, out.stdout + "\n" + out.stderr
