@@ -86,4 +86,48 @@ def run(n: int = 8192):
     rows.append(("kernel/bucketize_fused_route", timer(
         lambda: jit_fused(dest, slot, counts).block_until_ready()),
         f"{n} records, {lanes} lanes (slots+counts from the route pass)"))
+
+    # fused route->bucketize (the split-phase exchange's whole start path in
+    # one pass) vs. the two-pass route-then-scatter chain it replaces
+    from repro.kernels.ops import route_bucketize as rb_pallas
+
+    rl = 8
+    cap = int(np.ceil(n / rl / 128) * 128)
+    rb_spec = ExchangeSpec(num_lanes=rl, capacity=cap)
+    kf = 2**31 - 1
+
+    def _two_pass(k):
+        part, slot, counts = kref.lookup_dispatch_ref(
+            k, valid, tables.heavy_keys, tables.heavy_parts, tables.host_to_part,
+            seed=kip.seed, num_hosts=kip.num_hosts, num_lanes=rl)
+        dest = jnp.where(valid, part, 0)
+        return _bucketize(rb_spec, dest % rl, valid,
+                          [Payload(k, kf), Payload(bvals, 0), Payload(dest, 0)],
+                          slot=slot, counts=counts).payloads[0]
+
+    def _fused_rb(k):
+        return kref.route_bucketize_ref(
+            k, valid, bvals, tables.heavy_keys, tables.heavy_parts,
+            tables.host_to_part, seed=kip.seed, num_hosts=kip.num_hosts,
+            num_lanes=rl, capacity=cap, key_fill=kf)[4]
+
+    jit_two, jit_frb = jax.jit(_two_pass), jax.jit(_fused_rb)
+    jit_two(keys).block_until_ready()
+    jit_frb(keys).block_until_ready()
+    rows.append(("kernel/route_bucketize_two_pass", timer(
+        lambda: jit_two(keys).block_until_ready()),
+        f"{n} keys, {rl} lanes (route, then scatter)"))
+    rows.append(("kernel/route_bucketize_fused_jnp", timer(
+        lambda: jit_frb(keys).block_until_ready()),
+        f"{n} keys, {rl} lanes (one fused pass)"))
+    got = rb_pallas(keys, valid, tables, bvals, seed=kip.seed,
+                    num_hosts=kip.num_hosts, num_lanes=rl, capacity=cap, key_fill=kf)
+    want = kref.route_bucketize_ref(
+        keys, valid, bvals, tables.heavy_keys, tables.heavy_parts,
+        tables.host_to_part, seed=kip.seed, num_hosts=kip.num_hosts,
+        num_lanes=rl, capacity=cap, key_fill=kf)
+    ok = bool(jnp.all(jnp.where(valid, got[0], 0) == jnp.where(valid, want[0], 0)))
+    for g, w in list(zip(got, want))[1:]:
+        ok = ok and bool(jnp.all(g == w))
+    rows.append(("kernel/route_bucketize_pallas_matches", float(ok), "interpret=True"))
     return rows

@@ -22,6 +22,18 @@ jax directly, so the repo tracks exactly one spelling of each API:
 
 Call sites use the modern spellings (``check_vma=``, ``axis_names=``); the
 shim rewrites them for whatever jax is installed.
+
+Runtime escape hatches (environment variables) also live here, next to the
+version shims they mirror:
+
+* ``REPRO_DISABLE_NATIVE_RAGGED=1`` — force the masked-dense ragged
+  fallback even on jax >= 0.5 (see :func:`has_ragged_all_to_all`).
+* ``REPRO_DISABLE_OVERLAP=1`` — force the streaming driver's serial
+  exchange path even when ``DRConfig.overlap_exchange`` is on (see
+  :func:`overlap_enabled`): batch N+1's route/count phase no longer issues
+  before batch N's row ship drains.  The two paths are bit-identical — the
+  serial step *is* the split-phase pipeline run back to back — so this is a
+  debugging/benching lever, not a correctness switch.
 """
 from __future__ import annotations
 
@@ -40,7 +52,26 @@ _PARAMS = frozenset(inspect.signature(_shard_map).parameters)
 
 _NATIVE_RAGGED = hasattr(jax.lax, "ragged_all_to_all")
 
-__all__ = ["shard_map", "set_mesh", "ragged_all_to_all", "has_ragged_all_to_all"]
+__all__ = [
+    "shard_map",
+    "set_mesh",
+    "ragged_all_to_all",
+    "has_ragged_all_to_all",
+    "overlap_enabled",
+]
+
+
+def overlap_enabled() -> bool:
+    """True unless ``REPRO_DISABLE_OVERLAP`` forces the serial exchange path.
+
+    The streaming driver overlaps batch N+1's start phase with batch N's
+    in-flight row ship when this *and* ``DRConfig.overlap_exchange`` hold;
+    the env var is the bench/debug escape hatch for A/B-ing the two
+    bit-identical paths on one build.  (``0``/``false``/unset leave the
+    overlap on.)
+    """
+    disabled = os.environ.get("REPRO_DISABLE_OVERLAP", "")
+    return disabled.lower() in ("", "0", "false")
 
 
 def has_ragged_all_to_all() -> bool:

@@ -227,6 +227,19 @@ class BackendPolicy:
         guard = CooldownGuard(cfg.backend_cooldown)
         if not guard.ready(host.batches_seen, host.last_backend_switch):
             return NoOp("backend-cooldown", imb, imb)
+        # measured-wall evidence: once both transports have a wall EWMA (the
+        # target was actually run earlier in this job), don't switch onto a
+        # transport measured markedly slower than the current one — the
+        # occupancy model says it should win, the clock says it doesn't.
+        # With no measurement for the target the guard is inert (first
+        # switches are always model-driven).
+        ewma = signals.backend_wall_ewma or {}
+        if target in ewma and name in ewma and ewma[target] > 1.5 * ewma[name]:
+            return NoOp(
+                f"backend-wall-evidence {target} {ewma[target]*1e3:.1f}ms > "
+                f"{name} {ewma[name]*1e3:.1f}ms",
+                imb, imb,
+            )
         return SwitchBackend(
             reason=f"backend {name}->{target} (padding fraction {frac:.2f})",
             backend=target,

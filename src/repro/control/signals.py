@@ -49,6 +49,19 @@ class Signals:
                                            # recorded no exchange (0 is a real
                                            # measurement: all-empty lanes)
     exchange_wall_s: float = 0.0           # wall time inside the exchange path
+    exchange_count_wall_s: float = 0.0     # wall blocking on the start phase
+                                           # (route + bucketize + count a2a)
+    exchange_ship_wall_s: float = 0.0      # wall blocking on the finish phase
+                                           # (row ship) — only drains block, so
+                                           # an overlapped window shows the
+                                           # *un-hidden* remainder
+    exchange_hidden_wall_s: float = 0.0    # host decision-section wall that ran
+                                           # while a finish was in flight (the
+                                           # latency the overlap hid)
+    backend_wall_ewma: dict | None = None  # backend name -> EWMA of exchange
+                                           # wall per call; long-lived (not
+                                           # window-reset) — the BackendPolicy's
+                                           # measured-wall evidence
     lane_overflow: np.ndarray | None = None  # int64[L] capacity drops per lane
     queue_depths: np.ndarray | None = None # serving replica queue depths
     state_rows: int = 0                    # live keyed-state rows (migration scale)
@@ -109,6 +122,18 @@ class Signals:
         return rows / self.exchange_padded_rows
 
     @property
+    def overlap_fraction(self) -> float:
+        """Share of the exchange's ship wall the split-phase pipeline hid
+        behind host work this window: ``hidden / (hidden + ship)``.  0.0 for
+        a serial window (nothing hidden) and when no phase walls were
+        recorded at all — the serial path records only the fused
+        ``exchange_wall_s``, so existing consumers are untouched."""
+        total = self.exchange_hidden_wall_s + self.exchange_ship_wall_s
+        if total <= 0.0:
+            return 0.0
+        return self.exchange_hidden_wall_s / total
+
+    @property
     def hot_lane(self) -> int:
         """Lane with the most capacity drops this window, or -1 when nothing
         overflowed — the localized view the scalar overflow can't give."""
@@ -130,6 +155,9 @@ class Telemetry:
 
     def __init__(self, consumer: str = ""):
         self.consumer = consumer
+        # backend -> EWMA of exchange wall per call; survives window resets
+        # (evidence accumulated over the job's life, not one window)
+        self.wall_ewma: dict[str, float] = {}
         self._reset()
 
     def _reset(self) -> None:
@@ -140,6 +168,9 @@ class Telemetry:
         self._exchange_padded_rows = 0
         self._exchange_occupied_rows: int | None = None
         self._exchange_wall_s = 0.0
+        self._count_wall_s = 0.0
+        self._ship_wall_s = 0.0
+        self._hidden_wall_s = 0.0
         self._lane_overflow: np.ndarray | None = None
         self._queues: np.ndarray | None = None
         # the window clock starts at the first recording, not at reset:
@@ -164,6 +195,10 @@ class Telemetry:
         padded_rows: int | None = None,
         occupied_rows: int | None = None,
         lane_overflow: np.ndarray | None = None,
+        count_wall_s: float | None = None,
+        ship_wall_s: float | None = None,
+        hidden_wall_s: float | None = None,
+        backend: str | None = None,
     ) -> None:
         """Exchange-lane accounting for one call: ``rows`` the backend
         shipped (its measured ``shipped_rows``, per worker), ``padded_rows``
@@ -172,7 +207,14 @@ class Telemetry:
         the rows actually live in the buffers (backend-independent — what a
         ragged transport would ship; defaults to ``rows``), the wall time
         the exchange path took, and the per-lane overflow vector so
-        ``Signals`` can localize which lane filled up."""
+        ``Signals`` can localize which lane filled up.
+
+        The split-phase driver additionally attributes the wall to phases:
+        ``count_wall_s`` blocking on the start phase, ``ship_wall_s``
+        blocking on a drained finish, ``hidden_wall_s`` host work that ran
+        while a finish was in flight.  ``backend`` names the transport the
+        call rode, feeding the long-lived per-backend wall EWMA
+        (``wall_ewma``) the BackendPolicy reads as measured evidence."""
         self._touch()
         self._exchange_rows += int(rows)
         self._exchange_padded_rows += int(rows if padded_rows is None else padded_rows)
@@ -182,6 +224,17 @@ class Telemetry:
             else self._exchange_occupied_rows + add
         )
         self._exchange_wall_s += float(wall_s)
+        if count_wall_s is not None:
+            self._count_wall_s += float(count_wall_s)
+        if ship_wall_s is not None:
+            self._ship_wall_s += float(ship_wall_s)
+        if hidden_wall_s is not None:
+            self._hidden_wall_s += float(hidden_wall_s)
+        if backend is not None and wall_s > 0.0:
+            prev = self.wall_ewma.get(backend)
+            self.wall_ewma[backend] = (
+                float(wall_s) if prev is None else 0.7 * prev + 0.3 * float(wall_s)
+            )
         if lane_overflow is not None:
             v = np.asarray(lane_overflow, np.int64)
             if self._lane_overflow is None:
@@ -227,6 +280,10 @@ class Telemetry:
             exchange_padded_rows=self._exchange_padded_rows,
             exchange_occupied_rows=self._exchange_occupied_rows,
             exchange_wall_s=self._exchange_wall_s,
+            exchange_count_wall_s=self._count_wall_s,
+            exchange_ship_wall_s=self._ship_wall_s,
+            exchange_hidden_wall_s=self._hidden_wall_s,
+            backend_wall_ewma=dict(self.wall_ewma) if self.wall_ewma else None,
             lane_overflow=self._lane_overflow,
             queue_depths=self._queues,
             state_rows=int(state_rows),

@@ -70,6 +70,11 @@ class DRConfig:
                                      # zone that stops threshold straddling)
     backend_patience: int = 2        # consecutive safe points before flipping
     backend_cooldown: int = 0        # min safe points between flips (0 = off)
+    # -- split-phase exchange overlap --------------------------------------
+    overlap_exchange: bool = True    # issue batch N+1's route/count phase
+                                     # before batch N's row ship drains
+                                     # (bit-identical to serial; env escape
+                                     # hatch: REPRO_DISABLE_OVERLAP=1)
 
     def __post_init__(self):
         if self.elastic:

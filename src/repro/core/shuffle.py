@@ -3,14 +3,25 @@
 One shuffle step, executed under ``shard_map`` over the ``data`` axis, built
 entirely on the unified exchange plane (``repro.exchange``):
 
-1. every worker routes its local keys with the fused lookup+dispatch path
-   (Pallas on TPU, jnp twin elsewhere — bit-identical),
-2. the exchange primitive bucketizes records into a capacity-padded
-   ``[W, cap]`` send buffer (overflow is counted per lane, never silently
-   lost), runs the selected backend's collective — dense capacity-padded or
-   ragged count-first — and unpacks the received rows,
+1. every worker routes its local keys with the fused
+   lookup+dispatch+bucketize path (one Pallas kernel on TPU, the jnp twin
+   elsewhere — bit-identical),
+2. the exchange primitive runs the selected backend's collective — dense
+   capacity-padded or ragged count-first — and unpacks the received rows
+   (overflow is counted per lane, never silently lost),
 3. the DRW hook emits the local top-k histogram + global per-partition loads
    (a ``psum`` — reusing normal DDPS communication, as the paper requires).
+
+The step is **split-phase**: the factories below expose a fused serial step
+(exactly the historical call) *plus* ``.start`` / ``.finish`` halves built
+from the same per-worker locals.  ``start`` runs route + bucketize + the
+transport's control phase and returns every control-plane output (loads,
+histograms, overflow, shipped rows) with the un-shipped buffers as an
+opaque pending value; ``finish`` ships the rows.  Because the serial step
+is literally ``finish_local(start_local(...))`` traced into one program,
+the overlapped driver (``repro.core.streaming``) that holds ``finish`` in
+flight across a batch boundary is bit-identical to the serial one by
+construction.
 
 Partitions may outnumber workers (over-partitioning, paper Fig. 5);
 ``worker = partition % W``.
@@ -19,13 +30,15 @@ State migration (``make_migrate_step``) is the *same* exchange with lanes
 sized by the planner: ``repro.core.migration.migration_capacity`` bounds the
 per-lane rows to the planned peak transfer x slack, so a repartition ships a
 buffer proportional to what actually moves instead of ``W * state_capacity``
-rows.  Both steps report the backend's measured ``shipped_rows`` (globally
-summed) next to the spec's padded provision, so the control plane sees what
-the transport moved, not just what it reserved.
+rows.  The migrate step routes with the same fused ``route_dispatch`` pass
+the shuffle uses (worker granularity), so its bucketize reuses the dispatch
+counts instead of recomputing them.  Both steps report the backend's
+measured ``shipped_rows`` (globally summed) next to the spec's padded
+provision, so the control plane sees what the transport moved, not just
+what it reserved.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -35,16 +48,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.hashing import KEY_SENTINEL
 from repro.core.histogram import local_topk_histogram
-from repro.core.partitioner import PartitionerTables, lookup_device
+from repro.core.partitioner import PartitionerTables
 from repro.exchange import (
     ExchangeBackend,
+    ExchangeResult,
     ExchangeSpec,
     Payload,
+    PendingExchange,
+    SendInfo,
     make_exchange,
+    route_bucketize,
     route_dispatch,
 )
 
-__all__ = ["ShuffleResult", "make_shuffle_step", "make_migrate_step"]
+__all__ = ["ShuffleResult", "ShuffleStart", "make_shuffle_step", "make_migrate_step"]
 
 
 class ShuffleResult(NamedTuple):
@@ -60,6 +77,50 @@ class ShuffleResult(NamedTuple):
     shipped_rows: jax.Array   # int32[]       rows the backend moved, all workers
 
 
+class ShuffleStart(NamedTuple):
+    """Control-plane outputs of the shuffle's start phase — everything a
+    decision needs, available before (and without) the row ship."""
+
+    loads: jax.Array          # int32[N]
+    hist_keys: jax.Array      # int32[W, K]
+    hist_counts: jax.Array    # int32[W, K]
+    overflow: jax.Array       # int32[]
+    lane_overflow: jax.Array  # int32[W]
+    shipped_rows: jax.Array   # int32[]
+
+
+class _Pending(NamedTuple):
+    """The in-flight exchange at the jit boundary: just the array leaves
+    (send buffers + phase-1 counts), stacked ``[W, ...]`` per worker.
+    ``SendInfo`` and the static fills are re-stamped at finish — the ship
+    phase never reads them."""
+
+    valid: jax.Array   # bool[W, L, cap]
+    payloads: tuple    # each [W, L, cap, ...]
+    lane_counts: jax.Array | None
+    recv_counts: jax.Array | None
+
+
+def _pack_pending(started: ExchangeResult) -> _Pending:
+    return _Pending(
+        started.valid[None],
+        tuple(b[None] for b in started.payloads),
+        None if started.lane_counts is None else started.lane_counts[None],
+        None if started.recv_counts is None else started.recv_counts[None],
+    )
+
+
+def _unpack_pending(pending: _Pending, fills: tuple) -> ExchangeResult:
+    return ExchangeResult(
+        pending.valid[0],
+        tuple(b[0] for b in pending.payloads),
+        SendInfo(None, None, None, None, None),
+        lane_counts=None if pending.lane_counts is None else pending.lane_counts[0],
+        recv_counts=None if pending.recv_counts is None else pending.recv_counts[0],
+        fills=fills,
+    )
+
+
 def make_shuffle_step(
     mesh: Mesh,
     *,
@@ -73,9 +134,18 @@ def make_shuffle_step(
 ):
     """Build the jitted shuffle step for a fixed mesh/capacity/topology.
 
-    An elastic resize rebuilds the step: ``num_partitions`` fixes the loads
-    vector width, so the new topology needs a new closure (the migrate step
-    does *not* — it routes at worker granularity, see
+    Returns the fused serial step (the historical call: ``step(tables,
+    keys, vals, valid) -> ShuffleResult``) with two extra callables attached
+    for the overlapped driver:
+
+    * ``step.start(tables, keys, vals, valid) -> (pending, ShuffleStart)``
+    * ``step.finish(pending) -> (keys, values, valid, part)`` stacked [W, ...]
+
+    The serial step traces ``finish_local(start_local(...))`` into one
+    program, so ``start`` + ``finish`` is bit-identical to it by
+    construction.  An elastic resize rebuilds the step: ``num_partitions``
+    fixes the loads vector width, so the new topology needs a new closure
+    (the migrate step does *not* — it routes at worker granularity, see
     :func:`make_migrate_step`).  ``backend`` selects the exchange transport
     (dense / ragged / an :class:`ExchangeBackend` instance).
     """
@@ -83,70 +153,83 @@ def make_shuffle_step(
     ex = make_exchange(
         ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis), backend
     )
+    fills = (KEY_SENTINEL, 0, 0)
 
-    def _local(tables, keys, vals, valid):
-        # keys [n] local records of this worker
+    def _start_local(tables, keys, vals, valid):
+        # keys [n] local records of this worker; the fused route pass
+        # produces partition ids, slots, per-lane counts AND the bucketized
+        # send buffers in one chain (one Pallas kernel on TPU) — bucketize
+        # derives nothing again, and the ragged backend's count phase
+        # reuses the counts
         tables = PartitionerTables(*tables)
-        dest, slot, counts = route_dispatch(
-            tables, keys, valid, num_hosts=num_hosts, seed=seed, num_lanes=num_workers
+        part, buffers = route_bucketize(
+            ex, tables, keys, valid, vals, num_hosts=num_hosts, seed=seed
         )
-        dest = jnp.where(valid, dest, 0)
-        # the fused route pass already produced slots *and* per-lane counts:
-        # bucketize derives neither again (no dispatch_count, no overflow
-        # scatter), and the ragged backend's count phase reuses the counts
-        res = ex(
-            dest % num_workers,
-            valid,
-            [Payload(keys, KEY_SENTINEL), Payload(vals, 0), Payload(dest, 0)],
-            slot=slot,
-            counts=counts,
-        )
-        rva, (rk, rv, rp) = res.unpack()
+        dest = jnp.where(valid, part, 0)
+        started = ex.start_from(buffers).buffers
         # DRW: sample local keys during normal work (no extra pass)
         hk, hc, _ = local_topk_histogram(keys, valid, hist_k)
         # global per-partition loads (normal DDPS comms: one psum)
         my_loads = jnp.zeros(num_partitions, jnp.int32).at[dest].add(valid.astype(jnp.int32))
         loads = jax.lax.psum(my_loads, axis)
-        overflow = jax.lax.psum(res.send.overflow, axis)
-        lane_overflow = jax.lax.psum(res.send.lane_overflow, axis)
-        shipped = jax.lax.psum(res.shipped_rows, axis)
-        return (
-            rk[None],
-            rv[None],
-            rva[None],
-            rp[None],
-            loads,
-            hk[None],
-            hc[None],
-            overflow,
-            lane_overflow,
-            shipped,
-        )
+        overflow = jax.lax.psum(started.send.overflow, axis)
+        lane_overflow = jax.lax.psum(started.send.lane_overflow, axis)
+        shipped = jax.lax.psum(started.shipped_rows, axis)
+        start = ShuffleStart(loads, hk[None], hc[None], overflow, lane_overflow, shipped)
+        return _pack_pending(started), start
 
+    def _finish_local(pending):
+        res = ex.finish(PendingExchange(_unpack_pending(pending, fills)))
+        rva, (rk, rv, rp) = res.unpack()
+        return rk[None], rv[None], rva[None], rp[None]
+
+    def _local(tables, keys, vals, valid):
+        pending, start = _start_local(tables, keys, vals, valid)
+        rk, rv, rva, rp = _finish_local(pending)
+        return (rk, rv, rva, rp, start.loads, start.hist_keys, start.hist_counts,
+                start.overflow, start.lane_overflow, start.shipped_rows)
+
+    in_specs = (
+        (P(), P(), P()),  # partitioner tables replicated
+        P(axis),  # keys sharded over workers
+        P(axis),
+        P(axis),
+    )
     mapped = shard_map(
-        _local,
-        mesh=mesh,
-        in_specs=(
-            (P(), P(), P()),  # partitioner tables replicated
-            P(axis),  # keys sharded over workers
-            P(axis),
-            P(axis),
-        ),
+        _local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis), P(), P(), P()),
+        check_vma=False,
+    )
+    start_mapped = shard_map(
+        _start_local, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(axis), ShuffleStart(P(), P(axis), P(axis), P(), P(), P())),
+        check_vma=False,
+    )
+    finish_mapped = shard_map(
+        _finish_local, mesh=mesh, in_specs=(P(axis),),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
         check_vma=False,
     )
 
     # donate the per-batch buffers so the exchange compaction reuses them
     # instead of double-allocating (CPU has no donation — skip the warning)
     donate = () if jax.default_backend() == "cpu" else (1, 2, 3)
+    finish_donate = () if jax.default_backend() == "cpu" else (0,)
+    jstep = jax.jit(mapped, donate_argnums=donate)
+    jstart = jax.jit(start_mapped, donate_argnums=donate)
+    jfinish = jax.jit(finish_mapped, donate_argnums=finish_donate)
 
-    @functools.partial(jax.jit, donate_argnums=donate)
     def step(tables: PartitionerTables, keys, vals, valid) -> ShuffleResult:
-        rk, rv, rva, rp, loads, hk, hc, ov, lov, shipped = mapped(
-            tuple(tables), keys, vals, valid
-        )
-        return ShuffleResult(rk, rv, rva, rp, loads, hk, hc, ov, lov, shipped)
+        return ShuffleResult(*jstep(tuple(tables), keys, vals, valid))
 
+    def start(tables: PartitionerTables, keys, vals, valid):
+        return jstart(tuple(tables), keys, vals, valid)
+
+    def finish(pending: _Pending):
+        return jfinish(pending)
+
+    step.start = start
+    step.finish = finish
     return step
 
 
@@ -164,7 +247,11 @@ def make_migrate_step(
     """Jitted operator-state migration for a partitioner swap.
 
     Each worker re-evaluates the new partitioner on its stored keys and
-    ships rows whose worker changed through the exchange plane.
+    ships rows whose worker changed through the exchange plane.  Routing
+    rides the same fused ``route_dispatch`` pass as the shuffle (worker
+    granularity), so the bucketize reuses the dispatch slots/counts instead
+    of recomputing them; lane ``me`` never ships (its rows stay put), so
+    its count is zeroed before they reach the exchange.
     ``lane_capacity`` bounds the per-(src, dst) rows of the all-to-all —
     pass ``migration_capacity(plan, num_workers=W)`` to size the exchange to
     the planned peak transfer x slack instead of the full state table
@@ -174,51 +261,64 @@ def make_migrate_step(
     the transport.  The migrate step routes at *worker* granularity
     (``lookup % W``), so one step serves any partition count — a resize
     migration reuses the same jit cache.
-    Returns the kept state + received rows + relative-migration metric +
-    overflow + per-lane overflow + globally shipped rows.
+
+    Returns the fused step (kept state + received rows + relative-migration
+    metric + overflow + per-lane overflow + globally shipped rows) with
+    ``.start`` / ``.finish`` halves attached: ``start`` keeps every control
+    output and the kept state local (the ship stays pending), ``finish``
+    ships the moving rows — the overlapped driver leaves it in flight
+    across the safe point.
     """
     num_workers = mesh.shape[axis]
     if spec is None:
         cap = state_capacity if lane_capacity is None else min(lane_capacity, state_capacity)
         spec = ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis)
     ex = make_exchange(spec, backend)
-    cap = spec.capacity
+    fills = (KEY_SENTINEL, 0)
 
-    def _local(new_tables, state_keys, state_vals):
+    def _start_local(new_tables, state_keys, state_vals):
         # state tables arrive stacked [1, S] / [1, S, D] per shard
         state_keys, state_vals = state_keys[0], state_vals[0]
         new_tables = PartitionerTables(*new_tables)
         me = jax.lax.axis_index(axis)
         valid = state_keys != KEY_SENTINEL
-        dest = lookup_device(new_tables, state_keys, num_hosts, seed) % num_workers
-        dest = jnp.where(valid, dest, me)  # padding stays put
+        part, slot, counts = route_dispatch(
+            new_tables, state_keys, valid,
+            num_hosts=num_hosts, seed=seed, num_lanes=num_workers,
+        )
+        dest = jnp.where(valid, part % num_workers, me)
         moving = valid & (dest != me)
+        # the fused route ranked *all* valid rows; rows on lane `me` stay
+        # put (they are not `moving`), so their lane count is zeroed — on
+        # every other lane valid == moving and the slots/counts coincide
+        # with ranking the moving rows alone
+        counts = counts.at[me].set(0)
         moved_w = jnp.sum(moving)
         total_w = jax.lax.psum(jnp.sum(valid), axis)
 
-        res = ex(
+        buffers = ex.bucketize(
             jnp.where(moving, dest, me),
             moving,
             [
                 Payload(jnp.where(moving, state_keys, KEY_SENTINEL), KEY_SENTINEL),
                 Payload(state_vals, 0),
             ],
+            slot=slot,
+            counts=counts,
         )
-        rva, (rk, rv) = res.unpack()
+        started = ex.start_from(buffers).buffers
 
         kept_keys = jnp.where(moving, KEY_SENTINEL, state_keys)
         kept_valid = valid & ~moving
         moved_total = jax.lax.psum(moved_w, axis)
-        overflow = jax.lax.psum(res.send.overflow, axis)
-        lane_overflow = jax.lax.psum(res.send.lane_overflow, axis)
-        shipped = jax.lax.psum(res.shipped_rows, axis)
+        overflow = jax.lax.psum(started.send.overflow, axis)
+        lane_overflow = jax.lax.psum(started.send.lane_overflow, axis)
+        shipped = jax.lax.psum(started.shipped_rows, axis)
         return (
+            _pack_pending(started),
             kept_keys[None],
             state_vals[None],
             kept_valid[None],
-            rk[None],
-            rv[None],
-            rva[None],
             moved_total,
             total_w,
             overflow,
@@ -226,20 +326,52 @@ def make_migrate_step(
             shipped,
         )
 
+    def _finish_local(pending):
+        res = ex.finish(PendingExchange(_unpack_pending(pending, fills)))
+        rva, (rk, rv) = res.unpack()
+        return rk[None], rv[None], rva[None]
+
+    def _local(new_tables, state_keys, state_vals):
+        pending, kk, vv, kva, moved, total, ov, lov, shipped = _start_local(
+            new_tables, state_keys, state_vals
+        )
+        rk, rv, rva = _finish_local(pending)
+        return kk, vv, kva, rk, rv, rva, moved, total, ov, lov, shipped
+
+    in_specs = ((P(), P(), P()), P(axis), P(axis))
     mapped = shard_map(
-        _local,
-        mesh=mesh,
-        in_specs=((P(), P(), P()), P(axis), P(axis)),
+        _local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(axis),) * 6 + (P(), P(), P(), P(), P()),
+        check_vma=False,
+    )
+    start_mapped = shard_map(
+        _start_local, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(axis),) * 4 + (P(), P(), P(), P(), P()),
+        check_vma=False,
+    )
+    finish_mapped = shard_map(
+        _finish_local, mesh=mesh, in_specs=(P(axis),),
+        out_specs=(P(axis), P(axis), P(axis)),
         check_vma=False,
     )
 
     # donate the state tables: the kept/received outputs alias them, so the
     # exchange compaction doesn't double-allocate the state (CPU: no-op)
     donate = () if jax.default_backend() == "cpu" else (1, 2)
+    finish_donate = () if jax.default_backend() == "cpu" else (0,)
+    jmig = jax.jit(mapped, donate_argnums=donate)
+    jstart = jax.jit(start_mapped, donate_argnums=donate)
+    jfinish = jax.jit(finish_mapped, donate_argnums=finish_donate)
 
-    @functools.partial(jax.jit, donate_argnums=donate)
     def migrate(new_tables, state_keys, state_vals):
-        return mapped(tuple(new_tables), state_keys, state_vals)
+        return jmig(tuple(new_tables), state_keys, state_vals)
 
+    def start(new_tables, state_keys, state_vals):
+        return jstart(tuple(new_tables), state_keys, state_vals)
+
+    def finish(pending: _Pending):
+        return jfinish(pending)
+
+    migrate.start = start
+    migrate.finish = finish
     return migrate

@@ -45,6 +45,27 @@ paying).  The job rebuilds its jitted steps for the new backend exactly
 like a resize rebuilds them for a new lane count, the switch lands in the
 ``DecisionLog``/``BatchMetrics``, and snapshots carry the active backend so
 a restore resumes on the switched transport.
+
+**Latency-hiding overlap** (``DRConfig.overlap_exchange``, on by default;
+``REPRO_DISABLE_OVERLAP=1`` forces serial): the shuffle step is
+split-phase (``repro.core.shuffle``), and every control-plane input —
+loads, DRW histograms, overflow, shipped rows — comes out of the *start*
+phase (route + bucketize + the transport's count phase).  The driver
+therefore enqueues batch N's start, enqueues batch N-1's in-flight row
+ship + state merge behind it, and blocks only on batch N's start outputs:
+the host-side decision section (telemetry, sketch update, policy stack)
+runs while the device ships batch N-1's rows.  Because devices execute
+their queue in order and the serial step is literally the two phases
+traced back to back, the overlapped trajectory is bit-identical to the
+serial one — same actions, same state, same overflow.  State only
+materializes at *drains*: before any taken action (a migration must see
+the previous batch merged), at ``snapshot``/``state_count``/direct state
+reads, all of which complete the in-flight finish first.  A repartition's
+own row ship is likewise left in flight across the safe point — only its
+count phase blocks.  Per-phase walls land in telemetry
+(``Signals.exchange_count_wall_s`` / ``exchange_ship_wall_s`` /
+``exchange_hidden_wall_s`` -> ``overlap_fraction``); the hidden wall of a
+batch is recorded when the batch ends, so it lands one window late.
 """
 from __future__ import annotations
 
@@ -57,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.compat import overlap_enabled
 from repro.control import NoOp, Repartition, Resize, SwitchBackend, Telemetry
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL
@@ -88,7 +110,10 @@ class BatchMetrics:
     shipped_rows: int = 0       # rows the backend moved this batch (per worker)
     padded_rows: int = 0        # rows the specs provisioned (per worker)
     backend: str = "dense"      # exchange backend the batch ran on
-    exchange_wall_s: float = 0.0  # wall time inside the shuffle exchange path
+    exchange_wall_s: float = 0.0  # wall blocking on the shuffle exchange path
+                                  # (overlapped batches: the count phase only
+                                  # — the ship is hidden behind host work)
+    overlapped: bool = False    # the batch ran the split-phase pipeline
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -148,10 +173,64 @@ class StreamingJob:
         self._pending_resize: int | None = None
         # per-worker keyed state, stacked [W, S] / [W, S, D]
         sk, sv = empty_state(state_capacity, payload_dim)
-        self.state_keys = jnp.tile(sk[None], (self.num_workers, 1))
-        self.state_vals = jnp.tile(sv[None], (self.num_workers, 1, 1))
+        self._sk = jnp.tile(sk[None], (self.num_workers, 1))
+        self._sv = jnp.tile(sv[None], (self.num_workers, 1, 1))
+        # split-phase overlap: the previous batch's in-flight finish+merge
+        # (a callable that enqueues it), the host wall start of the section
+        # a pending ship is hiding behind, and the state-row count as of the
+        # last drain (reading it live would sync the in-flight merge chain)
+        self._inflight = None
+        self._hidden_since: float | None = None
+        self._last_state_rows = 0
         self.metrics: list[BatchMetrics] = []
         self._merge = jax.jit(jax.vmap(lambda sk, sv, bk, bv, bva: merge_into(sk, sv, bk, bv, bva)))
+
+    # -- keyed state access (drains any in-flight exchange first) ----------
+    @property
+    def state_keys(self):
+        self._drain_inflight()
+        return self._sk
+
+    @state_keys.setter
+    def state_keys(self, v):
+        self._sk = v
+
+    @property
+    def state_vals(self):
+        self._drain_inflight()
+        return self._sv
+
+    @state_vals.setter
+    def state_vals(self, v):
+        self._sv = v
+
+    def _overlap_active(self) -> bool:
+        return self.drm.config.overlap_exchange and overlap_enabled()
+
+    def _consume_inflight(self) -> None:
+        """Enqueue the pending finish + merge (no sync)."""
+        fin, self._inflight = self._inflight, None
+        if fin is not None:
+            fin()
+
+    def _drain_inflight(self) -> None:
+        """Complete the in-flight finish + merge, blocking, and account the
+        un-hidden ship wall (plus whatever host wall it did hide)."""
+        if self._inflight is None:
+            return
+        t = time.perf_counter()
+        hidden = None if self._hidden_since is None else t - self._hidden_since
+        self._hidden_since = None
+        self._consume_inflight()
+        jax.block_until_ready(self._sk)
+        self.telemetry.record_exchange(
+            0, padded_rows=0,
+            ship_wall_s=time.perf_counter() - t,
+            hidden_wall_s=hidden,
+        )
+        self._last_state_rows = int(np.asarray(
+            jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self._sk)
+        ).sum())
 
     # ------------------------------------------------------------------
     def _build(self, local_n: int):
@@ -213,17 +292,46 @@ class StreamingJob:
         valid = keys != KEY_SENTINEL
         self._build(local_n * w)
         batch_backend = self.exchange_backend.name  # the transport this batch rode
+        overlap = self._overlap_active()
 
         t_ex = time.perf_counter()
         tables = self.drm.partitioner.tables()
-        res = self._shuffle(tables, jnp.asarray(keys), jnp.asarray(values, jnp.float32), jnp.asarray(valid))
+        kj = jnp.asarray(keys)
+        vj = jnp.asarray(values, jnp.float32)
+        vaj = jnp.asarray(valid)
+        if overlap:
+            # split-phase pipeline: enqueue this batch's start, then the
+            # previous batch's ship + merge behind it, and block only on the
+            # start outputs — devices drain their queue in order, so the
+            # loads sync below waits for the count phase, not the ship,
+            # which runs while the host works through the decision section
+            shuffle = self._shuffle
+            pending, res = shuffle.start(tables, kj, vj, vaj)
+            self._consume_inflight()
 
-        # stateful reduce: fold received records into per-worker keyed state
-        self.state_keys, self.state_vals, st_overflow = self._merge(
-            self.state_keys, self.state_vals, res.keys, res.values, res.valid
-        )
-        loads = np.asarray(res.loads)  # forces the batch's device work
-        exchange_wall = time.perf_counter() - t_ex
+            def _fin_shuffle(fin=shuffle.finish, pending=pending):
+                rk, rv, rva, _rp = fin(pending)
+                self._sk, self._sv, _ = self._merge(self._sk, self._sv, rk, rv, rva)
+
+            self._inflight = _fin_shuffle
+            loads = np.asarray(res.loads)  # forces the start phase only
+            exchange_wall = time.perf_counter() - t_ex
+            count_wall = exchange_wall
+        else:
+            if self._inflight is not None:
+                self._drain_inflight()
+            res = self._shuffle(tables, kj, vj, vaj)
+            # stateful reduce: fold received records into per-worker state
+            self._sk, self._sv, _ = self._merge(
+                self._sk, self._sv, res.keys, res.values, res.valid
+            )
+            loads = np.asarray(res.loads)  # forces the batch's device work
+            exchange_wall = time.perf_counter() - t_ex
+            count_wall = None
+        # everything the decision section reads below comes out of the
+        # start phase (res is ShuffleStart when overlapped, ShuffleResult
+        # serially — the control fields are shared)
+        self._hidden_since = time.perf_counter() if overlap else None
 
         # telemetry: signals gathered during normal work (no extra passes).
         # shipped is the backend's measured traffic (per worker, averaged),
@@ -238,6 +346,8 @@ class StreamingJob:
             padded_rows=self._shuffle_spec.rows,
             occupied_rows=shuffle_occupied,
             lane_overflow=np.asarray(res.lane_overflow),
+            count_wall_s=count_wall,
+            backend=batch_backend,
         )
         self.telemetry.record_overflow(shuffle=int(res.overflow))
         self.telemetry.record_batch(float(loads.sum()))
@@ -253,13 +363,22 @@ class StreamingJob:
         signals = self.telemetry.snapshot(
             loads=loads,
             num_workers=w,
-            state_rows=self._state_rows(),
+            # reading the live count would sync the in-flight merge chain —
+            # overlapped batches report the count as of the last drain (no
+            # policy keys on exact state rows; the migration planner reads
+            # the real keys after the pre-action drain below)
+            state_rows=self._last_state_rows if overlap else self._state_rows(),
             at_safe_point=at_checkpoint,
         )
         action = self.drm.evaluate(signals, requested_resize=requested,
                                    policies_enabled=self.dr_enabled)
 
-        # execute the action (state only moves here, at the safe point)
+        # execute the action (state only moves here, at the safe point).
+        # Any taken action drains first: a migration must see this batch's
+        # rows merged (bit-identical to the serial trajectory), and a
+        # backend switch rebuilds the steps the in-flight finish came from.
+        if action.taken:
+            self._drain_inflight()
         rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
             0.0, 0, 0, 0, 0, 0
         if isinstance(action, Resize):
@@ -290,7 +409,11 @@ class StreamingJob:
             repartitioned=action.taken and action.moves_state,
             relative_migration=rel_mig,
             overflow=int(res.overflow) + mig_overflow,
-            state_rows=signals.state_rows if isinstance(action, NoOp) else self._state_rows(),
+            # overlapped: the count as of the last drain (exact state rows
+            # would sync the in-flight merge; serial keeps today's numbers)
+            state_rows=(self._last_state_rows if overlap else
+                        (signals.state_rows if isinstance(action, NoOp)
+                         else self._state_rows())),
             wall_time_s=time.perf_counter() - t0,
             reason=action.reason,
             migration_rows=mig_rows,
@@ -302,15 +425,27 @@ class StreamingJob:
             padded_rows=self._shuffle_spec.rows + mig_rows,
             backend=batch_backend,
             exchange_wall_s=exchange_wall,
+            overlapped=overlap,
         )
+        # the host wall since the count sync ran under this batch's (or the
+        # migration's) in-flight ship — that's the latency the overlap hid.
+        # Recorded at batch end, so it lands in the *next* telemetry window.
+        if self._inflight is not None and self._hidden_since is not None:
+            self.telemetry.record_exchange(
+                0, padded_rows=0,
+                hidden_wall_s=time.perf_counter() - self._hidden_since,
+            )
+        self._hidden_since = None
         self.metrics.append(m)
         return m
 
     def _state_rows(self) -> int:
-        """Live keyed-state rows across all workers (the migration scale)."""
-        return int(np.asarray(
+        """Live keyed-state rows across all workers (the migration scale).
+        Drains any in-flight exchange (via the ``state_keys`` property)."""
+        self._last_state_rows = int(np.asarray(
             jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)
         ).sum())
+        return self._last_state_rows
 
     # -- elastic resize -------------------------------------------------
     def resize(self, num_partitions: int) -> None:
@@ -369,10 +504,34 @@ class StreamingJob:
         plan = plan_migration(old_part, self.drm.partitioner, live)
         plan_rows = migration_capacity(plan, num_workers=self.num_workers)
         migrate, lane_cap = self._migrate_step(plan_rows)
-        out = migrate(self.drm.partitioner.tables(), self.state_keys, self.state_vals)
-        kk, vv, kv_valid, rk, rv, rva, moved, total, mig_ov, mig_lane_ov, mig_shipped = out
-        kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
-        self.state_keys, self.state_vals, _ = self._merge(kept_keys, vv, rk, rv, rva)
+        tables = self.drm.partitioner.tables()
+        if self._overlap_active():
+            # split migrate: the count phase (and every control output the
+            # metrics need) blocks below; the row ship + merge stays in
+            # flight across the safe point and drains under the next
+            # batch's host work — bit-identical to the fused step, which
+            # is the two phases traced back to back
+            (pending, kk, vv, kv_valid, moved, total,
+             mig_ov, mig_lane_ov, mig_shipped) = migrate.start(
+                tables, self._sk, self._sv)
+            kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
+            # interim state = kept rows only; the pending merge adds the
+            # received rows (external readers drain first, so they never
+            # observe the interim)
+            self._sk, self._sv = kept_keys, vv
+            self._hidden_since = time.perf_counter()
+
+            def _fin_migrate(fin=migrate.finish, pending=pending):
+                rk, rv, rva = fin(pending)
+                self._sk, self._sv, _ = self._merge(self._sk, self._sv, rk, rv, rva)
+
+            self._inflight = _fin_migrate
+        else:
+            out = migrate(tables, self._sk, self._sv)
+            (kk, vv, kv_valid, rk, rv, rva, moved, total,
+             mig_ov, mig_lane_ov, mig_shipped) = out
+            kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
+            self._sk, self._sv, _ = self._merge(kept_keys, vv, rk, rv, rva)
         rel_mig = float(moved) / max(float(total), 1e-9)
         mig_rows = self.num_workers * lane_cap  # rows received per worker
         # rows/wall are recorded by process_batch (one call per migration);
@@ -405,6 +564,9 @@ class StreamingJob:
         }
 
     def restore(self, snap: dict) -> None:
+        # any in-flight finish belongs to the state being replaced: discard
+        self._inflight = None
+        self._hidden_since = None
         self.state_keys = jnp.asarray(snap["state_keys"])
         self.state_vals = jnp.asarray(snap["state_vals"])
         drm_snap = {k[4:]: v for k, v in snap.items() if k.startswith("drm_")}
@@ -427,3 +589,4 @@ class StreamingJob:
         self._shuffle_sig = None
         self._migrate_steps.clear()
         self._pending_resize = None
+        self._state_rows()  # refresh the drain-time row cache

@@ -15,8 +15,10 @@ from repro.exchange.plane import (
     ExchangeResult,
     ExchangeSpec,
     Payload,
+    PendingExchange,
     SendInfo,
     make_exchange,
+    route_bucketize,
     route_dispatch,
     take_from,
 )
@@ -29,11 +31,13 @@ __all__ = [
     "ExchangeSpec",
     "LocalBackend",
     "Payload",
+    "PendingExchange",
     "RaggedBackend",
     "SendInfo",
     "backend_name",
     "make_exchange",
     "resolve_backend",
+    "route_bucketize",
     "route_dispatch",
     "take_from",
 ]

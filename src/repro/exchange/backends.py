@@ -1,8 +1,16 @@
 """Exchange backends: the *how* of a routed exchange.
 
-An :class:`ExchangeBackend` implements the four verbs of the plane —
-``bucketize`` / ``all_to_all`` / ``backhaul`` / ``cost`` — against one
-:class:`~repro.exchange.spec.ExchangeSpec`.  Three transports ship:
+An :class:`ExchangeBackend` implements the verbs of the plane —
+``bucketize`` / ``a2a_start`` / ``a2a_finish`` / ``backhaul`` / ``cost`` —
+against one :class:`~repro.exchange.spec.ExchangeSpec`.  The collective is
+split-phase: ``a2a_start`` runs everything the *control plane* needs (for
+the ragged transport that is the phase-1 count all-to-all plus the traffic
+accounting; for dense it is only the statically-known accounting) and
+``a2a_finish`` moves the payload rows.  ``all_to_all`` is defined as the
+composition ``a2a_finish(a2a_start(buffers))`` — bit-identical to the
+fused call by construction — so drivers may hold the started exchange
+in flight and overlap the row ship with unrelated work.  Three transports
+ship:
 
 * :class:`DenseBackend` — the capacity-padded all-to-all: every lane is
   padded to ``spec.capacity`` and the collective moves the whole
@@ -59,7 +67,13 @@ __all__ = [
 
 @runtime_checkable
 class ExchangeBackend(Protocol):
-    """The four verbs every exchange transport implements."""
+    """The verbs every exchange transport implements.
+
+    ``all_to_all`` must equal ``a2a_finish(a2a_start(buffers))`` bit for
+    bit; after ``a2a_start`` every control-plane output (``shipped_rows``,
+    ``lane_counts``, ``recv_counts``) is final — ``a2a_finish`` only moves
+    payload rows and stamps the received-validity mask.
+    """
 
     name: str
 
@@ -73,6 +87,10 @@ class ExchangeBackend(Protocol):
         counts: jax.Array | None = None,
     ) -> ExchangeResult: ...
 
+    def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult: ...
+
+    def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult: ...
+
     def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult: ...
 
     def backhaul(
@@ -82,7 +100,7 @@ class ExchangeBackend(Protocol):
         *,
         send_counts: jax.Array | None = None,
         recv_counts: jax.Array | None = None,
-    ) -> tuple[jax.Array, jax.Array]: ...
+    ) -> tuple[jax.Array, jax.Array, jax.Array]: ...
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float: ...
@@ -220,7 +238,14 @@ class DenseBackend:
     def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
         return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
 
-    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+    def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        """No count phase to run — only stamp the (statically known) traffic
+        so control-plane reads never have to wait for the row ship."""
+        if spec.axis is None:
+            return buffers
+        return buffers._replace(shipped_rows=jnp.asarray(spec.rows, jnp.int32))
+
+    def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         """Exchange lane-major buffers across ``spec.axis`` (row j -> shard j)."""
         if spec.axis is None:
             return buffers
@@ -230,14 +255,23 @@ class DenseBackend:
             shipped_rows=jnp.asarray(spec.rows, jnp.int32),  # the whole pad
         )
 
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        return self.a2a_finish(self.a2a_start(spec, buffers))
+
     def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
                  send_counts: jax.Array | None = None,
-                 recv_counts: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+                 recv_counts: jax.Array | None = None,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Reverse collective for already-laned response buffers; ships the
-        whole pad back, whatever the counts say."""
+        whole pad back, whatever the counts say — but when counts *are*
+        supplied, the measured occupancy is reported alongside so telemetry
+        sees honest utilization even on the padded path."""
         if spec.axis is None:
-            return buffers, jnp.zeros((), jnp.int32)
-        return _a2a(buffers, spec.axis), jnp.asarray(spec.rows, jnp.int32)
+            z = jnp.zeros((), jnp.int32)
+            return buffers, z, z
+        occupied = (jnp.sum(send_counts).astype(jnp.int32) if send_counts is not None
+                    else jnp.asarray(spec.rows, jnp.int32))
+        return _a2a(buffers, spec.axis), jnp.asarray(spec.rows, jnp.int32), occupied
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float:
@@ -287,11 +321,14 @@ class RaggedBackend:
             valid=valid, payloads=payloads, recv_counts=recv_counts,
         )
 
-    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+    def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        """Phase 1: exchange per-lane occupancy (one int32 per lane) so every
+        receiver knows how many rows each peer actually sends.  Everything
+        the control plane reads — ``shipped_rows``, ``lane_counts``,
+        ``recv_counts`` — is final after this phase; the row ship in
+        :meth:`a2a_finish` can stay in flight."""
         if spec.axis is None:
             return buffers
-        # phase 1: exchange per-lane occupancy (one int32 per lane) so every
-        # receiver knows how many rows each peer actually sends
         counts = buffers.lane_counts
         if counts is None:  # bucketize had no dispatch counts to reuse
             counts = jnp.sum(buffers.valid, axis=1, dtype=jnp.int32)
@@ -300,15 +337,23 @@ class RaggedBackend:
         # the count phase itself, priced in bytes-normalized row units
         shipped = (jnp.sum(counts)
                    + _count_phase_rows(spec, buffers.payloads)).astype(jnp.int32)
-        return self._ship(
-            spec,
-            buffers._replace(shipped_rows=shipped, lane_counts=counts),
-            recv_counts,
+        return buffers._replace(
+            shipped_rows=shipped, lane_counts=counts, recv_counts=recv_counts,
         )
+
+    def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        """Phase 2: ship the compacted rows sized by the started counts."""
+        if spec.axis is None:
+            return buffers
+        return self._ship(spec, buffers, buffers.recv_counts)
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        return self.a2a_finish(self.a2a_start(spec, buffers))
 
     def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
                  send_counts: jax.Array | None = None,
-                 recv_counts: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+                 recv_counts: jax.Array | None = None,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Response rows ride the request lanes back.  With the forward
         hop's counts the return trip is ragged with *no second count phase*:
         this worker's response occupancy per lane is exactly what it
@@ -321,15 +366,17 @@ class RaggedBackend:
         them.
         """
         if spec.axis is None:
-            return buffers, jnp.zeros((), jnp.int32)
+            z = jnp.zeros((), jnp.int32)
+            return buffers, z, z
         if send_counts is None or recv_counts is None:
-            return _a2a(buffers, spec.axis), jnp.asarray(spec.rows, jnp.int32)
+            pad = jnp.asarray(spec.rows, jnp.int32)
+            return _a2a(buffers, spec.axis), pad, pad
         shipped = jnp.sum(send_counts).astype(jnp.int32)
         if _static_axis_size(spec.axis) == spec.num_lanes:
             rows, = _ragged_ship(spec, ((buffers, 0),), send_counts, recv_counts)
         else:
             rows = _a2a(buffers, spec.axis)
-        return rows, shipped
+        return rows, shipped, shipped
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float:
@@ -349,18 +396,27 @@ class LocalBackend:
     def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
         return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
 
-    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+    def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         assert spec.axis is None, (
             f"LocalBackend cannot cross mesh axis {spec.axis!r}; "
             "use the dense or ragged backend"
         )
         return buffers
 
+    def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        assert spec.axis is None, spec.axis
+        return buffers
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        return self.a2a_finish(self.a2a_start(spec, buffers))
+
     def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
                  send_counts: jax.Array | None = None,
-                 recv_counts: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+                 recv_counts: jax.Array | None = None,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
         assert spec.axis is None, spec.axis
-        return buffers, jnp.zeros((), jnp.int32)
+        z = jnp.zeros((), jnp.int32)
+        return buffers, z, z
 
     def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
              slack: float = 1.25) -> float:

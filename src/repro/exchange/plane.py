@@ -15,17 +15,31 @@ planning) layers on top and never touches collectives directly — and the
 backend's measured ``shipped_rows`` / ``cost`` feed the control plane, so
 policy decisions price what the active transport would actually move.
 
+The collective is **split-phase**: :meth:`Exchange.start` runs route +
+bucketize + the transport's control phase (the ragged count all-to-all) and
+returns an in-flight :class:`PendingExchange`; :meth:`Exchange.finish`
+ships the payload rows and yields the final :class:`ExchangeResult`.
+``Exchange.__call__`` is literally ``finish(start(...))`` — bit-identical
+by construction — and everything the control plane reads (loads, overflow,
+``shipped_rows``) is final at ``start``, so a driver can hold the pending
+exchange and overlap the row ship with the next batch's routing and with
+host-side policy decisions (see ``repro.core.streaming``).
+
 All functions are pure jnp and run inside ``jit`` / ``shard_map``.  The
 routing hot path has a fused Pallas kernel
-(``repro.kernels.lookup_dispatch``) with a bit-identical jnp twin; the twin
+(``repro.kernels.lookup_dispatch``, extended through bucketize by
+``repro.kernels.route_bucketize``) with a bit-identical jnp twin; the twin
 is the default off-TPU.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 
+import jax.numpy as jnp
+
+from repro.core.hashing import KEY_SENTINEL
 from repro.core.partitioner import PartitionerTables
 from repro.exchange.backends import ExchangeBackend, resolve_backend
 from repro.exchange.spec import (
@@ -43,10 +57,26 @@ __all__ = [
     "SendInfo",
     "ExchangeResult",
     "Exchange",
+    "PendingExchange",
     "make_exchange",
     "route_dispatch",
+    "route_bucketize",
     "take_from",
 ]
+
+
+class PendingExchange(NamedTuple):
+    """An exchange whose control phase ran but whose rows have not shipped.
+
+    ``buffers`` is the bucketized :class:`ExchangeResult` with every
+    control-plane field stamped by the backend's ``a2a_start`` —
+    ``shipped_rows``, ``lane_counts``, ``recv_counts``, and the full
+    ``send`` accounting are final and safe to consume; ``valid`` /
+    ``payloads`` still hold the *send*-side buffers until
+    :meth:`Exchange.finish` moves them.
+    """
+
+    buffers: ExchangeResult
 
 
 def route_dispatch(
@@ -85,6 +115,69 @@ def route_dispatch(
     return part, slot, counts
 
 
+def route_bucketize(
+    exchange: "Exchange",
+    tables: PartitionerTables,
+    keys: jax.Array,
+    valid: jax.Array,
+    vals: jax.Array,
+    *,
+    num_hosts: int,
+    seed: int,
+    key_fill: int = KEY_SENTINEL,
+    use_pallas: bool | None = None,
+):
+    """Fused route -> bucketize for the shuffle's ``(keys, vals, part)``
+    payload triple.
+
+    Returns ``(part, buffers)`` — the per-record partition ids plus a
+    bucketized :class:`~repro.exchange.spec.ExchangeResult` ready for the
+    collective.  On TPU the whole key -> partition -> lane -> slot ->
+    send-buffer chain runs in one Pallas kernel
+    (``repro.kernels.route_bucketize``) so the routed block never leaves
+    VMEM between the route and the scatter; elsewhere it is
+    :func:`route_dispatch` + ``bucketize`` — bit-identical by the kernel's
+    ref-twin contract.
+    """
+    spec = exchange.spec
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        from repro.kernels import ops
+
+        part, slot, counts, buf_valid, bk, bv, bp = ops.route_bucketize(
+            keys, valid, tables, vals,
+            num_hosts=num_hosts, seed=seed,
+            num_lanes=spec.num_lanes, capacity=spec.capacity, key_fill=key_fill,
+        )
+        lane = jnp.where(valid, part % spec.num_lanes, 0).astype(jnp.int32)
+        ok = valid & (slot >= 0) & (slot < spec.capacity)
+        # lanes are `part % L`, always in range: the capacity drops per lane
+        # (and their sum, the scalar) fall out of the dispatch counts — the
+        # same O(L) accounting the two-pass `_bucketize` counts path uses
+        lane_overflow = jnp.maximum(counts - spec.capacity, 0).astype(jnp.int32)
+        overflow = jnp.sum(lane_overflow).astype(jnp.int32)
+        buffers = ExchangeResult(
+            buf_valid, (bk, bv, bp),
+            SendInfo(lane, slot, ok, overflow, lane_overflow),
+            shipped_rows=jnp.zeros((), jnp.int32),
+            lane_counts=jnp.minimum(counts, spec.capacity).astype(jnp.int32),
+            fills=(key_fill, 0, 0),
+        )
+    else:
+        part, slot, counts = route_dispatch(
+            tables, keys, valid, num_hosts=num_hosts, seed=seed,
+            num_lanes=spec.num_lanes, use_pallas=False,
+        )
+        dest = jnp.where(valid, part, 0)
+        buffers = exchange.bucketize(
+            dest % spec.num_lanes, valid,
+            [Payload(keys, key_fill), Payload(vals, 0), Payload(dest, 0)],
+            slot=slot, counts=counts,
+        )
+    return part, buffers
+
+
 class Exchange:
     """One :class:`ExchangeSpec` bound to one :class:`ExchangeBackend`.
 
@@ -113,26 +206,58 @@ class Exchange:
             self.spec, lane, valid, payloads, slot=slot, counts=counts
         )
 
-    # -- step 3: the collective -------------------------------------------
+    # -- step 3: the collective (split-phase) ------------------------------
+    def start(
+        self,
+        lane: jax.Array,
+        valid: jax.Array,
+        payloads: Sequence[Payload],
+        slot: jax.Array | None = None,
+        counts: jax.Array | None = None,
+    ) -> PendingExchange:
+        """Bucketize + run the transport's control phase; rows stay local.
+
+        Every control-plane output (``send`` accounting, ``shipped_rows``,
+        ``lane_counts``, ``recv_counts``) is final on the returned
+        :class:`PendingExchange`; :meth:`finish` ships the payload rows.
+        ``finish(start(...))`` is bit-identical to calling the exchange.
+        """
+        return self.start_from(self.bucketize(lane, valid, payloads, slot=slot, counts=counts))
+
+    def start_from(self, buffers: ExchangeResult) -> PendingExchange:
+        """Start the collective from already-bucketized buffers (the fused
+        route path hands these in directly)."""
+        return PendingExchange(self.backend.a2a_start(self.spec, buffers))
+
+    def finish(self, pending: PendingExchange) -> ExchangeResult:
+        """Ship the payload rows of a started exchange."""
+        return self.backend.a2a_finish(self.spec, pending.buffers)
+
     def all_to_all(self, buffers: ExchangeResult) -> ExchangeResult:
         return self.backend.all_to_all(self.spec, buffers)
 
     def backhaul(
         self, buffers: jax.Array, forward: ExchangeResult | None = None
-    ) -> tuple[jax.Array, jax.Array]:
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Reverse collective for already-laned response buffers.
 
         ``forward`` is the exchanged result of the request hop; when it
         carries counts (the ragged transport's phase 1) the response ships
         compacted rows with no second count phase — the response occupancy
         *is* the forward ``recv_counts``, and what comes back is the forward
-        ``lane_counts``.  Returns ``(rows, shipped_rows)``: the response
-        buffers plus the rows this worker's transport measured moving, so
-        request-response consumers (the MoE combine) account both
-        directions.
+        ``lane_counts``.  Returns ``(rows, shipped_rows, occupied_rows)``:
+        the response buffers, the rows this worker's transport measured
+        moving, and the rows actually live in the shipped lanes (on the
+        dense path shipped is the full pad while occupied tracks the counts
+        — the honest utilization for ``Telemetry.record_exchange``).
         """
         send_counts = forward.recv_counts if forward is not None else None
         recv_counts = forward.lane_counts if forward is not None else None
+        if send_counts is None and forward is not None:
+            # a dense forward hop never ran a count phase, but its exchanged
+            # valid mask is the same information: rows live in each received
+            # lane — enough for the backhaul to report counted occupancy
+            send_counts = jnp.sum(forward.valid, axis=-1).astype(jnp.int32)
         return self.backend.backhaul(
             self.spec, buffers, send_counts=send_counts, recv_counts=recv_counts
         )
@@ -146,9 +271,10 @@ class Exchange:
         slot: jax.Array | None = None,
         counts: jax.Array | None = None,
     ) -> ExchangeResult:
-        return self.all_to_all(
-            self.bucketize(lane, valid, payloads, slot=slot, counts=counts)
-        )
+        # the fused call IS the split-phase pipeline run back to back —
+        # bit-identity between the serial and overlapped drivers holds by
+        # construction, not by parallel implementations
+        return self.finish(self.start(lane, valid, payloads, slot=slot, counts=counts))
 
 
 def make_exchange(

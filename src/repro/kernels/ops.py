@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.kernels.dispatch_count import BLK as DISPATCH_BLK, dispatch_count
 from repro.kernels.lookup_dispatch import BLK as ROUTE_BLK, lookup_dispatch
 from repro.kernels.partition_apply import KEY_LANES, KEY_ROWS, partition_apply
+from repro.kernels.route_bucketize import route_bucketize as _route_bucketize_kernel
 from repro.kernels.sketch_update import sketch_update
 
 _PART_BLK = KEY_LANES * KEY_ROWS
@@ -70,6 +71,52 @@ def route_slots(keys: jax.Array, valid: jax.Array, tables, *, num_hosts: int,
         seed=seed, num_hosts=num_hosts, num_lanes=num_lanes, interpret=_interpret(),
     )
     return part[:n], slot[:n], counts
+
+
+def route_bucketize(keys: jax.Array, valid: jax.Array, tables, vals: jax.Array, *,
+                    num_hosts: int, seed: int = 0, num_lanes: int, capacity: int,
+                    key_fill: int, interpret: bool | None = None):
+    """Fused route + slot + bucketize (the split-phase exchange's start path).
+
+    Returns ``(part[n], slot[n], counts[L], buf_valid[L, cap] bool,
+    buf_keys[L, cap] int32, buf_vals[L, cap, D] f32, buf_part[L, cap]
+    int32)`` — the shuffle's three send buffers built in one kernel pass,
+    bit-identical to ``route_slots`` + the plane's scatter.  The kernel
+    emits raw f32 channels (int32 split into 16-bit halves for f32-matmul
+    exactness); this wrapper recombines them and applies the fills.
+    """
+    if interpret is None:
+        interpret = _interpret()
+    k, n = _pad_to(keys.astype(jnp.int32), ROUTE_BLK)
+    v, _ = _pad_to(valid.astype(jnp.int32), ROUTE_BLK)
+    w, _ = _pad_to(vals.astype(jnp.float32), ROUTE_BLK)
+    b = tables.heavy_keys.shape[0]
+    # an empty heavy table still needs one tile of (sentinel) rows for the
+    # kernel's fixed block shape; sentinel keys only match invalid records,
+    # whose part is masked by every consumer
+    bpad = KEY_LANES if b == 0 else (-b) % KEY_LANES
+    hk = jnp.concatenate([tables.heavy_keys, jnp.full(bpad, 2**31 - 1, jnp.int32)]) if bpad else tables.heavy_keys
+    hp = jnp.concatenate([tables.heavy_parts, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_parts
+    # scatter into a lane-tile-aligned buffer; the overflow columns the ref
+    # drops land in the pad and are sliced away below
+    cap_p = int(-(-capacity // 128) * 128)
+    part, slot, counts, bvalid, bkhi, bklo, bphi, bplo, bvals = _route_bucketize_kernel(
+        k, v.astype(bool), w, hk, hp, tables.host_to_part,
+        seed=seed, num_hosts=num_hosts, num_lanes=num_lanes, capacity=cap_p,
+        interpret=interpret,
+    )
+    buf_valid = bvalid[:, :capacity] > 0.0
+
+    def _combine(hi, lo):
+        u = (hi[:, :capacity].astype(jnp.uint32) << jnp.uint32(16)) | \
+            lo[:, :capacity].astype(jnp.uint32)
+        return u.astype(jnp.int32)
+
+    buf_keys = jnp.where(buf_valid, _combine(bkhi, bklo), key_fill)
+    buf_part = jnp.where(buf_valid, _combine(bphi, bplo), 0)
+    buf_vals = jnp.where(buf_valid[:, :, None],
+                         jnp.moveaxis(bvals, 0, -1)[:, :capacity], 0.0)
+    return part[:n], slot[:n], counts, buf_valid, buf_keys, buf_vals, buf_part
 
 
 def dispatch_slots(dest: jax.Array, valid: jax.Array | None = None, *, num_parts: int):

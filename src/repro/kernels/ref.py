@@ -48,6 +48,29 @@ def lookup_dispatch_ref(keys, valid, heavy_keys, heavy_parts, host_to_part, *,
     return part, slot, counts
 
 
+def route_bucketize_ref(keys, valid, vals, heavy_keys, heavy_parts, host_to_part, *,
+                        seed=0, num_hosts=4096, num_lanes, capacity, key_fill):
+    """Fused twin of ``kernels.route_bucketize``: route + slot + scatter into
+    the ``[L, capacity]`` send buffers, bit-identical to the kernel (and to
+    ``route_dispatch`` + the exchange plane's ``_bucketize``)."""
+    part, slot, counts = lookup_dispatch_ref(
+        keys, valid, heavy_keys, heavy_parts, host_to_part,
+        seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
+    )
+    lane = jnp.where(valid, part % num_lanes, 0).astype(jnp.int32)
+    ok = valid & (slot >= 0) & (slot < capacity)
+    s = jnp.where(ok, slot, capacity)  # out-of-range column: dropped scatter
+    shape = (num_lanes, capacity)
+    buf_valid = jnp.zeros(shape, bool).at[lane, s].set(ok, mode="drop")
+    buf_keys = (jnp.full(shape, key_fill, jnp.int32)
+                .at[lane, s].set(keys.astype(jnp.int32), mode="drop"))
+    buf_part = (jnp.zeros(shape, jnp.int32)
+                .at[lane, s].set(jnp.where(valid, part, 0), mode="drop"))
+    buf_vals = (jnp.zeros(shape + vals.shape[1:], vals.dtype)
+                .at[lane, s].set(vals, mode="drop"))
+    return part, slot, counts, buf_valid, buf_keys, buf_vals, buf_part
+
+
 def dispatch_count_ref(dest, valid, *, num_parts):
     dest = dest.astype(jnp.int32)
     onehot = jax.nn.one_hot(dest, num_parts, dtype=jnp.float32) * valid[:, None].astype(jnp.float32)

@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: fused partition lookup + slot assignment + bucketize.
+
+``lookup_dispatch`` fused the route (key -> partition) with the slot rank
+(destination -> stable send slot) but still returned per-record vectors
+that a jnp scatter re-read from HBM to build the ``[L, capacity]`` send
+buffers.  This kernel extends the chain through the scatter: the
+key -> partition -> lane -> slot -> send-buffer path never leaves VMEM, so
+the records make one trip instead of a materialize + re-read of the whole
+batch between the route kernel and ``_bucketize``.
+
+The scatter itself is a matmul (MXU, no serial stores): for a block of
+``blk`` records with one-hot lane matrix ``O_lane [blk, L]`` (valid-masked)
+and one-hot slot matrix ``O_slot [blk, cap]``, each scalar channel ``w``
+lands as::
+
+    buffer[l, c] += sum_r  O_lane[r, l] * w[r] * O_slot[r, c]
+                 =  ((O_lane * w[:, None]).T @ O_slot)[l, c]
+
+Slot ranks are globally unique within a lane (``dispatch_count``'s
+invariant), so every ``(l, c)`` entry receives at most one nonzero term
+across the whole grid — the f32 accumulation is exact, and rows whose slot
+falls outside ``[0, cap)`` (capacity overflow, invalid records) match no
+one-hot column and drop out, exactly like the jnp scatter's
+``mode="drop"``.
+
+int32 channels (keys, partition ids) cannot ride f32 matmuls directly
+(f32 is exact only to 2**24), so they are split into 16-bit halves
+(``x >> 16`` / ``x & 0xFFFF``, each < 65536, exact in f32) and recombined
+outside the kernel.  Payload values are f32 and ride as-is: the product
+``w * 1.0`` and the single-term sum are exact.
+
+VMEM budget per grid step (block = 256, H = 4096, B <= 1024, L <= 16,
+capP <= 2048): route stages ~6.3 MiB (as ``lookup_dispatch``); slot one-hot
+256*2048*4B = 2.0 MiB; per-channel accumulators 5 * 16*2048*4B = 0.6 MiB
+=> ~9 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lookup_dispatch import BLK, LANES, ROWS, _fmix32
+
+
+def _kernel(
+    keys_ref, valid_ref, vals_ref, heavy_keys_ref, heavy_parts_ref, host_ref,
+    part_ref, slot_ref, counts_ref,
+    bvalid_ref, bkhi_ref, bklo_ref, bphi_ref, bplo_ref, bvals_ref,
+    *, seed: int, num_hosts: int, num_lanes: int, capacity: int,
+):
+    keys = keys_ref[...].reshape(BLK)
+    valid = valid_ref[...].reshape(BLK).astype(jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        bvalid_ref[...] = jnp.zeros_like(bvalid_ref)
+        bkhi_ref[...] = jnp.zeros_like(bkhi_ref)
+        bklo_ref[...] = jnp.zeros_like(bklo_ref)
+        bphi_ref[...] = jnp.zeros_like(bphi_ref)
+        bplo_ref[...] = jnp.zeros_like(bplo_ref)
+        bvals_ref[...] = jnp.zeros_like(bvals_ref)
+
+    # ---- stage 1: key -> partition (one-hot matmul lookup) ----
+    mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
+    host = (mixed & jnp.uint32(num_hosts - 1)).astype(jnp.int32)
+    host_iota = jax.lax.broadcasted_iota(jnp.int32, (BLK, num_hosts), 1)
+    onehot_host = (host[:, None] == host_iota).astype(jnp.float32)
+    table = host_ref[...].reshape(num_hosts).astype(jnp.float32)
+    part_tail = jax.lax.dot_general(
+        onehot_host, table[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+    hk = heavy_keys_ref[...].reshape(-1)
+    hp = heavy_parts_ref[...].reshape(-1).astype(jnp.float32)
+    eq = (keys[:, None] == hk[None, :]).astype(jnp.float32)
+    hit = jnp.sum(eq, axis=1) > 0.0
+    part_heavy = jax.lax.dot_general(
+        eq, hp[:, None], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0]
+    part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
+    part_ref[...] = part.reshape(ROWS, LANES)
+
+    # ---- stage 2: lane rank (triangular prefix matmul, fused in VMEM) ----
+    lane = jax.lax.rem(part, jnp.int32(num_lanes))
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (BLK, num_lanes), 1)
+    onehot = (lane[:, None] == lane_iota).astype(jnp.float32) * valid[:, None]
+
+    r = jax.lax.broadcasted_iota(jnp.int32, (BLK, BLK), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (BLK, BLK), 1)
+    tri = (c < r).astype(jnp.float32)  # strictly lower triangular
+    prefix = jax.lax.dot_general(
+        tri, onehot, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    running = counts_ref[...]  # [1, L] counts from earlier blocks
+    base = jnp.sum(onehot * running, axis=1)
+    rank = jnp.sum(onehot * prefix, axis=1)
+    slot = (base + rank).astype(jnp.int32)
+    slot = jnp.where(valid > 0, slot, -1)
+    slot_ref[...] = slot.reshape(ROWS, LANES)
+    counts_ref[...] = running + jnp.sum(onehot, axis=0, keepdims=True)
+
+    # ---- stage 3: scatter into the send buffers (matmul, still in VMEM) --
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (BLK, capacity), 1)
+    onehot_slot = (slot[:, None] == slot_iota).astype(jnp.float32)
+
+    def scat(w):  # [blk] channel -> [L, cap] contribution of this block
+        return jax.lax.dot_general(
+            onehot * w[:, None], onehot_slot, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    keys_u = keys.astype(jnp.uint32)
+    part_u = part.astype(jnp.uint32)
+    bvalid_ref[...] += scat(jnp.ones(BLK, jnp.float32))
+    bkhi_ref[...] += scat((keys_u >> jnp.uint32(16)).astype(jnp.float32))
+    bklo_ref[...] += scat((keys_u & jnp.uint32(0xFFFF)).astype(jnp.float32))
+    bphi_ref[...] += scat((part_u >> jnp.uint32(16)).astype(jnp.float32))
+    bplo_ref[...] += scat((part_u & jnp.uint32(0xFFFF)).astype(jnp.float32))
+    for d in range(vals_ref.shape[1]):
+        bvals_ref[d] += scat(vals_ref[:, d])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "seed", "num_hosts", "num_lanes", "capacity", "interpret"))
+def route_bucketize(
+    keys: jax.Array,  # int32[n], n % 256 == 0
+    valid: jax.Array,  # bool[n]
+    vals: jax.Array,  # f32[n, D]
+    heavy_keys: jax.Array,  # int32[B] sorted, sentinel padded
+    heavy_parts: jax.Array,  # int32[B]
+    host_to_part: jax.Array,  # int32[H], H a power of two
+    *,
+    seed: int = 0,
+    num_hosts: int = 4096,
+    num_lanes: int,
+    capacity: int,
+    interpret: bool = True,
+):
+    """Returns ``(part[n], slot[n], counts[L], bvalid[L, cap],
+    bkhi/bklo/bphi/bplo [L, cap], bvals[D, L, cap])`` — raw f32 channel
+    buffers; ``repro.kernels.ops.route_bucketize`` recombines the 16-bit
+    halves and applies fills."""
+    n = keys.shape[0]
+    assert n % BLK == 0, f"pad records to a multiple of {BLK}"
+    assert num_hosts & (num_hosts - 1) == 0, "H must be a power of two"
+    b = heavy_keys.shape[0]
+    d = vals.shape[1]
+    keys2d = keys.reshape(n // LANES, LANES)
+    valid2d = valid.astype(jnp.int32).reshape(n // LANES, LANES)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, seed=seed, num_hosts=num_hosts,
+                          num_lanes=num_lanes, capacity=capacity),
+        grid=(n // BLK,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLK, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_lanes), lambda i: (0, 0)),
+            pl.BlockSpec((num_lanes, capacity), lambda i: (0, 0)),
+            pl.BlockSpec((num_lanes, capacity), lambda i: (0, 0)),
+            pl.BlockSpec((num_lanes, capacity), lambda i: (0, 0)),
+            pl.BlockSpec((num_lanes, capacity), lambda i: (0, 0)),
+            pl.BlockSpec((num_lanes, capacity), lambda i: (0, 0)),
+            pl.BlockSpec((d, num_lanes, capacity), lambda i: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // LANES, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((n // LANES, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_lanes), jnp.float32),
+            jax.ShapeDtypeStruct((num_lanes, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((num_lanes, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((num_lanes, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((num_lanes, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((num_lanes, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((d, num_lanes, capacity), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys2d, valid2d, vals, heavy_keys[None, :], heavy_parts[None, :],
+      host_to_part[None, :])
+    part, slot, counts, bvalid, bkhi, bklo, bphi, bplo, bvals = out
+    return (part.reshape(n), slot.reshape(n), counts[0].astype(jnp.int32),
+            bvalid, bkhi, bklo, bphi, bplo, bvals)

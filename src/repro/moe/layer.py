@@ -50,6 +50,11 @@ class MoEOut(NamedTuple):
     # directions (forward ship + combine backhaul), summed over shards;
     # None on paths with no cross-shard exchange (oracle, replicated decode)
     shipped_rows: Array = None  # int32[]
+    # rows actually live in the exchanged lanes, both directions — the
+    # backend-independent occupancy (what a ragged transport would ship;
+    # under dense, shipped is the pad while this tracks the real load).
+    # Feed it to ``Telemetry.record_exchange(occupied_rows=)``.
+    occupied_rows: Array = None  # int32[]
 
 
 def init_moe(key, d: int, spec: MoESpec, ffn_kind: str, dtype) -> dict:
@@ -179,7 +184,7 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
         # backhaul ragged with no second count phase (dense forward: the
         # return trip ships the pad, exactly as before).
         back = take_from(eout, res2.send).reshape(ntp, c1, d)
-        ret, back_shipped = ship.backhaul(back, forward=res1)
+        ret, back_shipped, back_occupied = ship.backhaul(back, forward=res1)
         val = take_from(ret, res1.send)
         y = jnp.zeros((tn, d), cd).at[rec_tok].add(val * rec_w[:, None].astype(cd))
 
@@ -193,23 +198,28 @@ def moe_apply(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,
         counts = jax.lax.psum(counts, all_axes)
         overflow = jax.lax.psum(overflow, all_axes)
         aux = jax.lax.pmean(_aux_loss(probs, ids, e), all_axes)
-        # both directions of measured traffic: forward ship + combine backhaul
+        # both directions of measured traffic: forward ship + combine
+        # backhaul; occupied is the backend-independent live-row count
+        # (forward: records that landed a slot; return: the backhaul's
+        # counted occupancy) — honest even on the dense path
         shipped = jax.lax.psum(res1.shipped_rows + back_shipped, all_axes)
-        return y.reshape(b_l, s_l, d), counts, overflow, aux, shipped
+        fwd_occupied = jnp.asarray(tn * k, jnp.int32) - res1.send.overflow
+        occupied = jax.lax.psum(fwd_occupied + back_occupied, all_axes)
+        return y.reshape(b_l, s_l, d), counts, overflow, aux, shipped, occupied
 
     dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     mapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(tp), P(tp), P(), P(), P(dp_spec, tp, None)),
-        out_specs=(P(dp_spec, tp, None), P(), P(), P(), P()),
+        out_specs=(P(dp_spec, tp, None), P(), P(), P(), P(), P()),
         check_vma=False,
     )
     shared = p.get("shared")
-    y, counts, overflow, aux, shipped = mapped(
+    y, counts, overflow, aux, shipped, occupied = mapped(
         p["router"], p["wi"], p["wo"], shared, inv_place, x
     )
-    return MoEOut(y, counts, overflow, aux, shipped)
+    return MoEOut(y, counts, overflow, aux, shipped, occupied)
 
 
 def moe_apply_replicated(p: dict, x: Array, spec: MoESpec, ffn_kind: str, pol: Policy,

@@ -282,18 +282,18 @@ def _run_roundtrip(backend, lane, valid, vals, num_lanes, capacity):
     def body(lane, valid, vals):
         res = ex(lane, valid, [Payload(vals, -1.0)])
         resp = jnp.where(res.valid, res.payloads[0] * 2.0 + 1.0, 0.0)
-        ret, back_shipped = ex.backhaul(resp, forward=res)
+        ret, back_shipped, back_occupied = ex.backhaul(resp, forward=res)
         out = take_from(ret, res.send)
-        return out, res.shipped_rows + back_shipped
+        return out, res.shipped_rows + back_shipped, back_occupied
 
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(P("data"), P("data"), P("data")),
-        out_specs=(P("data"), P()),
+        out_specs=(P("data"), P(), P()),
         check_vma=False,
     )
-    out, shipped = mapped(lane, valid, vals)
-    return np.asarray(out), int(shipped)
+    out, shipped, occupied = mapped(lane, valid, vals)
+    return np.asarray(out), int(shipped), int(occupied)
 
 
 @pytest.mark.parametrize("skew", ["uniform", "hot"])
@@ -326,6 +326,9 @@ def test_backhaul_bit_identical_across_backends(skew):
     assert out["dense"][1] == 2 * num_lanes * capacity
     assert out["ragged"][1] == (rows + num_lanes) + rows  # fwd + backhaul
     assert out["ragged"][1] < out["dense"][1]
+    # occupancy is backend-independent: with forward counts threaded the
+    # dense backhaul reports the same counted rows the ragged one ships
+    assert out["dense"][2] == out["ragged"][2] == rows
 
 
 def test_ragged_backhaul_without_forward_counts_ships_dense():
@@ -343,7 +346,7 @@ def test_ragged_backhaul_without_forward_counts_ships_dense():
 
     def body(lane, valid, vals):
         res = ex(lane, valid, [Payload(vals, 0.0)])
-        ret, shipped = ex.backhaul(res.payloads[0])  # no forward threaded
+        ret, shipped, _occ = ex.backhaul(res.payloads[0])  # no forward threaded
         return take_from(ret, res.send), shipped
 
     mapped = shard_map(
@@ -401,6 +404,93 @@ def test_local_backend_refuses_mesh_axis():
                        [Payload(jnp.zeros(3), 0)])
     with pytest.raises(AssertionError):
         ex.all_to_all(res)
+
+
+# ---------------------------------------------------------------------------
+# split-phase pipeline: start() + finish() == the fused call, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _run_split_vs_fused(backend, lane, valid, vals, num_lanes, capacity):
+    """Run the fused call and the start/finish pipeline side by side under
+    one shard_map, returning both unpacked results + control accounting."""
+    mesh = jax.make_mesh((1,), ("data",))
+    ex = make_exchange(
+        ExchangeSpec(num_lanes=num_lanes, capacity=capacity, axis="data"), backend
+    )
+
+    def body(lane, valid, vals):
+        fused = ex(lane, valid, [Payload(vals, -1.0)])
+        pending = ex.start(lane, valid, [Payload(vals, -1.0)])
+        # every control output is already final on the in-flight value
+        started = pending.buffers
+        split = ex.finish(pending)
+        return (
+            fused.valid[None], fused.payloads[0][None], fused.shipped_rows,
+            fused.send.overflow, fused.send.lane_overflow,
+            split.valid[None], split.payloads[0][None], split.shipped_rows,
+            started.shipped_rows, started.send.overflow,
+            started.send.lane_overflow,
+        )
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P(), P(), P(),
+                   P("data"), P("data"), P(), P(), P(), P()),
+        check_vma=False,
+    )
+    return mapped(lane, valid, vals)
+
+
+@pytest.mark.parametrize("backend", ["dense", "ragged"])
+@pytest.mark.parametrize("skew", ["uniform", "hot"])
+def test_split_phase_bit_identical_to_fused(backend, skew):
+    """start() + finish() must reproduce the fused exchange exactly —
+    including the overflow scalar, the per-lane overflow vector, and the
+    measured shipped_rows, all of which are final at start (the hot skew
+    overflows lane 0, exercising the accounting under drops)."""
+    rng = np.random.default_rng(21)
+    n, num_lanes, capacity = 192, 4, 32  # hot skew overflows lane 0
+    lane = (np.zeros(n, np.int32) if skew == "hot"
+            else rng.integers(0, num_lanes, n).astype(np.int32))
+    valid = rng.random(n) < 0.85
+    vals = rng.normal(size=(n,)).astype(np.float32)
+    (f_va, f_v, f_ship, f_ov, f_lov,
+     s_va, s_v, s_ship, p_ship, p_ov, p_lov) = _run_split_vs_fused(
+        backend, jnp.asarray(lane), jnp.asarray(valid), jnp.asarray(vals),
+        num_lanes, capacity)
+    np.testing.assert_array_equal(np.asarray(f_va), np.asarray(s_va))
+    np.testing.assert_array_equal(np.asarray(f_v), np.asarray(s_v))
+    assert int(f_ship) == int(s_ship) == int(p_ship)
+    assert int(f_ov) == int(p_ov)
+    np.testing.assert_array_equal(np.asarray(f_lov), np.asarray(p_lov))
+    if skew == "hot":
+        assert int(f_ov) > 0  # the accounting was actually exercised
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=256),
+    num_lanes=st.integers(min_value=1, max_value=8),
+    capacity=st.sampled_from([1, 4, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_split_phase_local_bit_identical(n, num_lanes, capacity, seed):
+    """The axis-free local backend: start/finish is the identity pipeline
+    around bucketize — random shapes, including overflowing ones."""
+    rng = np.random.default_rng(seed)
+    lane, valid, vals, _ = _random_input(rng, n, num_lanes)
+    ex = make_exchange(ExchangeSpec(num_lanes=num_lanes, capacity=capacity))
+    fused = ex(lane, valid, [Payload(vals, 0.0)])
+    split = ex.finish(ex.start(lane, valid, [Payload(vals, 0.0)]))
+    np.testing.assert_array_equal(np.asarray(fused.valid), np.asarray(split.valid))
+    for g, w in zip(split.payloads, fused.payloads):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert int(fused.send.overflow) == int(split.send.overflow)
+    np.testing.assert_array_equal(
+        np.asarray(fused.send.lane_overflow), np.asarray(split.send.lane_overflow)
+    )
 
 
 # ---------------------------------------------------------------------------

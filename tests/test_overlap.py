@@ -1,0 +1,138 @@
+"""Split-phase overlap: the pipelined StreamingJob is bit-identical to the
+serial one.
+
+The overlapped driver enqueues batch N's start phase, then batch N-1's
+in-flight row ship + merge behind it, and blocks only on start outputs; the
+serial driver runs the fused step.  Because the fused step is literally the
+two phases traced back to back and every decision input comes out of the
+start phase, the two drivers must produce identical trajectories — same
+actions, same reasons, same overflow/shipped accounting, same final keyed
+state — differing only in wall-clock attribution (``exchange_wall_s``,
+``state_rows`` freshness).
+"""
+import numpy as np
+import pytest
+
+from repro.control import Telemetry
+from repro.core.drm import DRConfig
+from repro.core.streaming import StreamingJob
+
+
+def _skewed_batches(num_batches=10, n=384, seed=0):
+    """Zipf-ish stream: keeps the imbalance trigger firing."""
+    rng = np.random.default_rng(seed)
+    return [(rng.zipf(1.5, n) % 200).astype(np.int64) for _ in range(num_batches)]
+
+
+def _run_job(overlap: bool, batches, **cfg_kw):
+    cfg = DRConfig(imbalance_trigger=1.1, migration_cost_weight=0.1,
+                   overlap_exchange=overlap, **cfg_kw)
+    job = StreamingJob(num_partitions=8, state_capacity=2048, payload_dim=2,
+                       dr=cfg, seed=0)
+    ms = job.run(batches)
+    return job, ms
+
+
+def _trajectory(ms):
+    return [(m.action, m.reason, m.repartitioned, m.resized, m.overflow,
+             m.shipped_rows, m.padded_rows, m.backend, round(m.imbalance, 9),
+             m.num_partitions) for m in ms]
+
+
+def test_overlap_matches_serial_trajectory():
+    batches = _skewed_batches()
+    job_s, ms_s = _run_job(False, batches)
+    job_o, ms_o = _run_job(True, batches)
+    assert not any(m.overlapped for m in ms_s)
+    assert all(m.overlapped for m in ms_o)
+    assert _trajectory(ms_s) == _trajectory(ms_o)
+    # the stream is skewed enough that state actually moved (the split
+    # migrate path ran under overlap)
+    assert any(m.repartitioned for m in ms_o)
+    # identical final keyed state (state_count drains the in-flight merge)
+    for key in range(0, 200, 13):
+        assert job_o.state_count(key) == job_s.state_count(key)
+
+
+def test_overlap_matches_serial_through_resize():
+    """An explicit elastic resize at a safe point: the drain-before-action
+    protocol keeps the cross-size migration identical to serial."""
+    batches = _skewed_batches(num_batches=6)
+    out = {}
+    for overlap in (False, True):
+        cfg = DRConfig(imbalance_trigger=10.0, overlap_exchange=overlap)
+        job = StreamingJob(num_partitions=8, state_capacity=2048,
+                           dr=cfg, seed=0)
+        ms = [job.process_batch(batches[0]), job.process_batch(batches[1])]
+        job.resize(16)
+        ms += [job.process_batch(b) for b in batches[2:]]
+        out[overlap] = (job, ms)
+    ms_s, ms_o = out[False][1], out[True][1]
+    assert _trajectory(ms_s) == _trajectory(ms_o)
+    assert any(m.resized for m in ms_o)
+    assert ms_o[-1].num_partitions == 16
+    for key in range(0, 200, 13):
+        assert out[True][0].state_count(key) == out[False][0].state_count(key)
+
+
+def test_env_escape_hatch_forces_serial(monkeypatch):
+    monkeypatch.setenv("REPRO_DISABLE_OVERLAP", "1")
+    job, ms = _run_job(True, _skewed_batches(num_batches=3))
+    assert not any(m.overlapped for m in ms)
+
+
+def test_snapshot_mid_stream_drains_inflight():
+    """A snapshot between batches must capture the in-flight merge: restore
+    into a fresh job and the state matches the serial run exactly."""
+    batches = _skewed_batches(num_batches=5)
+    job_s, _ = _run_job(False, batches)
+    job_o, _ = _run_job(True, batches)
+    snap = job_o.snapshot()  # drains the pending finish
+    job2 = StreamingJob(num_partitions=8, state_capacity=2048, payload_dim=2,
+                        dr=DRConfig(overlap_exchange=True), seed=0)
+    job2.restore(snap)
+    for key in range(0, 200, 13):
+        assert job2.state_count(key) == job_s.state_count(key)
+
+
+def test_overlapped_batches_report_phase_walls():
+    """Overlapped batches attribute wall to phases: the count wall is the
+    batch's blocking exchange wall, and once a drain happens (an action
+    fires) the window that follows carries hidden + ship walls, surfacing
+    a nonzero overlap_fraction."""
+    job, ms = _run_job(True, _skewed_batches())
+    assert any(m.repartitioned for m in ms)  # at least one drain happened
+    t = job.telemetry
+    # window accumulators since the last safe point + the long-lived EWMA
+    assert t.wall_ewma.get("dense", 0.0) > 0.0
+    sig = t.snapshot(loads=np.ones(8), num_workers=1)
+    assert sig.exchange_count_wall_s >= 0.0
+
+
+def test_overlap_fraction_signal():
+    """Unit-level: hidden / (hidden + ship), 0.0 when nothing was recorded
+    (serial windows) and when only the fused wall was recorded."""
+    t = Telemetry("test")
+    sig = t.snapshot(loads=np.ones(2))
+    assert sig.overlap_fraction == 0.0
+    t.record_exchange(10, 0.5)  # fused serial record: no phases
+    sig = t.snapshot(loads=np.ones(2))
+    assert sig.overlap_fraction == 0.0
+    t.record_exchange(10, 0.2, count_wall_s=0.2)
+    t.record_exchange(0, padded_rows=0, ship_wall_s=0.1, hidden_wall_s=0.3)
+    sig = t.snapshot(loads=np.ones(2))
+    assert sig.exchange_count_wall_s == pytest.approx(0.2)
+    assert sig.exchange_ship_wall_s == pytest.approx(0.1)
+    assert sig.exchange_hidden_wall_s == pytest.approx(0.3)
+    assert sig.overlap_fraction == pytest.approx(0.75)
+
+
+def test_backend_wall_ewma_accumulates_across_windows():
+    t = Telemetry("test")
+    t.record_exchange(10, 0.4, backend="dense")
+    t.snapshot(loads=np.ones(2))  # window reset must not clear the EWMA
+    t.record_exchange(10, 0.2, backend="dense")
+    t.record_exchange(10, 0.1, backend="ragged")
+    sig = t.snapshot(loads=np.ones(2))
+    assert sig.backend_wall_ewma["dense"] == pytest.approx(0.7 * 0.4 + 0.3 * 0.2)
+    assert sig.backend_wall_ewma["ragged"] == pytest.approx(0.1)
