@@ -22,7 +22,14 @@ grow 4->8 and a shrink 8->4, next to the plain migration rows) and the
 control plane under *nonstationary* drift: a sudden hotspot flip, and a
 sawtooth-skew workload with the resize-cooldown oscillation guard off vs.
 on.  Every scenario row carries the decision log's taken/declined counts
-(``fig6/decisions_*`` rows are the counts themselves)."""
+(``fig6/decisions_*`` rows are the counts themselves).
+
+The hot-key scenario (``fig6/split_decisions/*``) drives one key past a
+worker's entire fair share — the regime where no repartition or resize can
+balance (moving the key just moves the straggler).  The split profile must
+reach imbalance <= the grow trigger while the no-split control stays above
+it, and both must agree bit-for-bit on every key's aggregate (the split
+run's scattered partials sum to the unsplit answer)."""
 from __future__ import annotations
 
 import time
@@ -151,6 +158,7 @@ def run(batches: int = 6, batch_size: int = 16_384):
     rows.extend(_resize_cost(8, 4, batch_size, state_capacity))
     rows.extend(_nonstationary(batches, batch_size, state_capacity))
     rows.extend(_auto_backend(batches, batch_size, state_capacity))
+    rows.extend(_hot_key(batches, batch_size, state_capacity))
     return rows
 
 
@@ -315,6 +323,61 @@ def _auto_backend(batches: int, batch_size: int, state_capacity: int):
          "shipped/provisioned after the flip (dense = 1)"),
     ]
     rows.extend(_decision_rows("auto_backend", job))
+    return rows
+
+
+def _hot_key(batches: int, batch_size: int, state_capacity: int):
+    """Hot-key splitting: one key carries ~40% of the stream — ~3.2 fair
+    worker budgets on 8 partitions, so per-partition imbalance is pinned
+    near ``share * N`` however the keys are binned.  With
+    ``split_keys_enabled`` the SplitPolicy replicates the key (d = ceil of
+    its budget share), the route kernels fan its records out, and the
+    measured imbalance must drop under the elastic grow trigger — the load
+    a resize would otherwise chase without ever balancing.  The no-split
+    control (same stream, same DR otherwise) must stay above the trigger,
+    and both runs must agree exactly on every key's aggregate: the split
+    run's scattered partial aggregates sum to the unsplit answer."""
+    ticks = max(10, 2 * batches)
+    rng = np.random.default_rng(17)
+    stream = []
+    for _ in range(ticks):
+        ks = rng.integers(100, 4100, size=batch_size).astype(np.int64)
+        ks[rng.random(batch_size) < 0.40] = 7
+        stream.append(ks)
+    rows, jobs = [], {}
+    tail_window = max(3, ticks // 3)  # post-split regime (split fires early)
+    for tag, enabled in (("control", False), ("split", True)):
+        job = StreamingJob(
+            num_partitions=8,
+            state_capacity=state_capacity,
+            dr=DRConfig(split_keys_enabled=enabled, split_patience=1,
+                        imbalance_trigger=1.15, migration_cost_weight=0.2),
+        )
+        ms = job.run(stream)
+        jobs[tag] = (job, ms)
+        tail = float(np.mean([m.imbalance for m in ms[-tail_window:]]))
+        splits = sum(1 for m in ms if m.action in ("split", "unsplit"))
+        rows.append((f"fig6/split_decisions/{tag}", splits,
+                     f"split/unsplit actions taken ({max(m.split_keys for m in ms)}"
+                     " keys replicated at peak)"))
+        rows.append((f"fig6/split_imbalance/{tag}", tail,
+                     f"mean measured imbalance, last {tail_window} batches"))
+        rows.extend(_decision_rows(f"hot_key_{tag}", job))
+    grow = jobs["split"][0].drm.config.grow_trigger
+    tail = {tag: float(np.mean([m.imbalance for m in ms[-tail_window:]]))
+            for tag, (_, ms) in jobs.items()}
+    # acceptance: splitting balances what nothing else can — the split run
+    # settles under the grow trigger, the control stays pinned above it
+    assert jobs["split"][1][-1].split_keys >= 1, "the hot key never split"
+    assert tail["split"] <= grow, tail
+    assert tail["control"] > grow, tail
+    # exactness: the scattered partials sum to the unsplit reference on
+    # every sampled key (the combiner-side merge is a sum, bit-exact here)
+    sample = np.unique(np.concatenate(stream))[::64]
+    for key in sample:
+        got = {tag: job.state_count(int(key)) for tag, (job, _) in jobs.items()}
+        if len(set(got.values())) != 1:
+            raise AssertionError(f"split count mismatch at key={int(key)}: {got}")
     return rows
 
 

@@ -10,11 +10,12 @@ gain.  This package is where every such decision lives:
   normal work.
 * :mod:`repro.control.actions` — the typed decisions a policy can return:
   :class:`NoOp`, :class:`Repartition`, :class:`Resize`, :class:`Replace`,
-  :class:`SwitchBackend`.
+  :class:`SwitchBackend`, :class:`Split`, :class:`Unsplit`.
 * :mod:`repro.control.policy` — composable policy objects
   (:class:`RepartitionPolicy`, :class:`ResizePolicy`,
-  :class:`PlacementPolicy`, :class:`BackendPolicy`) sharing one
-  exchange-lane cost model and one :class:`CooldownGuard` hysteresis rule.
+  :class:`PlacementPolicy`, :class:`BackendPolicy`, :class:`SplitPolicy`)
+  sharing one exchange-lane cost model and one :class:`CooldownGuard`
+  hysteresis rule.
 * :mod:`repro.control.log` — the :class:`DecisionLog` recording every
   decision, including declined ones, with reasons.
 
@@ -27,7 +28,9 @@ from repro.control.actions import (
     Repartition,
     Replace,
     Resize,
+    Split,
     SwitchBackend,
+    Unsplit,
 )
 from repro.control.log import Decision, DecisionLog
 from repro.control.policy import (
@@ -36,6 +39,7 @@ from repro.control.policy import (
     PlacementPolicy,
     RepartitionPolicy,
     ResizePolicy,
+    SplitPolicy,
 )
 from repro.control.signals import Signals, Telemetry
 
@@ -53,6 +57,9 @@ __all__ = [
     "Resize",
     "ResizePolicy",
     "Signals",
+    "Split",
+    "SplitPolicy",
     "SwitchBackend",
     "Telemetry",
+    "Unsplit",
 ]

@@ -13,7 +13,16 @@ from typing import ClassVar
 
 from repro.core.partitioner import Partitioner
 
-__all__ = ["Action", "NoOp", "Repartition", "Resize", "Replace", "SwitchBackend"]
+__all__ = [
+    "Action",
+    "NoOp",
+    "Repartition",
+    "Resize",
+    "Replace",
+    "SwitchBackend",
+    "Split",
+    "Unsplit",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +95,43 @@ class Replace(Action):
     planned_imbalance: float = 0.0
     est_migration: float = 0.0     # expert-weight bytes through the exchange
     kind: ClassVar[str] = "replace"
+
+
+@dataclasses.dataclass(frozen=True)
+class Split(Action):
+    """Replicate one hot key over ``replicas`` consecutive partitions
+    starting at its ``home`` — the Partial-Key-Grouping move for a key whose
+    load alone exceeds what one worker sustains (isolation can only *move*
+    it; splitting *shrinks* it).
+
+    Install-only: the DRM stamps the replica table
+    (``Partitioner.with_splits``) and the route kernels start fanning the
+    key out; no state moves.  The scattered partial aggregates stay correct
+    because the keyed reduce is a sum and every later migration routes by
+    *home*, converging and merging the partials there."""
+
+    key: int = 0
+    replicas: int = 2
+    home: int = 0
+    top_share: float = 0.0         # the key's share of one worker's load
+    est_relief: float = 0.0        # load (worker units) the split sheds
+    est_migration: float = 0.0     # priced merge-backhaul lane cost
+    kind: ClassVar[str] = "split"
+    moves_state: ClassVar[bool] = False  # table stamp only; no rows migrate
+
+
+@dataclasses.dataclass(frozen=True)
+class Unsplit(Action):
+    """Collapse a cooled-down split key back to its home partition.
+
+    Executing it *is* a state migration off ``prev`` (the partitioner that
+    still carried the split): the home route pulls every replica's partial
+    rows back to the key's home, where ``merge_into`` sums them — the
+    combiner-side merge riding the ordinary backhaul path."""
+
+    key: int = 0
+    prev: Partitioner = None
+    kind: ClassVar[str] = "unsplit"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,6 +20,20 @@ Mapping onto the paper's §4 decision rules:
 * :class:`PlacementPolicy` — §4 for experts: shard-load imbalance from
   router statistics triggers a KIP re-placement, with the same cooldown
   guard (``min_steps_between``) spacing weight migrations.
+* :class:`SplitPolicy` — Partial-Key-Grouping as a control-plane action:
+  when the *single hottest* key's share of the load exceeds one worker's
+  fair budget (``split_trigger``), no repartition can help — isolation can
+  only *move* the key, splitting *shrinks* it.  The policy replicates the
+  key over ``d`` consecutive partitions (the route kernels fan records out
+  by a per-record hash) and prices the move like every other action: the
+  load relief ``share * (1 - 1/d)`` must pay for the merge-backhaul lane
+  cost (:func:`~repro.core.migration.exchange_lane_cost` on the replica ->
+  home transfer the eventual combiner-side merge ships).  A cooled-down
+  key is collapsed back (``unsplit_trigger``; the gap to ``split_trigger``
+  is the dead zone) through an ordinary home-routed migration whose
+  ``merge_into`` sums the scattered partials.  Patience streak +
+  :class:`CooldownGuard` (``split_cooldown``) give the same hysteresis as
+  the resize/backend policies.
 * :class:`BackendPolicy` — the transport as an actuator: when the measured
   ``exchange_padding_fraction`` (occupied / provisioned rows) stays low, a
   dense job is shipping padding the ragged count-first transport would
@@ -45,11 +59,13 @@ from repro.control.actions import (
     Repartition,
     Replace,
     Resize,
+    Split,
     SwitchBackend,
+    Unsplit,
 )
 from repro.control.signals import Signals
-from repro.core.migration import exchange_lane_cost, plan_migration
-from repro.core.partitioner import expected_loads, kip_update
+from repro.core.migration import MigrationPlan, exchange_lane_cost, plan_migration
+from repro.core.partitioner import expected_loads, heavy_capacity_for, kip_update
 
 __all__ = [
     "CooldownGuard",
@@ -57,6 +73,7 @@ __all__ = [
     "ResizePolicy",
     "PlacementPolicy",
     "BackendPolicy",
+    "SplitPolicy",
 ]
 
 
@@ -100,8 +117,8 @@ class RepartitionPolicy:
             return NoOp("balanced", measured, measured, 0.0)
 
         # fixed heavy-table width => stable jit signatures across swaps
-        cap = max(host.partitioner.heavy_keys.shape[0],
-                  int(np.ceil(cfg.lam * n / 128.0) * 128))
+        cap = heavy_capacity_for(cfg.lam, n,
+                                 floor=host.partitioner.heavy_keys.shape[0])
         candidate = kip_update(host.partitioner, hist, eps=cfg.eps,
                                heavy_capacity=cap, tight=cfg.tight)
         planned = expected_loads(candidate, hist)
@@ -192,6 +209,101 @@ class ResizePolicy:
         if imb <= cfg.shrink_trigger or low_throughput:
             return NoOp("at-floor", imb, imb)
         return NoOp("dead-zone", imb, imb)
+
+
+class SplitPolicy:
+    """Hot-key splitting / un-splitting over the DRM sketch (see module doc).
+
+    Streak state lives on the host (``split_streak``, ``last_split``, and
+    the installed ``split_keys`` replica map) so snapshots carry it.  The
+    policy only *decides*; the host stamps the replica table
+    (``Partitioner.with_splits``) on a taken :class:`Split`, and the driver
+    executes a taken :class:`Unsplit` as a home-routed state migration
+    whose ``merge_into`` is the combiner-side merge.
+    """
+
+    def evaluate(self, host, signals: Signals) -> Action:
+        cfg = host.config
+        imb = signals.imbalance
+        if not cfg.split_keys_enabled:
+            return NoOp("split-disabled", imb, imb)
+        n = host.partitioner.num_partitions
+        hist = host.sketch.histogram(top_b=int(cfg.lam * n))
+        if len(hist) == 0:
+            return NoOp("split-no-histogram", imb, imb)
+        splits = host.split_keys
+        guard = CooldownGuard(cfg.split_cooldown)
+        # share = a key's load in fair-worker-budget units: freq * N is 1.0
+        # when the key fills exactly one partition's even share
+        share = {int(k): float(f) * n for k, f in zip(hist.keys, hist.freqs)}
+
+        # unsplit first: a cooled-down key collapses (freeing its replicas
+        # and merging its partials) before any new split may fire
+        for k in sorted(splits):
+            if share.get(k, 0.0) < cfg.unsplit_trigger:
+                host.split_streak += 1
+                if host.split_streak < cfg.split_patience:
+                    return NoOp(
+                        f"split-patience {host.split_streak}/{cfg.split_patience}",
+                        imb, imb)
+                if not guard.ready(host.batches_seen, host.last_split):
+                    return NoOp("split-cooldown", imb, imb)
+                return Unsplit(
+                    reason=(f"unsplit key {k} (share {share.get(k, 0.0):.2f} < "
+                            f"{cfg.unsplit_trigger})"),
+                    key=k, prev=host.partitioner)
+
+        # split: the hottest not-yet-split key whose load alone exceeds one
+        # worker's budget — beyond this point moving the key cannot balance
+        top_key, top_share = None, 0.0
+        for k, f in zip(hist.keys, hist.freqs):
+            if int(k) not in splits:
+                top_key, top_share = int(k), float(f) * n
+                break
+        if top_key is None or top_share <= cfg.split_trigger or n < 2:
+            host.split_streak = 0
+            return NoOp(f"split-dead-zone {top_share:.2f}", imb, imb)
+        host.split_streak += 1
+        if host.split_streak < cfg.split_patience:
+            return NoOp(f"split-patience {host.split_streak}/{cfg.split_patience}",
+                        imb, imb)
+        if not guard.ready(host.batches_seen, host.last_split):
+            return NoOp("split-cooldown", imb, imb)
+        # enough replicas to bring the key's per-replica share under budget
+        d = int(min(max(2, int(np.ceil(top_share))), cfg.split_max_replicas, n))
+        home = int(host.partitioner.lookup_np(
+            np.asarray([top_key], np.int32))[0])
+        # price the move like every other action: the relief (load shed off
+        # the home worker) must pay for the merge backhaul the split commits
+        # to — each replica eventually ships its partial aggregate home, a
+        # replica -> home transfer of f/d mass, costed by the active
+        # transport's sizing rule exactly like a repartition plan
+        f = top_share / n
+        transfer = np.zeros((n, n))
+        repls = (home + np.arange(1, d)) % n
+        np.add.at(transfer, (repls, np.full(d - 1, home)), f / d)
+        plan = MigrationPlan(
+            keys=np.full(d - 1, top_key, np.int64),
+            src=repls.astype(np.int32),
+            dst=np.full(d - 1, home, np.int32),
+            weights=np.full(d - 1, f / d),
+            transfer=transfer,
+            relative_migration=0.0,
+            num_src=n, num_dst=n,
+        )
+        est = exchange_lane_cost(plan, num_workers=signals.num_workers,
+                                 backend=getattr(host, "exchange_backend", None))
+        relief = top_share * (1.0 - 1.0 / d)
+        cost = cfg.migration_cost_weight * est
+        if relief <= cost:
+            return NoOp(f"split relief {relief:.3f} <= cost {cost:.3f}",
+                        imb, imb, est)
+        return Split(
+            reason=(f"split key {top_key} x{d} (share {top_share:.2f} > "
+                    f"{cfg.split_trigger})"),
+            key=top_key, replicas=d, home=home,
+            top_share=top_share, est_relief=relief, est_migration=est,
+        )
 
 
 class BackendPolicy:

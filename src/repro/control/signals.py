@@ -15,10 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import numpy as np
 
 from repro.core.migration import fold_to_workers
+from repro.exchange.spec import ExchangeStats
 
 __all__ = ["Signals", "Telemetry"]
 
@@ -63,6 +65,9 @@ class Signals:
                                            # window-reset) — the BackendPolicy's
                                            # measured-wall evidence
     lane_overflow: np.ndarray | None = None  # int64[L] capacity drops per lane
+    exchange_replica_rows: np.ndarray | None = None  # int64[N] rows landed per
+                                           # partition from *split* hot keys
+                                           # this window (None: nothing split)
     queue_depths: np.ndarray | None = None # serving replica queue depths
     state_rows: int = 0                    # live keyed-state rows (migration scale)
     at_safe_point: bool = True             # decisions may act only when True
@@ -172,6 +177,7 @@ class Telemetry:
         self._ship_wall_s = 0.0
         self._hidden_wall_s = 0.0
         self._lane_overflow: np.ndarray | None = None
+        self._replica_rows: np.ndarray | None = None
         self._queues: np.ndarray | None = None
         # the window clock starts at the first recording, not at reset:
         # setup/idle time between construction (or a checkpoint) and the
@@ -187,68 +193,91 @@ class Telemetry:
         self._touch()
         self._records += float(records)
 
-    def record_exchange(
-        self,
-        rows: int,
-        wall_s: float = 0.0,
-        *,
-        padded_rows: int | None = None,
-        occupied_rows: int | None = None,
-        lane_overflow: np.ndarray | None = None,
-        count_wall_s: float | None = None,
-        ship_wall_s: float | None = None,
-        hidden_wall_s: float | None = None,
-        backend: str | None = None,
-    ) -> None:
-        """Exchange-lane accounting for one call: ``rows`` the backend
-        shipped (its measured ``shipped_rows``, per worker), ``padded_rows``
-        the spec provisioned (``ExchangeSpec.rows``; defaults to ``rows``
-        for a dense transport, where the two coincide), ``occupied_rows``
-        the rows actually live in the buffers (backend-independent — what a
-        ragged transport would ship; defaults to ``rows``), the wall time
-        the exchange path took, and the per-lane overflow vector so
-        ``Signals`` can localize which lane filled up.
+    @staticmethod
+    def _fold_vector(acc: np.ndarray | None, v) -> np.ndarray:
+        """Accumulate a per-lane/per-partition vector across the window; a
+        width change mid-window (elastic resize) folds both onto the wider
+        vector so nothing is lost."""
+        v = np.asarray(v, np.int64)
+        if acc is None:
+            return v.copy()
+        if len(v) == len(acc):
+            return acc + v
+        w = max(len(v), len(acc))
+        out = np.zeros(w, np.int64)
+        out[: len(acc)] += acc
+        out[: len(v)] += v
+        return out
 
-        The split-phase driver additionally attributes the wall to phases:
-        ``count_wall_s`` blocking on the start phase, ``ship_wall_s``
-        blocking on a drained finish, ``hidden_wall_s`` host work that ran
-        while a finish was in flight.  ``backend`` names the transport the
-        call rode, feeding the long-lived per-backend wall EWMA
-        (``wall_ewma``) the BackendPolicy reads as measured evidence."""
+    def record_exchange(self, stats: ExchangeStats, wall_s=None, **legacy) -> None:
+        """Fold one exchange's :class:`ExchangeStats` into the window.
+
+        ``stats`` is constructed *by the exchange plane* —
+        ``ExchangeResult.stats()`` / ``PendingExchange.stats()`` for raw
+        exchanges, ``repro.core.shuffle.shuffle_stats`` /
+        ``migrate_stats`` for the mapped steps, ``MoEOut.exchange_stats()``
+        for expert dispatch — so consumers never assemble measurement
+        fields themselves and new fields (``replica_rows``) don't ripple
+        through every call site.
+
+        ``stats.backend`` (with a positive ``wall_s``) feeds the long-lived
+        per-backend wall EWMA (``wall_ewma``) the BackendPolicy reads as
+        measured evidence.
+
+        .. deprecated::
+            The historical keyword form ``record_exchange(rows, wall_s=...,
+            padded_rows=..., ...)`` still works for one release, raising a
+            :class:`DeprecationWarning`; the kwargs map 1:1 onto
+            :class:`ExchangeStats` fields.
+        """
+        if not isinstance(stats, ExchangeStats):
+            warnings.warn(
+                "Telemetry.record_exchange(rows, ...) with loose kwargs is "
+                "deprecated; pass one plane-constructed ExchangeStats "
+                "(ExchangeResult.stats(), shuffle_stats(), migrate_stats())",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            stats = ExchangeStats(
+                rows=int(stats), wall_s=float(wall_s or 0.0), **legacy
+            )
+        elif wall_s is not None or legacy:
+            raise TypeError(
+                "record_exchange(stats) takes no extra arguments — put the "
+                "measurements on the ExchangeStats record"
+            )
         self._touch()
-        self._exchange_rows += int(rows)
-        self._exchange_padded_rows += int(rows if padded_rows is None else padded_rows)
-        add = int(rows if occupied_rows is None else occupied_rows)
+        self._exchange_rows += int(stats.rows)
+        self._exchange_padded_rows += int(
+            stats.rows if stats.padded_rows is None else stats.padded_rows
+        )
+        add = int(stats.rows if stats.occupied_rows is None else stats.occupied_rows)
         self._exchange_occupied_rows = (
             add if self._exchange_occupied_rows is None
             else self._exchange_occupied_rows + add
         )
-        self._exchange_wall_s += float(wall_s)
-        if count_wall_s is not None:
-            self._count_wall_s += float(count_wall_s)
-        if ship_wall_s is not None:
-            self._ship_wall_s += float(ship_wall_s)
-        if hidden_wall_s is not None:
-            self._hidden_wall_s += float(hidden_wall_s)
-        if backend is not None and wall_s > 0.0:
-            prev = self.wall_ewma.get(backend)
-            self.wall_ewma[backend] = (
-                float(wall_s) if prev is None else 0.7 * prev + 0.3 * float(wall_s)
+        self._exchange_wall_s += float(stats.wall_s)
+        if stats.count_wall_s is not None:
+            self._count_wall_s += float(stats.count_wall_s)
+        if stats.ship_wall_s is not None:
+            self._ship_wall_s += float(stats.ship_wall_s)
+        if stats.hidden_wall_s is not None:
+            self._hidden_wall_s += float(stats.hidden_wall_s)
+        if stats.backend is not None and stats.wall_s > 0.0:
+            prev = self.wall_ewma.get(stats.backend)
+            self.wall_ewma[stats.backend] = (
+                float(stats.wall_s)
+                if prev is None
+                else 0.7 * prev + 0.3 * float(stats.wall_s)
             )
-        if lane_overflow is not None:
-            v = np.asarray(lane_overflow, np.int64)
-            if self._lane_overflow is None:
-                self._lane_overflow = v.copy()
-            elif len(v) == len(self._lane_overflow):
-                self._lane_overflow = self._lane_overflow + v
-            else:
-                # lane count changed mid-window (elastic resize): fold both
-                # onto the wider vector so no drop is lost
-                w = max(len(v), len(self._lane_overflow))
-                out = np.zeros(w, np.int64)
-                out[: len(self._lane_overflow)] += self._lane_overflow
-                out[: len(v)] += v
-                self._lane_overflow = out
+        if stats.lane_overflow is not None:
+            self._lane_overflow = self._fold_vector(
+                self._lane_overflow, stats.lane_overflow
+            )
+        if stats.replica_rows is not None:
+            self._replica_rows = self._fold_vector(
+                self._replica_rows, stats.replica_rows
+            )
 
     def record_overflow(self, shuffle: int = 0, migration: int = 0) -> None:
         self._touch()
@@ -285,6 +314,7 @@ class Telemetry:
             exchange_hidden_wall_s=self._hidden_wall_s,
             backend_wall_ewma=dict(self.wall_ewma) if self.wall_ewma else None,
             lane_overflow=self._lane_overflow,
+            exchange_replica_rows=self._replica_rows,
             queue_depths=self._queues,
             state_rows=int(state_rows),
             at_safe_point=at_safe_point,

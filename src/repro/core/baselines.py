@@ -31,7 +31,7 @@ def _tail_loads(prev: Partitioner, hist: Histogram, n: int) -> np.ndarray:
 
 def _build(prev: Partitioner, hist: Histogram, parts: np.ndarray, n: int) -> Partitioner:
     cap = max(len(hist), prev.heavy_keys.shape[0])
-    hk, hp = _pad_heavy(hist.keys.astype(np.int32), parts.astype(np.int32), cap)
+    hk, hp, _ = _pad_heavy(hist.keys.astype(np.int32), parts.astype(np.int32), cap)
     return Partitioner(n, hk, hp, prev.host_to_part.copy(), prev.seed)
 
 

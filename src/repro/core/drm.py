@@ -6,16 +6,20 @@ Lives in the launcher ("Driver") process.  Per safe point it:
    (EWMA over past histograms — drift-respecting),
 2. runs the policy stack over the window's :class:`~repro.control.Signals`
    (``evaluate``): the :class:`~repro.control.policy.ResizePolicy` first
-   (topology), then the :class:`~repro.control.policy.RepartitionPolicy`
+   (topology), then the :class:`~repro.control.policy.SplitPolicy`
+   (hot-key replication — Partial-Key-Grouping for a key one worker cannot
+   hold), then the :class:`~repro.control.policy.RepartitionPolicy`
    (contents — §4's gain-vs-migration-cost trigger, costed with real
-   exchange-lane accounting),
+   exchange-lane accounting), then the
+   :class:`~repro.control.policy.BackendPolicy` (transport),
 3. records every decision — including declined ones, with reasons — in the
    :class:`~repro.control.DecisionLog`, and hands taken actions back to the
    driver to execute at the safe point.
 
 The runtimes (``StreamingJob``, ``DRScheduler``) are thin drivers: they
-feed telemetry in and execute the returned typed actions.  ``decide`` and
-``decide_resize`` remain as single-policy wrappers over the same stack.
+feed telemetry in and execute the returned typed actions.  ``evaluate`` is
+the sole public decision API; ``decide`` and ``decide_resize`` are
+*deprecated* single-policy wrappers kept for pre-control-plane callers.
 """
 from __future__ import annotations
 
@@ -23,12 +27,29 @@ import dataclasses
 
 import numpy as np
 
-from repro.control.actions import Action, NoOp, Repartition, Resize, SwitchBackend
+from repro.control.actions import (
+    Action,
+    NoOp,
+    Repartition,
+    Resize,
+    Split,
+    SwitchBackend,
+    Unsplit,
+)
 from repro.control.log import DecisionLog
-from repro.control.policy import BackendPolicy, RepartitionPolicy, ResizePolicy
+from repro.control.policy import (
+    BackendPolicy,
+    RepartitionPolicy,
+    ResizePolicy,
+    SplitPolicy,
+)
 from repro.control.signals import Signals
 from repro.core.histogram import CounterSketch
-from repro.core.partitioner import Partitioner, resize_partitioner
+from repro.core.partitioner import (
+    Partitioner,
+    heavy_capacity_for,
+    resize_partitioner,
+)
 from repro.exchange.backends import resolve_backend
 
 __all__ = ["DRConfig", "DRMaster", "DRDecision"]
@@ -70,6 +91,16 @@ class DRConfig:
                                      # zone that stops threshold straddling)
     backend_patience: int = 2        # consecutive safe points before flipping
     backend_cooldown: int = 0        # min safe points between flips (0 = off)
+    # -- hot-key splitting (Partial-Key-Grouping as a control action) ------
+    split_keys_enabled: bool = False # let the SplitPolicy replicate hot keys
+    split_max_replicas: int = 8      # fan-out ceiling per split key
+    split_trigger: float = 1.3       # split when the top key's share alone
+                                     # exceeds this many worker fair budgets
+    unsplit_trigger: float = 0.8     # collapse a split key cooled below this
+                                     # (the gap to split_trigger is the dead
+                                     # zone that stops split/unsplit churn)
+    split_patience: int = 2          # consecutive safe points before acting
+    split_cooldown: int = 0          # min safe points between split actions
     # -- split-phase exchange overlap --------------------------------------
     overlap_exchange: bool = True    # issue batch N+1's route/count phase
                                      # before batch N's row ship drains
@@ -87,6 +118,12 @@ class DRConfig:
                 "backend auto-selection needs a threshold dead zone: "
                 f"backend_ragged_below {self.backend_ragged_below} >= "
                 f"backend_dense_above {self.backend_dense_above}"
+            )
+        if self.split_keys_enabled:
+            assert self.split_trigger > self.unsplit_trigger, (
+                "hot-key splitting needs a trigger-gap dead zone: "
+                f"split_trigger {self.split_trigger} <= "
+                f"unsplit_trigger {self.unsplit_trigger}"
             )
 
 
@@ -123,10 +160,17 @@ class DRMaster:
         # backend-actuator state: how long the padding fraction has sat
         # beyond the active transport's flip threshold
         self.backend_streak = 0
+        # hot-key splitting state: the installed replica map (key -> d),
+        # re-stamped onto every partitioner this master installs, plus the
+        # SplitPolicy's patience streak and cooldown stamp
+        self.split_keys: dict[int, int] = dict(initial.split_map())
+        self.split_streak = 0
+        self.last_split = -(10**9)
         # the policy stack this master hosts + its decision log
         self.repartition_policy = RepartitionPolicy()
         self.resize_policy = ResizePolicy()
         self.backend_policy = BackendPolicy()
+        self.split_policy = SplitPolicy()
         self.decisions = DecisionLog(consumer)
 
     # -- DRW ingestion ------------------------------------------------------
@@ -150,14 +194,26 @@ class DRMaster:
                  policies_enabled: bool = True) -> Action:
         """Run the policy stack over one safe point's signals.
 
+        **This is the one public decision API.**  Drivers feed a
+        :class:`~repro.control.Signals` record in and execute the returned
+        typed action; the single-policy wrappers :meth:`decide` and
+        :meth:`decide_resize` are deprecated compatibility shims over the
+        same stack and take no part in the safe-point protocol.
+
         Precedence mirrors the safe-point protocol: an explicit resize
         request wins (it is this safe point's decision), then the elastic
-        :class:`ResizePolicy`, then the :class:`RepartitionPolicy`.  A taken
-        repartition is installed here (partitioner swap + bookkeeping); a
-        taken resize is *returned* for the driver to execute via
-        :meth:`replan_resize` — state only moves in the driver.  Every
-        safe-point outcome lands in :attr:`decisions` (non-safe-point calls
-        are peeks, not decisions, and are not logged).
+        :class:`ResizePolicy` (topology), then the :class:`SplitPolicy`
+        (hot-key replication — a key one worker cannot hold must split
+        before a repartition wastes a migration shuffling it around), then
+        the :class:`RepartitionPolicy` (contents), then the
+        :class:`BackendPolicy` (transport).  A taken repartition or
+        split/unsplit is installed here (partitioner swap/re-stamp +
+        bookkeeping); a taken resize is *returned* for the driver to
+        execute via :meth:`replan_resize`, and a taken unsplit is likewise
+        returned so the driver runs the merging migration — state only
+        moves in the driver.  Every safe-point outcome lands in
+        :attr:`decisions` (non-safe-point calls are peeks, not decisions,
+        and are not logged).
         """
         n = self.partitioner.num_partitions
         detail: dict = {}
@@ -176,6 +232,12 @@ class DRMaster:
             if isinstance(action, NoOp):
                 if action.reason != "elastic-disabled":
                     detail["resize_declined"] = action.reason
+                action = self.split_policy.evaluate(self, signals)
+            if isinstance(action, (Split, Unsplit)):
+                self._install_split(action)
+            elif isinstance(action, NoOp):
+                if action.reason != "split-disabled":
+                    detail["split_declined"] = action.reason
                 action = self.repartition_policy.evaluate(self, signals)
                 if isinstance(action, Repartition):
                     self._install(action)
@@ -195,10 +257,41 @@ class DRMaster:
     def _install(self, action: Repartition) -> None:
         """Swap in a taken repartition at the safe point (DRM bookkeeping)."""
         self.partitioner = action.partitioner
+        if self.split_keys:
+            # kip_update plans over plain homes; installed splits survive a
+            # content swap — re-stamp the replica column onto the new tables
+            self.partitioner = self.partitioner.with_splits(self.split_keys)
         self.last_repartition = self.batches_seen
         d = DRDecision(True, action.partitioner, action.planned_imbalance,
                        action.measured_imbalance, action.est_migration, "repartition")
         self.history.append(dataclasses.asdict(d) | {"batch": self.batches_seen})
+
+    def _install_split(self, action: Split | Unsplit) -> None:
+        """Install a taken split/unsplit at the safe point (DRM bookkeeping).
+
+        Counts as this safe point's decision (advances ``batches_seen`` the
+        way a policy evaluation would) and re-stamps the replica table.  A
+        :class:`Split` is install-only — routing fans out from the next
+        batch, no state moves.  An :class:`Unsplit` removes the key here;
+        the *driver* runs the home-routed migration off ``action.prev``
+        that merges the scattered partials, so it stamps
+        ``last_repartition`` like any other state-moving install.
+        """
+        self.batches_seen += 1
+        if isinstance(action, Split):
+            self.split_keys[int(action.key)] = int(action.replicas)
+        else:
+            self.split_keys.pop(int(action.key), None)
+            self.last_repartition = self.batches_seen
+        self.partitioner = self.partitioner.with_splits(self.split_keys)
+        self.last_split = self.batches_seen
+        self.split_streak = 0
+        self.history.append({
+            "batch": self.batches_seen,
+            "split": (action.kind, int(action.key),
+                      int(getattr(action, "replicas", 1))),
+            "reason": action.reason,
+        })
 
     def _as_decision(self, action: Action) -> DRDecision:
         if isinstance(action, Repartition):
@@ -212,7 +305,13 @@ class DRMaster:
 
     # -- single-policy wrappers (the pre-control-plane API) ------------------
     def decide(self, loads: np.ndarray, state_rows: float = 0.0) -> DRDecision:
-        """Run only the repartition policy on measured per-partition loads."""
+        """Run only the repartition policy on measured per-partition loads.
+
+        .. deprecated:: Kept for callers predating the control plane.  Use
+           :meth:`evaluate` — the one safe-point decision API — with a
+           :class:`~repro.control.Signals` record; ``decide`` bypasses the
+           resize/split/backend policies and the explicit-request protocol.
+        """
         signals = Signals(loads=np.asarray(loads, np.float64),
                           state_rows=int(state_rows))
         action = self.repartition_policy.evaluate(self, signals)
@@ -224,7 +323,13 @@ class DRMaster:
 
     def decide_resize(self, loads: np.ndarray, *, num_workers: int = 1) -> int | None:
         """Run only the elastic resize policy; returns the new partition
-        count, or ``None`` to keep the topology."""
+        count, or ``None`` to keep the topology.
+
+        .. deprecated:: Kept for callers predating the control plane.  Use
+           :meth:`evaluate` and match on the returned
+           :class:`~repro.control.Resize` — this wrapper skips decision
+           logging and the rest of the policy stack.
+        """
         signals = Signals(loads=np.asarray(loads, np.float64),
                           num_workers=num_workers)
         action = self.resize_policy.evaluate(self, signals)
@@ -245,9 +350,15 @@ class DRMaster:
         n = int(num_partitions)
         self.sketch.rescale()
         hist = self.sketch.histogram(top_b=int(np.ceil(cfg.lam * n)))
-        heavy_cap = int(np.ceil(max(1.0, cfg.lam * n) / 128.0) * 128)
+        heavy_cap = heavy_capacity_for(cfg.lam, n)
         new = resize_partitioner(self.partitioner, n, hist, eps=cfg.eps,
                                  heavy_capacity=heavy_cap, tight=cfg.tight)
+        if self.split_keys:
+            # installed splits survive the resize; with_splits clamps each
+            # fan-out to the new partition count (a shrink may fold a d all
+            # the way to 1, dropping the key from the map)
+            new = new.with_splits(self.split_keys)
+            self.split_keys = dict(new.split_map())
         self.note_resize(new)
         return new
 
@@ -293,12 +404,21 @@ class DRMaster:
     # -- checkpoint integration ----------------------------------------------
     def snapshot(self) -> dict:
         p = self.partitioner
+        split_items = sorted(self.split_keys.items())
         return {
             "num_partitions": p.num_partitions,
             "heavy_keys": p.heavy_keys,
             "heavy_parts": p.heavy_parts,
             "host_to_part": p.host_to_part,
             "seed": p.seed,
+            # replica table + split-policy state ride the snapshot exactly
+            # like the partitioner tables they re-stamp
+            "heavy_repl": (p.heavy_repl if p.heavy_repl is not None
+                           else np.ones(p.heavy_keys.shape[0], np.int32)),
+            "split_keys": np.asarray([k for k, _ in split_items], np.int64),
+            "split_repl": np.asarray([d for _, d in split_items], np.int64),
+            "last_split": np.int64(self.last_split),
+            "split_streak": np.int64(self.split_streak),
             "sketch_keys": self.sketch._keys,
             "sketch_counts": self.sketch._counts,
             "sketch_floor": np.float64(self.sketch._floor),
@@ -323,6 +443,9 @@ class DRMaster:
             np.asarray(snap["heavy_parts"]),
             np.asarray(snap["host_to_part"]),
             int(snap["seed"]),
+            # legacy snapshots predate the replica table: None = no splits
+            heavy_repl=(np.asarray(snap["heavy_repl"], np.int32)
+                        if "heavy_repl" in snap else None),
         )
         drm = cls(p, config, consumer=str(snap.get("decisions_consumer", "stream")),
                   exchange_backend=str(snap["exchange_backend"])
@@ -340,6 +463,15 @@ class DRMaster:
         drm.shrink_streak = int(snap.get("shrink_streak", 0))
         drm.last_backend_switch = int(snap.get("last_backend_switch", -(10**9)))
         drm.backend_streak = int(snap.get("backend_streak", 0))
+        # split-policy state (the replica map itself was restored from the
+        # partitioner's heavy_repl column via __init__'s split_map seed)
+        if "split_keys" in snap:
+            drm.split_keys = dict(zip(
+                np.asarray(snap["split_keys"]).astype(int).tolist(),
+                np.asarray(snap["split_repl"]).astype(int).tolist(),
+            ))
+        drm.last_split = int(snap.get("last_split", -(10**9)))
+        drm.split_streak = int(snap.get("split_streak", 0))
         # decision history (older snapshots predate the log — empty is fine)
         if "decisions_tick" in snap:
             drm.decisions = DecisionLog.from_arrays(snap)

@@ -7,6 +7,15 @@ per-record lookup is fully vectorized (and has a Pallas kernel twin in
 * ``heavy_keys``  int32[B]  sorted ascending, padded with ``KEY_SENTINEL``
 * ``heavy_parts`` int32[B]  explicit partition of each heavy key
 * ``host_to_part`` int32[H] weighted-hash routing: key -> host -> partition
+* ``heavy_repl``  int32[B]  replica count per heavy key (1 = no split; pad
+  rows carry 0 so both route twins clamp them to a no-op choice)
+
+A heavy key with ``heavy_repl[b] = d > 1`` is *split*: records route to one
+of the d consecutive partitions ``(heavy_parts[b] + choice) % N`` where
+``choice`` is a per-record hash — the Partial-Key-Grouping move for keys
+too hot for any single worker.  State merges back at ``heavy_parts[b]``
+(the home) through the ordinary migration path, which routes by
+:meth:`Partitioner.lookup_np` and therefore ignores replicas.
 
 ``kip_update`` implements Algorithm 1 (KIPUPDATE) from the paper: heavy keys
 try (1) their previous partition, (2) their plain-hash location, (3) the
@@ -31,6 +40,8 @@ __all__ = [
     "uniform_partitioner",
     "kip_update",
     "resize_partitioner",
+    "heavy_capacity_for",
+    "split_replica_rows",
 ]
 
 
@@ -40,6 +51,7 @@ class PartitionerTables(NamedTuple):
     heavy_keys: jax.Array  # int32[B] sorted, padded with KEY_SENTINEL
     heavy_parts: jax.Array  # int32[B]
     host_to_part: jax.Array  # int32[H]
+    heavy_repl: jax.Array  # int32[B] replicas per heavy key (pad rows: 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +63,7 @@ class Partitioner:
     heavy_parts: np.ndarray  # int32[B]
     host_to_part: np.ndarray  # int32[H]
     seed: int = 0
+    heavy_repl: np.ndarray | None = None  # int32[B] replicas (None = all 1)
 
     @property
     def num_hosts(self) -> int:
@@ -61,10 +74,18 @@ class Partitioner:
         return int((self.heavy_keys != KEY_SENTINEL).sum())
 
     def tables(self) -> PartitionerTables:
+        live = self.heavy_keys != KEY_SENTINEL
+        if self.heavy_repl is None:
+            repl = live.astype(np.int32)
+        else:
+            # live rows clamp to >= 1; pad rows stay 0 so a sentinel match in
+            # the kernel's eq-matmul sums to 0 -> choice 0 on both twins
+            repl = np.where(live, np.maximum(self.heavy_repl, 1), 0).astype(np.int32)
         return PartitionerTables(
             jnp.asarray(self.heavy_keys),
             jnp.asarray(self.heavy_parts),
             jnp.asarray(self.host_to_part),
+            jnp.asarray(repl),
         )
 
     # -- lookups ----------------------------------------------------------
@@ -84,6 +105,49 @@ class Partitioner:
         m = self.heavy_keys != KEY_SENTINEL
         return dict(zip(self.heavy_keys[m].tolist(), self.heavy_parts[m].tolist()))
 
+    # -- hot-key splitting ------------------------------------------------
+    def split_map(self) -> dict[int, int]:
+        """``{key: replicas}`` for every key currently split (repl > 1)."""
+        if self.heavy_repl is None:
+            return {}
+        m = (self.heavy_keys != KEY_SENTINEL) & (self.heavy_repl > 1)
+        return dict(zip(self.heavy_keys[m].tolist(), self.heavy_repl[m].tolist()))
+
+    def with_splits(self, split_map: dict[int, int]) -> "Partitioner":
+        """Re-stamp the replica column from ``split_map``; every other key
+        drops back to one replica.
+
+        A split key missing from the heavy table is inserted at its current
+        :meth:`lookup_np` home (the table only grows — to the next
+        kernel-tile multiple — when the insertions overflow the current
+        width, so jit signatures stay stable across re-stamps)."""
+        live = self.heavy_keys != KEY_SENTINEL
+        keys = self.heavy_keys[live].astype(np.int32)
+        parts = self.heavy_parts[live].astype(np.int32)
+        repl = np.ones(len(keys), np.int32)
+        have = {int(k): i for i, k in enumerate(keys.tolist())}
+        extra_keys, extra_parts, extra_repl = [], [], []
+        for k, d in split_map.items():
+            d = int(min(max(int(d), 1), self.num_partitions))
+            if int(k) in have:
+                repl[have[int(k)]] = d
+            else:
+                home = int(self.lookup_np(np.asarray([k], np.int32))[0])
+                extra_keys.append(int(k))
+                extra_parts.append(home)
+                extra_repl.append(d)
+        if extra_keys:
+            keys = np.concatenate([keys, np.asarray(extra_keys, np.int32)])
+            parts = np.concatenate([parts, np.asarray(extra_parts, np.int32)])
+            repl = np.concatenate([repl, np.asarray(extra_repl, np.int32)])
+        cap = self.heavy_keys.shape[0]
+        if len(keys) > cap:
+            cap = heavy_capacity_for(0.0, self.num_partitions, floor=len(keys))
+        hk, hp, hr = _pad_heavy(keys, parts, cap, repl)
+        return dataclasses.replace(
+            self, heavy_keys=hk, heavy_parts=hp, heavy_repl=hr
+        )
+
 
 def lookup_device(tables: PartitionerTables, keys: jax.Array, num_hosts: int, seed: int = 0) -> jax.Array:
     """jnp twin of :meth:`Partitioner.lookup_np` (used inside jit)."""
@@ -97,15 +161,22 @@ def lookup_device(tables: PartitionerTables, keys: jax.Array, num_hosts: int, se
     return jnp.where(hit, tables.heavy_parts[idx], part).astype(jnp.int32)
 
 
-def _pad_heavy(keys: np.ndarray, parts: np.ndarray, capacity: int):
-    """Sort by key and sentinel-pad heavy tables to fixed width."""
+def _pad_heavy(keys: np.ndarray, parts: np.ndarray, capacity: int, repl=None):
+    """Sort by key and sentinel-pad heavy tables to fixed width.
+
+    ``repl`` (replicas per key) defaults to all-ones; its pad value is 0 —
+    the route twins clamp 0 to 1, and the kernel relies on pad rows summing
+    to 0 in its eq-matmul so sentinel records take replica choice 0."""
+    if repl is None:
+        repl = np.ones(len(keys), np.int32)
     order = np.argsort(keys, kind="stable")
-    keys, parts = keys[order], parts[order]
+    keys, parts, repl = keys[order], parts[order], np.asarray(repl)[order]
     pad = capacity - len(keys)
     assert pad >= 0, f"heavy table overflow: {len(keys)} > {capacity}"
     keys = np.concatenate([keys, np.full(pad, KEY_SENTINEL, np.int32)])
     parts = np.concatenate([parts, np.zeros(pad, np.int32)])
-    return keys.astype(np.int32), parts.astype(np.int32)
+    repl = np.concatenate([repl, np.zeros(pad, np.int32)])
+    return keys.astype(np.int32), parts.astype(np.int32), repl.astype(np.int32)
 
 
 def uniform_partitioner(
@@ -116,7 +187,7 @@ def uniform_partitioner(
 ) -> Partitioner:
     """UHP — the Spark/Flink default: hash(key) mod N (host table = h mod N)."""
     host_to_part = (np.arange(num_hosts, dtype=np.int64) % num_partitions).astype(np.int32)
-    hk, hp = _pad_heavy(np.zeros(0, np.int32), np.zeros(0, np.int32), heavy_capacity)
+    hk, hp, _ = _pad_heavy(np.zeros(0, np.int32), np.zeros(0, np.int32), heavy_capacity)
     return Partitioner(num_partitions, hk, hp, host_to_part, seed)
 
 
@@ -243,7 +314,9 @@ def kip_update(
                 load[p] -= hostload
                 load[q] += hostload
 
-    hk, hp = _pad_heavy(keys.astype(np.int32), heavy_parts, max(cap, b))
+    # a fresh plan carries no replica column: the DR master re-stamps its
+    # split set via ``with_splits`` after installing the new partitioner
+    hk, hp, _ = _pad_heavy(keys.astype(np.int32), heavy_parts, max(cap, b))
     return Partitioner(n, hk, hp, host_to_part.astype(np.int32), seed)
 
 
@@ -273,6 +346,62 @@ def resize_partitioner(
     return kip_update(
         prev, hist, num_partitions=n, eps=eps, heavy_capacity=heavy_capacity, tight=tight
     )
+
+
+def heavy_capacity_for(lam: float, num_partitions: int, *, floor: int = 0) -> int:
+    """Heavy-table width for tracking ``lam`` keys per partition, rounded up
+    to the route kernels' tile width (``KEY_LANES``).
+
+    The one shared rounding rule for every sizing site (streaming driver,
+    serve scheduler, elastic replan, repartition policy) — previously each
+    hand-inlined ``ceil(.../128)*128``.  ``floor`` lower-bounds the result
+    before rounding (e.g. the current table width, to keep jit signatures
+    stable)."""
+    from repro.kernels.partition_apply import KEY_LANES
+
+    want = max(int(np.ceil(lam * num_partitions)), int(floor), 1)
+    return int(-(-want // KEY_LANES) * KEY_LANES)
+
+
+def split_replica_rows(
+    partitioner: Partitioner,
+    keys: np.ndarray,
+    num_workers: int = 1,
+    valid: np.ndarray | None = None,
+) -> np.ndarray:
+    """Host twin of the fused kernels' replica pick: rows each partition
+    receives from *split* keys this batch (``int64[num_partitions]``).
+
+    Bit-identical to the device route: under ``shard_map`` worker ``i``
+    owns the contiguous chunk ``keys[i*local:(i+1)*local]`` and a record's
+    replica hash uses its *local* index in that chunk."""
+    from repro.core.hashing import fmix32
+
+    n = partitioner.num_partitions
+    out = np.zeros(n, np.int64)
+    smap = partitioner.split_map()
+    if not smap:
+        return out
+    keys = np.asarray(keys, np.int32).reshape(num_workers, -1)
+    local_n = keys.shape[1]
+    idx = np.broadcast_to(np.arange(local_n, dtype=np.int64), keys.shape)
+    golden = np.uint32(0x9E3779B9)
+    seedmix = np.uint32((partitioner.seed * 0x9E3779B9) & 0xFFFFFFFF)
+    mixed = fmix32(keys.astype(np.uint32) ^ seedmix, xp=np)
+    h = fmix32(idx.astype(np.uint32) * golden ^ mixed, xp=np)
+    choice31 = (h & np.uint32(0x7FFFFFFF)).astype(np.int32)
+    if valid is not None:
+        valid = np.asarray(valid, bool).reshape(keys.shape)
+    for k, d in smap.items():
+        m = keys == np.int32(k)
+        if valid is not None:
+            m &= valid
+        if not m.any():
+            continue
+        home = int(partitioner.lookup_np(np.asarray([k], np.int32))[0])
+        parts = (home + choice31[m] % np.int32(d)) % n
+        np.add.at(out, parts, 1)
+    return out
 
 
 # ---------------------------------------------------------------------------

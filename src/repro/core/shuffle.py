@@ -43,6 +43,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
@@ -53,6 +54,7 @@ from repro.exchange import (
     ExchangeBackend,
     ExchangeResult,
     ExchangeSpec,
+    ExchangeStats,
     Payload,
     PendingExchange,
     SendInfo,
@@ -61,7 +63,14 @@ from repro.exchange import (
     route_dispatch,
 )
 
-__all__ = ["ShuffleResult", "ShuffleStart", "make_shuffle_step", "make_migrate_step"]
+__all__ = [
+    "ShuffleResult",
+    "ShuffleStart",
+    "make_shuffle_step",
+    "make_migrate_step",
+    "shuffle_stats",
+    "migrate_stats",
+]
 
 
 class ShuffleResult(NamedTuple):
@@ -162,8 +171,12 @@ def make_shuffle_step(
         # derives nothing again, and the ragged backend's count phase
         # reuses the counts
         tables = PartitionerTables(*tables)
+        # num_partitions switches the split-key replica pick on: heavy keys
+        # whose tables.heavy_repl > 1 fan out over their replica partitions
+        # (an all-ones column routes bit-identically to the pre-split path)
         part, buffers = route_bucketize(
-            ex, tables, keys, valid, vals, num_hosts=num_hosts, seed=seed
+            ex, tables, keys, valid, vals, num_hosts=num_hosts, seed=seed,
+            num_partitions=num_partitions,
         )
         dest = jnp.where(valid, part, 0)
         started = ex.start_from(buffers).buffers
@@ -190,7 +203,7 @@ def make_shuffle_step(
                 start.overflow, start.lane_overflow, start.shipped_rows)
 
     in_specs = (
-        (P(), P(), P()),  # partitioner tables replicated
+        (P(), P(), P(), P()),  # partitioner tables replicated
         P(axis),  # keys sharded over workers
         P(axis),
         P(axis),
@@ -282,6 +295,10 @@ def make_migrate_step(
         new_tables = PartitionerTables(*new_tables)
         me = jax.lax.axis_index(axis)
         valid = state_keys != KEY_SENTINEL
+        # home routing on purpose (no num_partitions): a migration is where
+        # a split key's scattered partials converge — every replica's rows
+        # ship to the key's home partition, whose merge_into sums them.
+        # Routing state by replica pick would scatter it instead.
         part, slot, counts = route_dispatch(
             new_tables, state_keys, valid,
             num_hosts=num_hosts, seed=seed, num_lanes=num_workers,
@@ -338,7 +355,7 @@ def make_migrate_step(
         rk, rv, rva = _finish_local(pending)
         return kk, vv, kva, rk, rv, rva, moved, total, ov, lov, shipped
 
-    in_specs = ((P(), P(), P()), P(axis), P(axis))
+    in_specs = ((P(), P(), P(), P()), P(axis), P(axis))
     mapped = shard_map(
         _local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(axis),) * 6 + (P(), P(), P(), P(), P()),
@@ -375,3 +392,69 @@ def make_migrate_step(
     migrate.start = start
     migrate.finish = finish
     return migrate
+
+
+# ---------------------------------------------------------------------------
+# Plane-side telemetry constructors (the ExchangeStats API): consumers hand
+# these records whole to ``Telemetry.record_exchange(stats)`` instead of
+# assembling keyword soup at every call site.
+# ---------------------------------------------------------------------------
+
+
+def shuffle_stats(
+    res: "ShuffleResult | ShuffleStart",
+    spec: ExchangeSpec,
+    num_workers: int,
+    *,
+    wall_s: float = 0.0,
+    count_wall_s: float | None = None,
+    backend: str | None = None,
+    replica_rows: np.ndarray | None = None,
+) -> ExchangeStats:
+    """:class:`ExchangeStats` for one shuffle step.
+
+    ``ShuffleResult`` and ``ShuffleStart`` share every control field this
+    reads (loads / overflow / lane_overflow / shipped_rows), so the serial
+    and overlapped drivers construct identical records.  Rows are per worker
+    (the globally-psummed counters divided by ``num_workers``); ``padded``
+    is the spec's per-worker provision.  Blocks on the device scalars.
+    """
+    shipped = int(np.asarray(res.shipped_rows)) // num_workers
+    occupied = max(int(np.asarray(res.loads).sum()) - int(res.overflow), 0) // num_workers
+    return ExchangeStats(
+        rows=shipped,
+        wall_s=wall_s,
+        padded_rows=spec.rows,
+        occupied_rows=occupied,
+        lane_overflow=np.asarray(res.lane_overflow),
+        count_wall_s=count_wall_s,
+        backend=backend,
+        replica_rows=replica_rows,
+    )
+
+
+def migrate_stats(
+    *,
+    shipped_rows,
+    buffer_rows: int,
+    moved_rows: int,
+    overflow: int,
+    num_workers: int,
+    lane_overflow=None,
+    wall_s: float = 0.0,
+    backend: str | None = None,
+) -> ExchangeStats:
+    """:class:`ExchangeStats` for one state migration.
+
+    ``buffer_rows`` is the per-worker lane provision (``W * lane_cap``),
+    ``moved_rows`` the rows that actually crossed workers (globally summed,
+    like ``shipped_rows`` and ``overflow``).
+    """
+    return ExchangeStats(
+        rows=int(np.asarray(shipped_rows)) // num_workers,
+        wall_s=wall_s,
+        padded_rows=int(buffer_rows),
+        occupied_rows=max(int(moved_rows) - int(overflow), 0) // num_workers,
+        lane_overflow=None if lane_overflow is None else np.asarray(lane_overflow),
+        backend=backend,
+    )

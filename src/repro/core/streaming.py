@@ -79,14 +79,32 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.compat import overlap_enabled
-from repro.control import NoOp, Repartition, Resize, SwitchBackend, Telemetry
+from repro.control import (
+    NoOp,
+    Repartition,
+    Resize,
+    Split,
+    SwitchBackend,
+    Telemetry,
+    Unsplit,
+)
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS, KEY_SENTINEL
 from repro.core.migration import migration_capacity, plan_migration
-from repro.core.partitioner import Partitioner, uniform_partitioner
-from repro.core.shuffle import make_migrate_step, make_shuffle_step
+from repro.core.partitioner import (
+    Partitioner,
+    heavy_capacity_for,
+    split_replica_rows,
+    uniform_partitioner,
+)
+from repro.core.shuffle import (
+    make_migrate_step,
+    make_shuffle_step,
+    migrate_stats,
+    shuffle_stats,
+)
 from repro.core.state import empty_state, merge_into
-from repro.exchange import ExchangeSpec, resolve_backend
+from repro.exchange import ExchangeSpec, ExchangeStats, resolve_backend
 
 __all__ = ["StreamingJob", "BatchMetrics"]
 
@@ -114,6 +132,7 @@ class BatchMetrics:
                                   # (overlapped batches: the count phase only
                                   # — the ship is hidden behind host work)
     overlapped: bool = False    # the batch ran the split-phase pipeline
+    split_keys: int = 0         # hot keys replicated after this safe point
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -160,7 +179,7 @@ class StreamingJob:
         # by what this job's transport would actually move
         self.exchange_backend = resolve_backend(exchange_backend or "dense")
         cfg = dr or DRConfig()
-        heavy_cap = int(np.ceil(max(1.0, cfg.lam * self.num_partitions) / 128.0) * 128)
+        heavy_cap = heavy_capacity_for(cfg.lam, self.num_partitions)
         part = initial or uniform_partitioner(
             self.num_partitions, DEFAULT_NUM_HOSTS, seed, heavy_capacity=heavy_cap
         )
@@ -223,11 +242,11 @@ class StreamingJob:
         self._hidden_since = None
         self._consume_inflight()
         jax.block_until_ready(self._sk)
-        self.telemetry.record_exchange(
-            0, padded_rows=0,
+        self.telemetry.record_exchange(ExchangeStats(
+            rows=0,
             ship_wall_s=time.perf_counter() - t,
             hidden_wall_s=hidden,
-        )
+        ))
         self._last_state_rows = int(np.asarray(
             jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self._sk)
         ).sum())
@@ -338,17 +357,19 @@ class StreamingJob:
         # padded what the spec provisioned, occupied the rows actually live
         # in the lanes (backend-independent — the BackendPolicy's signal;
         # under dense shipped == padded while occupied tracks the real load).
-        shuffle_shipped = int(np.asarray(res.shipped_rows)) // w
-        shuffle_occupied = max(int(loads.sum()) - int(res.overflow), 0) // w
-        self.telemetry.record_exchange(
-            shuffle_shipped,
-            exchange_wall,
-            padded_rows=self._shuffle_spec.rows,
-            occupied_rows=shuffle_occupied,
-            lane_overflow=np.asarray(res.lane_overflow),
+        stats = shuffle_stats(
+            res, self._shuffle_spec, w,
+            wall_s=exchange_wall,
             count_wall_s=count_wall,
             backend=batch_backend,
+            # per-replica routing of the split keys (host twin of the fused
+            # kernels' pick — exact, no extra device pass); only computed
+            # while splits are installed
+            replica_rows=(split_replica_rows(self.drm.partitioner, keys, w, valid)
+                          if self.drm.split_keys else None),
         )
+        shuffle_shipped = stats.rows
+        self.telemetry.record_exchange(stats)
         self.telemetry.record_overflow(shuffle=int(res.overflow))
         self.telemetry.record_batch(float(loads.sum()))
 
@@ -387,16 +408,30 @@ class StreamingJob:
         elif isinstance(action, Repartition):
             rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
                 self._migrate_state(action.prev)
+        elif isinstance(action, Unsplit):
+            # combiner-side merge: the DRM already removed the key from the
+            # replica table; a home-routed migration off the still-split
+            # partitioner pulls every replica's partial aggregate back to
+            # the key's home, where merge_into sums them.  The home diff is
+            # empty (homes never changed) so the plan can't size the lanes —
+            # full_lanes provisions for the off-home partials it can't see.
+            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
+                self._migrate_state(action.prev, full_lanes=True)
         elif isinstance(action, SwitchBackend):
             # the DRM already installed the new transport (note_backend_switch);
             # the job adopts it and rebuilds its jitted steps, exactly like a
             # resize rebuilds them for a new lane count.  No state moves.
             self._apply_backend_switch()
+        # a taken Split needs no execution here: the DRM stamped the replica
+        # table and the very next batch's route kernels fan the key out
         if mig_rows:
-            self.telemetry.record_exchange(
-                mig_shipped, padded_rows=mig_rows,
-                occupied_rows=max(mig_moved - mig_overflow, 0) // w,
-            )
+            self.telemetry.record_exchange(migrate_stats(
+                shipped_rows=mig_shipped * w,  # helper re-divides per worker
+                buffer_rows=mig_rows,
+                moved_rows=mig_moved,
+                overflow=mig_overflow,
+                num_workers=w,
+            ))
             self.telemetry.record_overflow(migration=mig_overflow)
 
         m = BatchMetrics(
@@ -426,15 +461,16 @@ class StreamingJob:
             backend=batch_backend,
             exchange_wall_s=exchange_wall,
             overlapped=overlap,
+            split_keys=len(self.drm.split_keys),
         )
         # the host wall since the count sync ran under this batch's (or the
         # migration's) in-flight ship — that's the latency the overlap hid.
         # Recorded at batch end, so it lands in the *next* telemetry window.
         if self._inflight is not None and self._hidden_since is not None:
-            self.telemetry.record_exchange(
-                0, padded_rows=0,
+            self.telemetry.record_exchange(ExchangeStats(
+                rows=0,
                 hidden_wall_s=time.perf_counter() - self._hidden_since,
-            )
+            ))
         self._hidden_since = None
         self.metrics.append(m)
         return m
@@ -487,7 +523,8 @@ class StreamingJob:
         self._shuffle_sig = None
         return stats
 
-    def _migrate_state(self, old_part: Partitioner) -> tuple[float, int, int, int, int, int]:
+    def _migrate_state(self, old_part: Partitioner, *,
+                       full_lanes: bool = False) -> tuple[float, int, int, int, int, int]:
         """Ship keyed state to where ``self.drm.partitioner`` now maps it.
 
         Plans on the driver (``plan_migration`` diffs the partitioners over
@@ -498,11 +535,20 @@ class StreamingJob:
         ``buffer_rows`` is the per-worker provision, ``shipped_rows`` what
         the backend measured moving, ``moved_rows`` the rows that actually
         crossed workers (the occupancy side of the telemetry).
+
+        ``full_lanes`` (and any installed split key) forces full-state
+        lane provisioning: split partial aggregates live *off home*, so the
+        home-diff plan cannot see them, but the home-routed migrate step
+        ships every one of them back to its key's home — undersized lanes
+        would silently drop the partials being merged.
         """
         sk = np.asarray(self.state_keys).reshape(-1)
         live = sk[sk != KEY_SENTINEL].astype(np.int64)
         plan = plan_migration(old_part, self.drm.partitioner, live)
-        plan_rows = migration_capacity(plan, num_workers=self.num_workers)
+        if full_lanes or self.drm.split_keys:
+            plan_rows = self.state_capacity
+        else:
+            plan_rows = migration_capacity(plan, num_workers=self.num_workers)
         migrate, lane_cap = self._migrate_step(plan_rows)
         tables = self.drm.partitioner.tables()
         if self._overlap_active():
@@ -537,9 +583,9 @@ class StreamingJob:
         # rows/wall are recorded by process_batch (one call per migration);
         # the hot-lane vector is only available here, so it rides a
         # zero-row record into the same telemetry window
-        self.telemetry.record_exchange(
-            0, padded_rows=0, lane_overflow=np.asarray(mig_lane_ov)
-        )
+        self.telemetry.record_exchange(ExchangeStats(
+            rows=0, lane_overflow=np.asarray(mig_lane_ov)
+        ))
         return (rel_mig, int(mig_ov), mig_rows, plan_rows,
                 int(np.asarray(mig_shipped)) // self.num_workers, int(moved))
 

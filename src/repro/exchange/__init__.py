@@ -14,6 +14,7 @@ from repro.exchange.plane import (
     Exchange,
     ExchangeResult,
     ExchangeSpec,
+    ExchangeStats,
     Payload,
     PendingExchange,
     SendInfo,
@@ -29,6 +30,7 @@ __all__ = [
     "ExchangeBackend",
     "ExchangeResult",
     "ExchangeSpec",
+    "ExchangeStats",
     "LocalBackend",
     "Payload",
     "PendingExchange",

@@ -45,6 +45,7 @@ from repro.exchange.backends import ExchangeBackend, resolve_backend
 from repro.exchange.spec import (
     ExchangeResult,
     ExchangeSpec,
+    ExchangeStats,
     Payload,
     SendInfo,
     take_from,
@@ -53,6 +54,7 @@ from repro.kernels import ref as kref
 
 __all__ = [
     "ExchangeSpec",
+    "ExchangeStats",
     "Payload",
     "SendInfo",
     "ExchangeResult",
@@ -78,6 +80,11 @@ class PendingExchange(NamedTuple):
 
     buffers: ExchangeResult
 
+    def stats(self, spec: ExchangeSpec | None = None, **kw) -> ExchangeStats:
+        """Telemetry record from the control phase (all control-plane fields
+        are final at ``start``; see :meth:`ExchangeResult.stats`)."""
+        return self.buffers.stats(spec, **kw)
+
 
 def route_dispatch(
     tables: PartitionerTables,
@@ -87,6 +94,7 @@ def route_dispatch(
     num_hosts: int,
     seed: int,
     num_lanes: int,
+    num_partitions: int = 0,
     use_pallas: bool | None = None,
 ):
     """Fused key -> partition lookup + lane slot assignment.
@@ -98,6 +106,11 @@ def route_dispatch(
     phase and the per-lane overflow both reuse them).  On TPU this is one
     fused Pallas kernel (``repro.kernels.lookup_dispatch``); elsewhere the
     bit-identical jnp twin.
+
+    ``num_partitions > 0`` activates hot-key splitting: heavy keys with
+    ``tables.heavy_repl > 1`` fan out over their replica partitions.  Leave
+    it 0 (the default) to route every key to its home — the state-migration
+    path *must*, since homes are where split partials converge and merge.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
@@ -105,12 +118,15 @@ def route_dispatch(
         from repro.kernels import ops
 
         part, slot, counts = ops.route_slots(
-            keys, valid, tables, num_hosts=num_hosts, seed=seed, num_lanes=num_lanes
+            keys, valid, tables, num_hosts=num_hosts, seed=seed,
+            num_lanes=num_lanes, num_partitions=num_partitions,
         )
     else:
         part, slot, counts = kref.lookup_dispatch_ref(
             keys, valid, tables.heavy_keys, tables.heavy_parts, tables.host_to_part,
             seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
+            heavy_repl=tables.heavy_repl if num_partitions > 0 else None,
+            num_partitions=num_partitions,
         )
     return part, slot, counts
 
@@ -125,6 +141,7 @@ def route_bucketize(
     num_hosts: int,
     seed: int,
     key_fill: int = KEY_SENTINEL,
+    num_partitions: int = 0,
     use_pallas: bool | None = None,
 ):
     """Fused route -> bucketize for the shuffle's ``(keys, vals, part)``
@@ -149,6 +166,7 @@ def route_bucketize(
             keys, valid, tables, vals,
             num_hosts=num_hosts, seed=seed,
             num_lanes=spec.num_lanes, capacity=spec.capacity, key_fill=key_fill,
+            num_partitions=num_partitions,
         )
         lane = jnp.where(valid, part % spec.num_lanes, 0).astype(jnp.int32)
         ok = valid & (slot >= 0) & (slot < spec.capacity)
@@ -167,7 +185,8 @@ def route_bucketize(
     else:
         part, slot, counts = route_dispatch(
             tables, keys, valid, num_hosts=num_hosts, seed=seed,
-            num_lanes=spec.num_lanes, use_pallas=False,
+            num_lanes=spec.num_lanes, num_partitions=num_partitions,
+            use_pallas=False,
         )
         dest = jnp.where(valid, part, 0)
         buffers = exchange.bucketize(

@@ -25,8 +25,52 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["ExchangeSpec", "Payload", "SendInfo", "ExchangeResult", "take_from"]
+__all__ = [
+    "ExchangeSpec",
+    "ExchangeStats",
+    "Payload",
+    "SendInfo",
+    "ExchangeResult",
+    "take_from",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeStats:
+    """Everything the control plane learns from one exchange, in one record.
+
+    Constructed *by the plane* (:meth:`ExchangeResult.stats`, the shuffle's
+    ``shuffle_stats`` / ``migrate_stats`` helpers) and handed whole to
+    ``Telemetry.record_exchange(stats)`` — consumers never assemble the
+    fields themselves, so a new measurement (``replica_rows`` here) does not
+    ripple through every call site.
+
+    * ``rows`` — rows the active transport measured moving (shipped).
+    * ``padded_rows`` — rows the exchange *provisioned* (``spec.rows``);
+      ``None`` means unpadded (= ``rows``).
+    * ``occupied_rows`` — rows actually live in the shipped lanes; ``None``
+      means fully occupied (= ``rows``).
+    * ``lane_overflow`` — per-lane capacity drops (int array) or ``None``.
+    * ``count_wall_s`` / ``ship_wall_s`` / ``hidden_wall_s`` — split-phase
+      wall breakdown (blocking count, blocking ship, ship wall hidden
+      behind host work).
+    * ``backend`` — transport name the measurements belong to.
+    * ``replica_rows`` — rows landed per partition from *split* hot keys
+      (int array) or ``None`` when no key is split.
+    """
+
+    rows: int
+    wall_s: float = 0.0
+    padded_rows: int | None = None
+    occupied_rows: int | None = None
+    lane_overflow: np.ndarray | None = None
+    count_wall_s: float | None = None
+    ship_wall_s: float | None = None
+    hidden_wall_s: float | None = None
+    backend: str | None = None
+    replica_rows: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +164,46 @@ class ExchangeResult(NamedTuple):
         l, c = self.valid.shape
         flat = tuple(p.reshape((l * c,) + p.shape[2:]) for p in self.payloads)
         return self.valid.reshape(-1), flat
+
+    def stats(
+        self,
+        spec: ExchangeSpec | None = None,
+        *,
+        wall_s: float = 0.0,
+        count_wall_s: float | None = None,
+        ship_wall_s: float | None = None,
+        hidden_wall_s: float | None = None,
+        backend: str | None = None,
+        replica_rows: np.ndarray | None = None,
+    ) -> ExchangeStats:
+        """The plane-constructed telemetry record for this exchange.
+
+        Pulls every measurement the result already carries — shipped rows,
+        lane occupancy, per-lane overflow — so the consumer only supplies
+        what the plane cannot know: wall clocks, the backend name, and the
+        host-side split accounting.  Blocks on the device scalars.
+        """
+        rows = int(self.shipped_rows) if self.shipped_rows is not None else 0
+        if self.lane_counts is not None:
+            occupied = int(np.sum(np.asarray(self.lane_counts)))
+        else:
+            occupied = int(np.sum(np.asarray(self.valid)))
+        padded = spec.rows if spec is not None else int(self.valid.size)
+        lane_ov = self.send.lane_overflow
+        if lane_ov is not None:
+            lane_ov = np.asarray(lane_ov)
+        return ExchangeStats(
+            rows=rows,
+            wall_s=wall_s,
+            padded_rows=padded,
+            occupied_rows=occupied,
+            lane_overflow=lane_ov,
+            count_wall_s=count_wall_s,
+            ship_wall_s=ship_wall_s,
+            hidden_wall_s=hidden_wall_s,
+            backend=backend,
+            replica_rows=replica_rows,
+        )
 
 
 def take_from(buffers: jax.Array, send: SendInfo) -> jax.Array:

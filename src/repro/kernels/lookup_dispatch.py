@@ -49,9 +49,14 @@ def _fmix32(x):
 
 def _kernel(
     keys_ref, valid_ref, heavy_keys_ref, heavy_parts_ref, host_ref,
-    part_ref, slot_ref, counts_ref,
-    *, seed: int, num_hosts: int, num_lanes: int,
+    *rest, seed: int, num_hosts: int, num_lanes: int, num_partitions: int = 0,
 ):
+    # with splitting active (num_partitions > 0) the heavy-replica table
+    # rides along as a sixth input, ahead of the output refs
+    if num_partitions > 0:
+        heavy_repl_ref, part_ref, slot_ref, counts_ref = rest
+    else:
+        part_ref, slot_ref, counts_ref = rest
     keys = keys_ref[...].reshape(BLK)
     valid = valid_ref[...].reshape(BLK).astype(jnp.float32)
 
@@ -77,7 +82,30 @@ def _kernel(
     part_heavy = jax.lax.dot_general(
         eq, hp[:, None], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )[:, 0]
-    part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
+    if num_partitions > 0:
+        # ---- split-key replica pick (fused next to the heavy lookup) ----
+        # replicas per record via the same eq matmul (exactly one live match
+        # per key; sentinel records sum pad rows' 0 -> clamp to 1 -> offset 0)
+        hr = heavy_repl_ref[...].reshape(-1).astype(jnp.float32)
+        d = jax.lax.dot_general(
+            eq, hr[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, 0]
+        d = jnp.maximum(d.astype(jnp.int32), 1)
+        # the record's shard-local index, from two 2-D iotas (row-major over
+        # the [ROWS, LANES] block layout, matching the keys reshape)
+        gi = pl.program_id(0) * BLK + (
+            jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 0) * LANES
+            + jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1)
+        ).reshape(BLK)
+        h = _fmix32(gi.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) ^ mixed)
+        offset = jax.lax.rem((h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32), d)
+        split_part = jax.lax.rem(
+            part_heavy.astype(jnp.int32) + offset, jnp.int32(num_partitions)
+        )
+        part = jnp.where(hit, split_part, part_tail.astype(jnp.int32)).astype(jnp.int32)
+    else:
+        part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
     part_ref[...] = part.reshape(ROWS, LANES)
 
     # ---- stage 2: lane rank (triangular prefix matmul, fused in VMEM) ----
@@ -101,21 +129,32 @@ def _kernel(
     counts_ref[...] = running + jnp.sum(onehot, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("seed", "num_hosts", "num_lanes", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("seed", "num_hosts", "num_lanes", "num_partitions", "interpret"),
+)
 def lookup_dispatch(
     keys: jax.Array,  # int32[n], n % 256 == 0
     valid: jax.Array,  # bool[n]
     heavy_keys: jax.Array,  # int32[B] sorted, sentinel padded
     heavy_parts: jax.Array,  # int32[B]
     host_to_part: jax.Array,  # int32[H], H a power of two
+    heavy_repl: jax.Array | None = None,  # int32[B] replicas (pad rows: 0)
     *,
     seed: int = 0,
     num_hosts: int = 4096,
     num_lanes: int,
+    num_partitions: int = 0,
     interpret: bool = True,
 ):
     """Returns (part int32[n], slot int32[n] — rank within ``part % num_lanes``,
-    -1 for invalid; counts int32[num_lanes])."""
+    -1 for invalid; counts int32[num_lanes]).
+
+    ``num_partitions > 0`` switches on hot-key splitting: a heavy key with
+    ``heavy_repl[b] = d > 1`` fans its records over the d consecutive
+    partitions starting at ``heavy_parts[b]`` by a per-record hash.  With
+    ``num_partitions == 0`` (the default) the traced program is exactly the
+    pre-split one."""
     n = keys.shape[0]
     assert n % BLK == 0, f"pad records to a multiple of {BLK}"
     assert num_hosts & (num_hosts - 1) == 0, "H must be a power of two"
@@ -123,16 +162,25 @@ def lookup_dispatch(
     keys2d = keys.reshape(n // LANES, LANES)
     valid2d = valid.astype(jnp.int32).reshape(n // LANES, LANES)
 
+    in_specs = [
+        pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((1, b), lambda i: (0, 0)),
+        pl.BlockSpec((1, b), lambda i: (0, 0)),
+        pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
+    ]
+    inputs = [keys2d, valid2d, heavy_keys[None, :], heavy_parts[None, :],
+              host_to_part[None, :]]
+    if num_partitions > 0:
+        assert heavy_repl is not None, "splitting needs the replica table"
+        in_specs.append(pl.BlockSpec((1, b), lambda i: (0, 0)))
+        inputs.append(heavy_repl[None, :])
+
     part, slot, counts = pl.pallas_call(
-        functools.partial(_kernel, seed=seed, num_hosts=num_hosts, num_lanes=num_lanes),
+        functools.partial(_kernel, seed=seed, num_hosts=num_hosts,
+                          num_lanes=num_lanes, num_partitions=num_partitions),
         grid=(n // BLK,),
-        in_specs=[
-            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1, b), lambda i: (0, 0)),
-            pl.BlockSpec((1, b), lambda i: (0, 0)),
-            pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
             pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
@@ -144,5 +192,5 @@ def lookup_dispatch(
             jax.ShapeDtypeStruct((1, num_lanes), jnp.float32),
         ],
         interpret=interpret,
-    )(keys2d, valid2d, heavy_keys[None, :], heavy_parts[None, :], host_to_part[None, :])
+    )(*inputs)
     return part.reshape(n), slot.reshape(n), counts[0].astype(jnp.int32)

@@ -54,11 +54,12 @@ def count_sketch(keys: jax.Array, valid: jax.Array | None = None, *, depth: int 
 
 
 def route_slots(keys: jax.Array, valid: jax.Array, tables, *, num_hosts: int,
-                seed: int = 0, num_lanes: int):
+                seed: int = 0, num_lanes: int, num_partitions: int = 0):
     """Fused partition lookup + lane slot (the exchange-plane hot path).
 
     Returns ``(part[n], slot[n], counts[num_lanes])`` — the slot ranks each
-    valid record within its ``part % num_lanes`` lane.
+    valid record within its ``part % num_lanes`` lane.  ``num_partitions >
+    0`` activates the split-key replica pick from ``tables.heavy_repl``.
     """
     k, n = _pad_to(keys.astype(jnp.int32), ROUTE_BLK)
     v, _ = _pad_to(valid.astype(jnp.int32), ROUTE_BLK)
@@ -66,16 +67,22 @@ def route_slots(keys: jax.Array, valid: jax.Array, tables, *, num_hosts: int,
     bpad = (-b) % KEY_LANES
     hk = jnp.concatenate([tables.heavy_keys, jnp.full(bpad, 2**31 - 1, jnp.int32)]) if bpad else tables.heavy_keys
     hp = jnp.concatenate([tables.heavy_parts, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_parts
+    hr = None
+    if num_partitions > 0:
+        # pad replica rows with 0: sentinel matches sum to 0 -> clamp to 1
+        hr = jnp.concatenate([tables.heavy_repl, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_repl
     part, slot, counts = lookup_dispatch(
-        k, v.astype(bool), hk, hp, tables.host_to_part,
-        seed=seed, num_hosts=num_hosts, num_lanes=num_lanes, interpret=_interpret(),
+        k, v.astype(bool), hk, hp, tables.host_to_part, hr,
+        seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
+        num_partitions=num_partitions, interpret=_interpret(),
     )
     return part[:n], slot[:n], counts
 
 
 def route_bucketize(keys: jax.Array, valid: jax.Array, tables, vals: jax.Array, *,
                     num_hosts: int, seed: int = 0, num_lanes: int, capacity: int,
-                    key_fill: int, interpret: bool | None = None):
+                    key_fill: int, num_partitions: int = 0,
+                    interpret: bool | None = None):
     """Fused route + slot + bucketize (the split-phase exchange's start path).
 
     Returns ``(part[n], slot[n], counts[L], buf_valid[L, cap] bool,
@@ -97,13 +104,17 @@ def route_bucketize(keys: jax.Array, valid: jax.Array, tables, vals: jax.Array, 
     bpad = KEY_LANES if b == 0 else (-b) % KEY_LANES
     hk = jnp.concatenate([tables.heavy_keys, jnp.full(bpad, 2**31 - 1, jnp.int32)]) if bpad else tables.heavy_keys
     hp = jnp.concatenate([tables.heavy_parts, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_parts
+    hr = None
+    if num_partitions > 0:
+        # pad replica rows with 0: sentinel matches sum to 0 -> clamp to 1
+        hr = jnp.concatenate([tables.heavy_repl, jnp.zeros(bpad, jnp.int32)]) if bpad else tables.heavy_repl
     # scatter into a lane-tile-aligned buffer; the overflow columns the ref
     # drops land in the pad and are sliced away below
     cap_p = int(-(-capacity // 128) * 128)
     part, slot, counts, bvalid, bkhi, bklo, bphi, bplo, bvals = _route_bucketize_kernel(
-        k, v.astype(bool), w, hk, hp, tables.host_to_part,
+        k, v.astype(bool), w, hk, hp, tables.host_to_part, hr,
         seed=seed, num_hosts=num_hosts, num_lanes=num_lanes, capacity=cap_p,
-        interpret=interpret,
+        num_partitions=num_partitions, interpret=interpret,
     )
     buf_valid = bvalid[:, :capacity] > 0.0
 

@@ -38,24 +38,55 @@ def sketch_update_ref(keys, valid, *, depth=4, width=2048):
     return jnp.stack(rows)
 
 
+def split_choice_ref(keys, heavy_keys, heavy_repl, *, seed=0, num_partitions=0):
+    """Replica pick for split heavy keys (bit-identical to the fused kernels).
+
+    Returns ``(hit & split, offset)``: whether each record's key is in the
+    heavy table with replicas, and the hash-chosen partition offset in
+    ``[0, d)``.  The hash folds the record's (shard-local) index into the
+    key mix so one hot key fans out over its d consecutive partitions; with
+    ``d = 1`` the offset is identically 0, so unsplit trajectories are
+    untouched bit-for-bit."""
+    keys = keys.astype(jnp.int32)
+    mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
+    idx = jnp.arange(keys.shape[0], dtype=jnp.uint32)
+    h = _fmix32(idx * jnp.uint32(0x9E3779B9) ^ mixed)
+    bidx = jnp.clip(jnp.searchsorted(heavy_keys, keys), 0, heavy_keys.shape[0] - 1)
+    hit = heavy_keys[bidx] == keys
+    # pad rows carry repl 0 -> clamp to 1 -> offset 0 (same as the kernel,
+    # where a sentinel record's eq-matmul over pad rows sums repl to 0)
+    d = jnp.maximum(heavy_repl[bidx].astype(jnp.int32), 1)
+    offset = (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32) % d
+    return hit, offset
+
+
 def lookup_dispatch_ref(keys, valid, heavy_keys, heavy_parts, host_to_part, *,
-                        seed=0, num_hosts=4096, num_lanes):
+                        seed=0, num_hosts=4096, num_lanes,
+                        heavy_repl=None, num_partitions=0):
     """Fused twin: partition lookup + lane slot in one call (bit-identical
-    to ``kernels.lookup_dispatch``)."""
+    to ``kernels.lookup_dispatch``).  With ``heavy_repl`` and a positive
+    ``num_partitions`` the route also applies the split-key replica pick."""
     part = partition_apply_ref(keys, heavy_keys, heavy_parts, host_to_part,
                                seed=seed, num_hosts=num_hosts)
+    if heavy_repl is not None and num_partitions > 0 and heavy_keys.shape[0] > 0:
+        hit, offset = split_choice_ref(
+            keys, heavy_keys, heavy_repl, seed=seed, num_partitions=num_partitions
+        )
+        part = jnp.where(hit, (part + offset) % num_partitions, part).astype(jnp.int32)
     slot, counts = dispatch_count_ref(part % num_lanes, valid, num_parts=num_lanes)
     return part, slot, counts
 
 
 def route_bucketize_ref(keys, valid, vals, heavy_keys, heavy_parts, host_to_part, *,
-                        seed=0, num_hosts=4096, num_lanes, capacity, key_fill):
+                        seed=0, num_hosts=4096, num_lanes, capacity, key_fill,
+                        heavy_repl=None, num_partitions=0):
     """Fused twin of ``kernels.route_bucketize``: route + slot + scatter into
     the ``[L, capacity]`` send buffers, bit-identical to the kernel (and to
     ``route_dispatch`` + the exchange plane's ``_bucketize``)."""
     part, slot, counts = lookup_dispatch_ref(
         keys, valid, heavy_keys, heavy_parts, host_to_part,
         seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
+        heavy_repl=heavy_repl, num_partitions=num_partitions,
     )
     lane = jnp.where(valid, part % num_lanes, 0).astype(jnp.int32)
     ok = valid & (slot >= 0) & (slot < capacity)

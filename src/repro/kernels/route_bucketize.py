@@ -47,10 +47,15 @@ from repro.kernels.lookup_dispatch import BLK, LANES, ROWS, _fmix32
 
 def _kernel(
     keys_ref, valid_ref, vals_ref, heavy_keys_ref, heavy_parts_ref, host_ref,
-    part_ref, slot_ref, counts_ref,
-    bvalid_ref, bkhi_ref, bklo_ref, bphi_ref, bplo_ref, bvals_ref,
-    *, seed: int, num_hosts: int, num_lanes: int, capacity: int,
+    *rest, seed: int, num_hosts: int, num_lanes: int, capacity: int,
+    num_partitions: int = 0,
 ):
+    # with splitting active (num_partitions > 0) the heavy-replica table
+    # rides along as a seventh input, ahead of the output refs
+    if num_partitions > 0:
+        heavy_repl_ref, *rest = rest
+    (part_ref, slot_ref, counts_ref,
+     bvalid_ref, bkhi_ref, bklo_ref, bphi_ref, bplo_ref, bvals_ref) = rest
     keys = keys_ref[...].reshape(BLK)
     valid = valid_ref[...].reshape(BLK).astype(jnp.float32)
 
@@ -82,7 +87,26 @@ def _kernel(
     part_heavy = jax.lax.dot_general(
         eq, hp[:, None], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )[:, 0]
-    part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
+    if num_partitions > 0:
+        # ---- split-key replica pick (same formula as lookup_dispatch) ----
+        hr = heavy_repl_ref[...].reshape(-1).astype(jnp.float32)
+        d = jax.lax.dot_general(
+            eq, hr[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, 0]
+        d = jnp.maximum(d.astype(jnp.int32), 1)
+        gi = pl.program_id(0) * BLK + (
+            jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 0) * LANES
+            + jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1)
+        ).reshape(BLK)
+        h = _fmix32(gi.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) ^ mixed)
+        offset = jax.lax.rem((h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32), d)
+        split_part = jax.lax.rem(
+            part_heavy.astype(jnp.int32) + offset, jnp.int32(num_partitions)
+        )
+        part = jnp.where(hit, split_part, part_tail.astype(jnp.int32)).astype(jnp.int32)
+    else:
+        part = jnp.where(hit, part_heavy, part_tail).astype(jnp.int32)
     part_ref[...] = part.reshape(ROWS, LANES)
 
     # ---- stage 2: lane rank (triangular prefix matmul, fused in VMEM) ----
@@ -127,7 +151,7 @@ def _kernel(
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "seed", "num_hosts", "num_lanes", "capacity", "interpret"))
+    "seed", "num_hosts", "num_lanes", "capacity", "num_partitions", "interpret"))
 def route_bucketize(
     keys: jax.Array,  # int32[n], n % 256 == 0
     valid: jax.Array,  # bool[n]
@@ -135,17 +159,20 @@ def route_bucketize(
     heavy_keys: jax.Array,  # int32[B] sorted, sentinel padded
     heavy_parts: jax.Array,  # int32[B]
     host_to_part: jax.Array,  # int32[H], H a power of two
+    heavy_repl: jax.Array | None = None,  # int32[B] replicas (pad rows: 0)
     *,
     seed: int = 0,
     num_hosts: int = 4096,
     num_lanes: int,
     capacity: int,
+    num_partitions: int = 0,
     interpret: bool = True,
 ):
     """Returns ``(part[n], slot[n], counts[L], bvalid[L, cap],
     bkhi/bklo/bphi/bplo [L, cap], bvals[D, L, cap])`` — raw f32 channel
     buffers; ``repro.kernels.ops.route_bucketize`` recombines the 16-bit
-    halves and applies fills."""
+    halves and applies fills.  ``num_partitions > 0`` enables the split-key
+    replica pick (see ``lookup_dispatch``); 0 traces the pre-split program."""
     n = keys.shape[0]
     assert n % BLK == 0, f"pad records to a multiple of {BLK}"
     assert num_hosts & (num_hosts - 1) == 0, "H must be a power of two"
@@ -154,18 +181,27 @@ def route_bucketize(
     keys2d = keys.reshape(n // LANES, LANES)
     valid2d = valid.astype(jnp.int32).reshape(n // LANES, LANES)
 
+    in_specs = [
+        pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        pl.BlockSpec((BLK, d), lambda i: (i, 0)),
+        pl.BlockSpec((1, b), lambda i: (0, 0)),
+        pl.BlockSpec((1, b), lambda i: (0, 0)),
+        pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
+    ]
+    inputs = [keys2d, valid2d, vals, heavy_keys[None, :], heavy_parts[None, :],
+              host_to_part[None, :]]
+    if num_partitions > 0:
+        assert heavy_repl is not None, "splitting needs the replica table"
+        in_specs.append(pl.BlockSpec((1, b), lambda i: (0, 0)))
+        inputs.append(heavy_repl[None, :])
+
     out = pl.pallas_call(
         functools.partial(_kernel, seed=seed, num_hosts=num_hosts,
-                          num_lanes=num_lanes, capacity=capacity),
+                          num_lanes=num_lanes, capacity=capacity,
+                          num_partitions=num_partitions),
         grid=(n // BLK,),
-        in_specs=[
-            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((BLK, d), lambda i: (i, 0)),
-            pl.BlockSpec((1, b), lambda i: (0, 0)),
-            pl.BlockSpec((1, b), lambda i: (0, 0)),
-            pl.BlockSpec((1, host_to_part.shape[0]), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
             pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
@@ -189,8 +225,7 @@ def route_bucketize(
             jax.ShapeDtypeStruct((d, num_lanes, capacity), jnp.float32),
         ],
         interpret=interpret,
-    )(keys2d, valid2d, vals, heavy_keys[None, :], heavy_parts[None, :],
-      host_to_part[None, :])
+    )(*inputs)
     part, slot, counts, bvalid, bkhi, bklo, bphi, bplo, bvals = out
     return (part.reshape(n), slot.reshape(n), counts[0].astype(jnp.int32),
             bvalid, bkhi, bklo, bphi, bplo, bvals)

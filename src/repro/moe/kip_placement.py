@@ -146,12 +146,18 @@ class PlacementController:
         e_loc = self.e // self.n
         return loads[self.placement.place].reshape(self.n, e_loc).sum(axis=1)
 
-    def observe(self, counts: np.ndarray) -> None:
+    def observe(self, counts: np.ndarray, exchange=None) -> None:
+        """Fold one step's router counts (and optionally its dispatch
+        traffic, as a plane-constructed
+        :class:`~repro.exchange.ExchangeStats` from
+        ``MoEOut.exchange_stats()``) into the telemetry window."""
         c = np.asarray(counts, np.float64)
         tot = max(c.sum(), 1e-9)
         self.loads_ewma = (1 - self.alpha) * self.loads_ewma + self.alpha * (c / tot)
         self.steps += 1
         self.telemetry.record_batch(float(c.sum()))
+        if exchange is not None:
+            self.telemetry.record_exchange(exchange)
 
     def _prev_partitioner(self) -> Partitioner:
         """Previous placement as a Partitioner (explicit routing for all keys)."""

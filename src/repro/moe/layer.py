@@ -53,8 +53,22 @@ class MoEOut(NamedTuple):
     # rows actually live in the exchanged lanes, both directions — the
     # backend-independent occupancy (what a ragged transport would ship;
     # under dense, shipped is the pad while this tracks the real load).
-    # Feed it to ``Telemetry.record_exchange(occupied_rows=)``.
+    # ``exchange_stats()`` packages both for ``Telemetry.record_exchange``.
     occupied_rows: Array = None  # int32[]
+
+    def exchange_stats(self, *, padded_rows: int = 0, wall_s: float = 0.0,
+                       backend: str | None = None):
+        """Package this step's dispatch traffic as one plane-constructed
+        :class:`~repro.exchange.ExchangeStats` — the record
+        ``Telemetry.record_exchange`` takes.  ``padded_rows`` is what the
+        dispatch specs provisioned (both directions); paths with no
+        cross-shard exchange report zero rows."""
+        from repro.exchange import ExchangeStats
+
+        rows = 0 if self.shipped_rows is None else int(self.shipped_rows)
+        occ = None if self.occupied_rows is None else int(self.occupied_rows)
+        return ExchangeStats(rows=rows, wall_s=wall_s, padded_rows=padded_rows,
+                             occupied_rows=occ, backend=backend)
 
 
 def init_moe(key, d: int, spec: MoESpec, ffn_kind: str, dtype) -> dict:

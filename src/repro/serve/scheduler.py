@@ -28,7 +28,8 @@ import numpy as np
 from repro.control import Repartition, Resize, SwitchBackend, Telemetry
 from repro.core.drm import DRConfig, DRMaster
 from repro.core.hashing import DEFAULT_NUM_HOSTS
-from repro.core.partitioner import uniform_partitioner
+from repro.core.partitioner import heavy_capacity_for, uniform_partitioner
+from repro.exchange import ExchangeStats
 
 __all__ = ["ReplicaState", "DRScheduler"]
 
@@ -46,7 +47,9 @@ class DRScheduler:
                  exchange_backend: str | None = None):
         self.replicas = [ReplicaState(i) for i in range(num_replicas)]
         cfg = dr or DRConfig(lam=4.0, imbalance_trigger=1.25)
-        heavy_cap = int(np.ceil(max(1.0, cfg.lam * num_replicas) / 128.0) * 128)
+        # the same tile-padded sizing rule the kernels' heavy tables use —
+        # a bespoke rounding here once drifted from the kernel tile shape
+        heavy_cap = heavy_capacity_for(cfg.lam, num_replicas)
         init = uniform_partitioner(num_replicas, DEFAULT_NUM_HOSTS, seed,
                                    heavy_capacity=heavy_cap)
         # the transport KV-cache migrations would ride; its sizing rule
@@ -105,13 +108,21 @@ class DRScheduler:
             # the DRM installed the new transport in evaluate
             # (note_backend_switch); session-move pricing follows it from the
             # next decision on — nothing to rebuild here, replicas are
-            # modeled objects, not jitted steps.  NOTE: this scheduler
-            # records no exchange-lane telemetry yet (KV migrations are
-            # modeled, not bufferized), so the BackendPolicy declines with
-            # "backend-no-exchange-window" on its own signals — this branch
-            # executes switches restored from snapshots or issued by hosts
-            # that do record lane occupancy (ROADMAP open item).
+            # modeled objects, not jitted steps.  NOTE: session moves are
+            # modeled (not bufferized), so the occupancy below is exact
+            # rows with no padding — the BackendPolicy sees fraction 1.0
+            # and holds dense; real lane accounting would need bufferized
+            # KV migration (ROADMAP open item).
             pass
+        if moved_sessions:
+            # session (KV-cache) moves are this consumer's exchange traffic;
+            # modeled 1 row per session, unpadded
+            self.telemetry.record_exchange(ExchangeStats(
+                rows=moved_sessions,
+                padded_rows=moved_sessions,
+                occupied_rows=moved_sessions,
+                backend=self.drm.exchange_backend.name,
+            ))
         return {
             # a backend switch moves no sessions: taken, but not a repartition
             "repartitioned": action.taken and action.moves_state,

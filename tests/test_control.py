@@ -8,6 +8,7 @@ policy rules, at both the unit (synthetic ``Signals``) and end-to-end
 import numpy as np
 import pytest
 
+from repro.exchange import ExchangeStats
 from repro.control import (
     NoOp,
     Repartition,
@@ -68,7 +69,7 @@ def test_signals_derived_metrics():
 def test_telemetry_window_accumulates_until_safe_point():
     t = Telemetry("stream")
     t.record_batch(100)
-    t.record_exchange(64, 0.5)
+    t.record_exchange(ExchangeStats(rows=64, wall_s=0.5))
     peek = t.snapshot(loads=FLAT, at_safe_point=False)  # peek: no reset
     t.record_batch(100)
     t.record_overflow(shuffle=3, migration=2)
@@ -428,9 +429,10 @@ def test_repartition_cost_uses_host_backend():
 
 def test_telemetry_padded_vs_shipped_and_hot_lane():
     t = Telemetry("stream")
-    t.record_exchange(100, 0.1, padded_rows=400, lane_overflow=np.array([0, 7, 0]))
-    t.record_exchange(50)  # dense-style: shipped == padded
-    t.record_exchange(0, padded_rows=0, lane_overflow=np.array([0, 2, 1]))
+    t.record_exchange(ExchangeStats(rows=100, wall_s=0.1, padded_rows=400,
+                                    lane_overflow=np.array([0, 7, 0])))
+    t.record_exchange(ExchangeStats(rows=50))  # dense-style: shipped == padded
+    t.record_exchange(ExchangeStats(rows=0, lane_overflow=np.array([0, 2, 1])))
     s = t.snapshot(loads=FLAT)
     assert s.exchange_rows == 150 and s.exchange_padded_rows == 450
     assert s.exchange_padding_fraction == pytest.approx(150 / 450)
@@ -444,8 +446,8 @@ def test_telemetry_lane_overflow_survives_lane_count_change():
     """An elastic resize changes the lane count mid-window; both vectors
     fold onto the wider one, no drop lost."""
     t = Telemetry("stream")
-    t.record_exchange(8, lane_overflow=np.array([1, 2]))
-    t.record_exchange(8, lane_overflow=np.array([0, 1, 5, 0]))
+    t.record_exchange(ExchangeStats(rows=8, lane_overflow=np.array([1, 2])))
+    t.record_exchange(ExchangeStats(rows=8, lane_overflow=np.array([0, 1, 5, 0])))
     s = t.snapshot(loads=FLAT)
     np.testing.assert_array_equal(s.lane_overflow, [1, 3, 5, 0])
     assert s.hot_lane == 2
@@ -468,11 +470,11 @@ def test_telemetry_explicit_zero_occupancy_is_a_measurement():
     padding waste) — the fraction must read 0.0, not fall back to the
     shipped rows as if occupancy had never been recorded."""
     t = Telemetry("stream")
-    t.record_exchange(100, padded_rows=100, occupied_rows=0)
+    t.record_exchange(ExchangeStats(rows=100, padded_rows=100, occupied_rows=0))
     s = t.snapshot(loads=FLAT)
     assert s.exchange_padding_fraction == 0.0
     # unrecorded occupancy still falls back to shipped rows
-    t.record_exchange(50, padded_rows=100)
+    t.record_exchange(ExchangeStats(rows=50, padded_rows=100))
     s2 = t.snapshot(loads=FLAT)
     assert s2.exchange_occupied_rows == 50
     assert s2.exchange_padding_fraction == pytest.approx(0.5)

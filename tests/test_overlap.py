@@ -13,6 +13,7 @@ state — differing only in wall-clock attribution (``exchange_wall_s``,
 import numpy as np
 import pytest
 
+from repro.exchange import ExchangeStats
 from repro.control import Telemetry
 from repro.core.drm import DRConfig
 from repro.core.streaming import StreamingJob
@@ -115,11 +116,11 @@ def test_overlap_fraction_signal():
     t = Telemetry("test")
     sig = t.snapshot(loads=np.ones(2))
     assert sig.overlap_fraction == 0.0
-    t.record_exchange(10, 0.5)  # fused serial record: no phases
+    t.record_exchange(ExchangeStats(rows=10, wall_s=0.5))  # fused serial record: no phases
     sig = t.snapshot(loads=np.ones(2))
     assert sig.overlap_fraction == 0.0
-    t.record_exchange(10, 0.2, count_wall_s=0.2)
-    t.record_exchange(0, padded_rows=0, ship_wall_s=0.1, hidden_wall_s=0.3)
+    t.record_exchange(ExchangeStats(rows=10, wall_s=0.2, count_wall_s=0.2))
+    t.record_exchange(ExchangeStats(rows=0, ship_wall_s=0.1, hidden_wall_s=0.3))
     sig = t.snapshot(loads=np.ones(2))
     assert sig.exchange_count_wall_s == pytest.approx(0.2)
     assert sig.exchange_ship_wall_s == pytest.approx(0.1)
@@ -129,10 +130,10 @@ def test_overlap_fraction_signal():
 
 def test_backend_wall_ewma_accumulates_across_windows():
     t = Telemetry("test")
-    t.record_exchange(10, 0.4, backend="dense")
+    t.record_exchange(ExchangeStats(rows=10, wall_s=0.4, backend="dense"))
     t.snapshot(loads=np.ones(2))  # window reset must not clear the EWMA
-    t.record_exchange(10, 0.2, backend="dense")
-    t.record_exchange(10, 0.1, backend="ragged")
+    t.record_exchange(ExchangeStats(rows=10, wall_s=0.2, backend="dense"))
+    t.record_exchange(ExchangeStats(rows=10, wall_s=0.1, backend="ragged"))
     sig = t.snapshot(loads=np.ones(2))
     assert sig.backend_wall_ewma["dense"] == pytest.approx(0.7 * 0.4 + 0.3 * 0.2)
     assert sig.backend_wall_ewma["ragged"] == pytest.approx(0.1)
