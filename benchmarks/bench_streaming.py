@@ -29,9 +29,26 @@ worker's entire fair share — the regime where no repartition or resize can
 balance (moving the key just moves the straggler).  The split profile must
 reach imbalance <= the grow trigger while the no-split control stays above
 it, and both must agree bit-for-bit on every key's aggregate (the split
-run's scattered partials sum to the unsplit answer)."""
+run's scattered partials sum to the unsplit answer).
+
+The topology scenario (``fig6/inter_host_rows/*``) runs the skewed stream
+on a two-host profile — 8 lanes, 4 per host, in a subprocess with 8 forced
+XLA host devices (device count must be fixed before jax init; the parent
+bench process keeps its default) — under flat dense vs. the hierarchical
+two-tier transport.  Both must agree bit-for-bit on the keyed state, the
+per-class columns land in the CSV, and the hierarchical run must ship
+*strictly fewer* inter-host rows than the flat dense pad (the CI gate).
+``fig6/topology_decisions/*`` compares the control plane's recorded
+decision trajectory locality-aware vs. locality-blind on one imbalanced
+window: the 10x inter-host price must flip at least one candidate-plan
+choice in the decision log."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import numpy as np
@@ -159,6 +176,7 @@ def run(batches: int = 6, batch_size: int = 16_384):
     rows.extend(_nonstationary(batches, batch_size, state_capacity))
     rows.extend(_auto_backend(batches, batch_size, state_capacity))
     rows.extend(_hot_key(batches, batch_size, state_capacity))
+    rows.extend(_topology(batches, batch_size))
     return rows
 
 
@@ -379,6 +397,154 @@ def _hot_key(batches: int, batch_size: int, state_capacity: int):
         if len(set(got.values())) != 1:
             raise AssertionError(f"split count mismatch at key={int(key)}: {got}")
     return rows
+
+
+_TOPOLOGY_SCRIPT = textwrap.dedent(
+    """
+    import json, os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.core.drm import DRConfig
+    from repro.core.streaming import StreamingJob
+    from repro.data.generators import drifting_zipf
+    from repro.exchange import ExchangeTopology
+
+    batches, batch_size = int(sys.argv[1]), int(sys.argv[2])
+    mesh = jax.make_mesh((8,), ("data",))
+    # the two-host profile: 8 lanes, lanes 0-3 on host 0, 4-7 on host 1
+    topo = ExchangeTopology(num_lanes=8, lanes_per_host=4)
+    stream = list(drifting_zipf(batches, batch_size, num_keys=4_000,
+                                exponent=1.4, drift_every=2,
+                                drift_fraction=0.4, seed=13))
+    out = {}
+    jobs = {}
+    for be in ("dense", "hierarchical"):
+        job = StreamingJob(
+            mesh=mesh, num_partitions=8, state_capacity=8_192,
+            dr=DRConfig(imbalance_trigger=1.1, migration_cost_weight=0.1),
+            exchange_backend=be, topology=topo,
+        )
+        ms = job.run(stream)
+        jobs[be] = job
+        out[be] = {
+            "by_class": [int(x) for x in
+                         np.sum([m.shipped_rows_by_class for m in ms], axis=0)],
+            "shipped": int(sum(m.shipped_rows for m in ms)),
+            "step_wall_ms": float(np.mean([m.exchange_wall_s for m in ms[1:]])) * 1e3,
+            "actions": [m.action for m in ms],
+            "overflow": int(sum(m.overflow for m in ms)),
+            "inter_host_fraction": float(
+                np.sum([m.shipped_rows_by_class[2] for m in ms])
+                / max(sum(m.shipped_rows for m in ms), 1)),
+        }
+    # bit-identity gate: both transports, same keyed state, exactly
+    sample = np.unique(np.concatenate(stream))[::64]
+    for key in sample:
+        got = {be: jobs[be].state_count(int(key)) for be in jobs}
+        if len(set(got.values())) != 1:
+            raise AssertionError(f"topology count mismatch key={int(key)}: {got}")
+    print("TOPOLOGY-RESULT " + json.dumps(out))
+    """
+)
+
+
+def _topology(batches: int, batch_size: int):
+    """Two-host locality profile: flat dense vs. the hierarchical two-tier
+    transport on 8 real shards (subprocess: the device count must be fixed
+    before jax initializes).  Emits per-class shipped rows + exchange wall
+    per backend and gates on strictly fewer inter-host rows under the
+    hierarchical transport; the decision-flip comparison runs in-process
+    (host-side plan pricing needs no collective)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _TOPOLOGY_SCRIPT, str(batches), str(batch_size)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    marker = "TOPOLOGY-RESULT "
+    line = next((l for l in proc.stdout.splitlines() if l.startswith(marker)), None)
+    if proc.returncode != 0 or line is None:
+        raise AssertionError(
+            f"two-host topology subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    out = json.loads(line[len(marker):])
+    # identical control trajectories: the transport must not change the
+    # control plane's view of the stream (same contract as dense-vs-ragged)
+    if out["dense"]["actions"] != out["hierarchical"]["actions"]:
+        raise AssertionError(f"transport changed the trajectory: {out}")
+    if out["dense"]["overflow"] != out["hierarchical"]["overflow"]:
+        raise AssertionError(f"overflow accounting diverged: {out}")
+    rows = []
+    for be in ("dense", "hierarchical"):
+        r = out[be]
+        rows.append((f"fig6/inter_host_rows/{be}", r["by_class"][2],
+                     f"rows crossing the host boundary over {batches} batches "
+                     f"(fraction {r['inter_host_fraction']:.3f})",
+                     be, tuple(r["by_class"])))
+        rows.append((f"fig6/topology_exchange_step_wall_ms/{be}",
+                     r["step_wall_ms"],
+                     "mean exchange-path wall per batch (two-host profile)",
+                     be, tuple(r["by_class"])))
+    # the CI gate: the two-tier exchange concentrates cross-host traffic
+    # into the counted inter hop — strictly fewer inter-host rows than the
+    # flat dense pad on this skewed profile
+    d, h = out["dense"]["by_class"][2], out["hierarchical"]["by_class"][2]
+    assert 0 < h < d, (h, d)
+    rows.extend(_topology_decisions())
+    return rows
+
+
+def _topology_decisions():
+    """Locality-aware vs. locality-blind control on identical windows: the
+    same imbalanced signal sequence through two DRMasters, one carrying the
+    two-host topology with the 10x inter-host price, one flat.  Both
+    decision logs are recorded; the priced one must flip at least one
+    choice (typically declining a repartition whose balance gain does not
+    pay for cross-host state movement)."""
+    from repro.control import Telemetry
+    from repro.core.drm import DRMaster
+    from repro.core.partitioner import uniform_partitioner
+    from repro.exchange import ExchangeTopology
+
+    rng = np.random.default_rng(29)
+    keys = np.repeat(np.arange(64), rng.integers(1, 200, 64)).astype(np.int32)
+    # every lane its own host: all cross-worker movement is inter-host,
+    # priced 400x — the blind DRM sees the same plans at flat cost
+    topo = ExchangeTopology(num_lanes=4, lanes_per_host=1,
+                            class_weights=(0.0, 1.0, 400.0))
+    logs = {}
+    for tag, t in (("blind", None), ("aware", topo)):
+        drm = DRMaster(
+            uniform_partitioner(4, seed=0),
+            DRConfig(imbalance_trigger=1.05, migration_cost_weight=1.0),
+            exchange_topology=t,
+        )
+        for step in range(4):
+            drm.observe(keys.reshape(1, -1),
+                        np.ones((1, len(keys)), np.int32),
+                        total_records=float(len(keys)))
+            tel = Telemetry("bench")
+            tel.record_batch(float(len(keys)))
+            loads = np.bincount(
+                drm.partitioner.lookup_np(keys), minlength=4
+            ).astype(float)
+            sig = tel.snapshot(loads=loads, num_workers=4, at_safe_point=True)
+            drm.evaluate(sig)
+        logs[tag] = [(r.kind, r.taken) for r in drm.decisions.records]
+    flips = sum(1 for a, b in zip(logs["aware"], logs["blind"]) if a != b)
+    taken = {tag: sum(1 for _, t in log if t) for tag, log in logs.items()}
+    # acceptance: locality pricing flipped at least one recorded choice,
+    # in the direction of moving less across hosts
+    assert flips >= 1, logs
+    assert taken["aware"] < taken["blind"], (taken, logs)
+    return [
+        ("fig6/topology_decisions/blind", taken["blind"],
+         "actions taken with flat plan pricing (4 safe points)"),
+        ("fig6/topology_decisions/aware", taken["aware"],
+         "actions taken with 400x inter-host pricing (same windows)"),
+        ("fig6/topology_decisions/flipped", flips,
+         "safe points where locality pricing changed the recorded choice"),
+    ]
 
 
 def _resize_cost(base_n: int, target_n: int, batch_size: int, state_capacity: int):

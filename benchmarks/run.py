@@ -1,10 +1,13 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived,backend`` CSV rows (value column is the
-figure's metric: imbalance ratio / speedup / us, per the row name; the
-backend column tags rows measured under a specific exchange transport —
-``-`` for backend-independent rows).  Modules return either 3-tuples
-``(name, value, derived)`` or 4-tuples ``(name, value, derived, backend)``.
+Prints ``name,us_per_call,derived,backend,rows_self,rows_intra,rows_inter``
+CSV rows (value column is the figure's metric: imbalance ratio / speedup /
+us, per the row name; the backend column tags rows measured under a
+specific exchange transport — ``-`` for backend-independent rows; the three
+trailing per-distance-class columns split a row's exchanged rows by lane
+locality — self / intra-host / inter-host, blank for rows with no class
+split).  Modules return 3-tuples ``(name, value, derived)``, 4-tuples
+``(..., backend)``, or 5-tuples ``(..., backend, (self, intra, inter))``.
 
     python -m benchmarks.run [only] [--smoke] [--out bench.csv]
 
@@ -55,7 +58,7 @@ def main(argv: list[str] | None = None) -> int:
         lines.append(line)
         print(line)
 
-    emit("name,us_per_call,derived,backend")
+    emit("name,us_per_call,derived,backend,rows_self,rows_intra,rows_inter")
     failures: list[tuple[str, BaseException]] = []
     for name in MODULES:
         if args.only and args.only not in name:
@@ -67,12 +70,14 @@ def main(argv: list[str] | None = None) -> int:
             rows = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
-            emit(f"{name}/FAILED,0,{type(e).__name__}: {e},-")
+            emit(f"{name}/FAILED,0,{type(e).__name__}: {e},-,,,")
             continue
         for row in rows:
             row_name, value, derived = row[:3]
             backend = row[3] if len(row) > 3 else "-"
-            emit(f"{row_name},{value:.6g},{derived},{backend}")
+            by_class = row[4] if len(row) > 4 else ("", "", "")
+            cls = ",".join(str(c) for c in by_class)
+            emit(f"{row_name},{value:.6g},{derived},{backend},{cls}")
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
     if args.out:

@@ -10,7 +10,10 @@ Mapping onto the paper's §4 decision rules:
   ``host.exchange_backend`` — the dense transport pads every lane to the
   peak, a ragged transport averages real rows) evaluated on the candidate
   plan — real exchange-lane accounting instead of the old
-  heavy-key-frequency sum.
+  heavy-key-frequency sum.  With a ``host.exchange_topology`` the estimate
+  is locality-priced: inter-host cells of the candidate transfer weigh
+  ~10x intra-host ones, so equal-balance plans that keep rows inside a
+  host win.
 * :class:`ResizePolicy` — the same trigger one level up: sustained imbalance
   beyond what KIP can spread over the current bins grows the topology;
   sustained balance (or per-worker throughput below the capacity target —
@@ -141,7 +144,8 @@ class RepartitionPolicy:
                       hist.tail_mass / len(old_hp))
         plan = dataclasses.replace(plan, transfer=transfer)
         est = exchange_lane_cost(plan, num_workers=signals.num_workers,
-                                 backend=getattr(host, "exchange_backend", None))
+                                 backend=getattr(host, "exchange_backend", None),
+                                 topology=getattr(host, "exchange_topology", None))
         cost = cfg.migration_cost_weight * est
         if gain <= cost:
             return NoOp(f"gain {gain:.3f} <= cost {cost:.3f}",
@@ -292,7 +296,8 @@ class SplitPolicy:
             num_src=n, num_dst=n,
         )
         est = exchange_lane_cost(plan, num_workers=signals.num_workers,
-                                 backend=getattr(host, "exchange_backend", None))
+                                 backend=getattr(host, "exchange_backend", None),
+                                 topology=getattr(host, "exchange_topology", None))
         relief = top_share * (1.0 - 1.0 / d)
         cost = cfg.migration_cost_weight * est
         if relief <= cost:

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 
 import numpy as np
 
@@ -68,6 +67,11 @@ class Signals:
     exchange_replica_rows: np.ndarray | None = None  # int64[N] rows landed per
                                            # partition from *split* hot keys
                                            # this window (None: nothing split)
+    exchange_rows_by_class: np.ndarray | None = None  # int64[C] shipped rows by
+                                           # lane distance class (self /
+                                           # intra-host / inter-host); None
+                                           # when no exchange carried a
+                                           # topology this window
     queue_depths: np.ndarray | None = None # serving replica queue depths
     state_rows: int = 0                    # live keyed-state rows (migration scale)
     at_safe_point: bool = True             # decisions may act only when True
@@ -127,6 +131,20 @@ class Signals:
         return rows / self.exchange_padded_rows
 
     @property
+    def inter_host_fraction(self) -> float:
+        """Share of the window's shipped rows that crossed a host boundary
+        (the slow tier) — the topology layer's headline signal.  0.0 when no
+        exchange carried a topology (the flat world: nothing is known to
+        cross hosts)."""
+        by = self.exchange_rows_by_class
+        if by is None:
+            return 0.0
+        total = float(np.sum(by))
+        if total <= 0.0:
+            return 0.0
+        return float(by[-1]) / total
+
+    @property
     def overlap_fraction(self) -> float:
         """Share of the exchange's ship wall the split-phase pipeline hid
         behind host work this window: ``hidden / (hidden + ship)``.  0.0 for
@@ -178,6 +196,7 @@ class Telemetry:
         self._hidden_wall_s = 0.0
         self._lane_overflow: np.ndarray | None = None
         self._replica_rows: np.ndarray | None = None
+        self._rows_by_class: np.ndarray | None = None
         self._queues: np.ndarray | None = None
         # the window clock starts at the first recording, not at reset:
         # setup/idle time between construction (or a checkpoint) and the
@@ -209,7 +228,7 @@ class Telemetry:
         out[: len(v)] += v
         return out
 
-    def record_exchange(self, stats: ExchangeStats, wall_s=None, **legacy) -> None:
+    def record_exchange(self, stats: ExchangeStats, *extra, **legacy) -> None:
         """Fold one exchange's :class:`ExchangeStats` into the window.
 
         ``stats`` is constructed *by the exchange plane* —
@@ -217,34 +236,25 @@ class Telemetry:
         exchanges, ``repro.core.shuffle.shuffle_stats`` /
         ``migrate_stats`` for the mapped steps, ``MoEOut.exchange_stats()``
         for expert dispatch — so consumers never assemble measurement
-        fields themselves and new fields (``replica_rows``) don't ripple
-        through every call site.
+        fields themselves and new fields (``replica_rows``,
+        ``rows_by_class``) don't ripple through every call site.
 
         ``stats.backend`` (with a positive ``wall_s``) feeds the long-lived
         per-backend wall EWMA (``wall_ewma``) the BackendPolicy reads as
         measured evidence.
 
-        .. deprecated::
-            The historical keyword form ``record_exchange(rows, wall_s=...,
-            padded_rows=..., ...)`` still works for one release, raising a
-            :class:`DeprecationWarning`; the kwargs map 1:1 onto
-            :class:`ExchangeStats` fields.
+        The historical keyword-pile form ``record_exchange(rows,
+        wall_s=..., padded_rows=..., ...)`` was removed after its one
+        deprecation release (the kwargs mapped 1:1 onto
+        :class:`ExchangeStats` fields) — any extra argument is a
+        :class:`TypeError` now.
         """
-        if not isinstance(stats, ExchangeStats):
-            warnings.warn(
-                "Telemetry.record_exchange(rows, ...) with loose kwargs is "
-                "deprecated; pass one plane-constructed ExchangeStats "
-                "(ExchangeResult.stats(), shuffle_stats(), migrate_stats())",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            stats = ExchangeStats(
-                rows=int(stats), wall_s=float(wall_s or 0.0), **legacy
-            )
-        elif wall_s is not None or legacy:
+        if not isinstance(stats, ExchangeStats) or extra or legacy:
             raise TypeError(
-                "record_exchange(stats) takes no extra arguments — put the "
-                "measurements on the ExchangeStats record"
+                "record_exchange takes exactly one plane-constructed "
+                "ExchangeStats (ExchangeResult.stats(), shuffle_stats(), "
+                "migrate_stats()) — the loose-kwargs form was removed; put "
+                "the measurements on the ExchangeStats record"
             )
         self._touch()
         self._exchange_rows += int(stats.rows)
@@ -277,6 +287,10 @@ class Telemetry:
         if stats.replica_rows is not None:
             self._replica_rows = self._fold_vector(
                 self._replica_rows, stats.replica_rows
+            )
+        if stats.rows_by_class is not None:
+            self._rows_by_class = self._fold_vector(
+                self._rows_by_class, stats.rows_by_class
             )
 
     def record_overflow(self, shuffle: int = 0, migration: int = 0) -> None:
@@ -315,6 +329,7 @@ class Telemetry:
             backend_wall_ewma=dict(self.wall_ewma) if self.wall_ewma else None,
             lane_overflow=self._lane_overflow,
             exchange_replica_rows=self._replica_rows,
+            exchange_rows_by_class=self._rows_by_class,
             queue_depths=self._queues,
             state_rows=int(state_rows),
             at_safe_point=at_safe_point,

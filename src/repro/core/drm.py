@@ -51,6 +51,7 @@ from repro.core.partitioner import (
     resize_partitioner,
 )
 from repro.exchange.backends import resolve_backend
+from repro.exchange.spec import ExchangeTopology
 
 __all__ = ["DRConfig", "DRMaster", "DRDecision"]
 
@@ -140,13 +141,19 @@ class DRDecision:
 class DRMaster:
     def __init__(self, initial: Partitioner, config: DRConfig = DRConfig(),
                  *, consumer: str = "stream",
-                 exchange_backend: str | object | None = None):
+                 exchange_backend: str | object | None = None,
+                 exchange_topology: "ExchangeTopology | None" = None):
         self.config = config
         self.partitioner = initial
         # the transport the hosted runtime exchanges through — its sizing
         # rule prices candidate migration plans (exchange_lane_cost), so the
         # repartition gate reflects what would actually move.  None = dense.
         self.exchange_backend = resolve_backend(exchange_backend)
+        # the lanes' physical locality — with it, plan pricing weighs each
+        # (src, dst) cell by distance class (exchange_lane_cost's topology
+        # kwarg), so equal-balance plans that stay inside a host win.
+        # None = the flat world: every lane priced alike.
+        self.exchange_topology = exchange_topology
         self.sketch = CounterSketch(config.sketch_capacity, decay=config.sketch_decay)
         self.batches_seen = 0
         self.last_repartition = -(10**9)
@@ -431,6 +438,15 @@ class DRMaster:
             "last_backend_switch": np.int64(self.last_backend_switch),
             "backend_streak": np.int64(self.backend_streak),
             "exchange_backend": np.str_(self.exchange_backend.name),
+            # topology rides the snapshot as its three scalars (absent on a
+            # flat job so legacy snapshot round-trips stay byte-stable)
+            **({
+                "topology_lanes_per_host":
+                    np.int64(self.exchange_topology.lanes_per_host),
+                "topology_num_lanes": np.int64(self.exchange_topology.num_lanes),
+                "topology_class_weights": np.asarray(
+                    self.exchange_topology.class_weights, np.float64),
+            } if self.exchange_topology is not None else {}),
             # decision log: a restored job keeps its decision history
             **self.decisions.to_arrays(),
         }
@@ -447,9 +463,20 @@ class DRMaster:
             heavy_repl=(np.asarray(snap["heavy_repl"], np.int32)
                         if "heavy_repl" in snap else None),
         )
+        topo = None
+        if "topology_lanes_per_host" in snap:
+            topo = ExchangeTopology(
+                num_lanes=int(snap.get("topology_num_lanes",
+                                       snap["num_partitions"])),
+                lanes_per_host=int(snap["topology_lanes_per_host"]),
+                class_weights=tuple(
+                    np.asarray(snap["topology_class_weights"], np.float64)
+                ) if "topology_class_weights" in snap else (0.0, 1.0, 10.0),
+            )
         drm = cls(p, config, consumer=str(snap.get("decisions_consumer", "stream")),
                   exchange_backend=str(snap["exchange_backend"])
-                  if "exchange_backend" in snap else None)
+                  if "exchange_backend" in snap else None,
+                  exchange_topology=topo)
         drm.sketch._keys = np.asarray(snap["sketch_keys"])
         drm.sketch._counts = np.asarray(snap["sketch_counts"])
         drm.sketch._floor = float(snap["sketch_floor"])

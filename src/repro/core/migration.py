@@ -144,6 +144,7 @@ def exchange_lane_cost(
     num_workers: int | None = None,
     slack: float = 1.25,
     backend=None,
+    topology=None,
 ) -> float:
     """Migration-cost estimate from the *active exchange backend's* sizing
     rule.
@@ -165,6 +166,15 @@ def exchange_lane_cost(
     lanes are the accounting unit.  ``backend`` is any object with the
     :class:`~repro.exchange.backends.ExchangeBackend` ``cost`` verb (or
     ``None`` for the dense rule).
+
+    ``topology`` (an :class:`~repro.exchange.spec.ExchangeTopology`) makes
+    the estimate *locality-priced*: each (src, dst) cell of the worker-
+    folded transfer is weighted by its distance class before the backend's
+    sizing rule sees it, so a plan that moves the same mass within a host
+    is cheaper than one that scatters it across hosts — candidate plans
+    with equal balance but less inter-host traffic win, and the inter-host
+    weight (10x by default) can flip a repartition/split/placement decision
+    the flat estimate would have taken.
     """
     transfer = plan.transfer
     if transfer.size == 0:
@@ -172,6 +182,8 @@ def exchange_lane_cost(
     if num_workers is not None and num_workers > 1:
         transfer = fold_to_workers(transfer, num_workers)
         np.fill_diagonal(transfer, 0.0)
+    if topology is not None:
+        transfer = transfer * topology.weight_matrix(transfer.shape[0])
     if backend is not None:
         return float(backend.cost(None, transfer, slack=slack))
     return float(transfer.max()) * slack

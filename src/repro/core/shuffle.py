@@ -50,11 +50,13 @@ from repro.compat import shard_map
 from repro.core.hashing import KEY_SENTINEL
 from repro.core.histogram import local_topk_histogram
 from repro.core.partitioner import PartitionerTables
+from repro.exchange.spec import DISTANCE_CLASSES
 from repro.exchange import (
     ExchangeBackend,
     ExchangeResult,
     ExchangeSpec,
     ExchangeStats,
+    ExchangeTopology,
     Payload,
     PendingExchange,
     SendInfo,
@@ -84,6 +86,9 @@ class ShuffleResult(NamedTuple):
     overflow: jax.Array   # int32[]           records dropped for capacity globally
     lane_overflow: jax.Array  # int32[W]      global per-lane capacity drops
     shipped_rows: jax.Array   # int32[]       rows the backend moved, all workers
+    shipped_rows_by_class: jax.Array  # int32[C] shipped split by lane distance
+                          # class (self/intra-host/inter-host); zeros when the
+                          # spec carries no topology
 
 
 class ShuffleStart(NamedTuple):
@@ -96,6 +101,7 @@ class ShuffleStart(NamedTuple):
     overflow: jax.Array       # int32[]
     lane_overflow: jax.Array  # int32[W]
     shipped_rows: jax.Array   # int32[]
+    shipped_rows_by_class: jax.Array  # int32[C]
 
 
 class _Pending(NamedTuple):
@@ -140,6 +146,7 @@ def make_shuffle_step(
     seed: int = 0,
     axis: str = "data",
     backend: str | ExchangeBackend | None = None,
+    topology: ExchangeTopology | None = None,
 ):
     """Build the jitted shuffle step for a fixed mesh/capacity/topology.
 
@@ -160,7 +167,9 @@ def make_shuffle_step(
     """
     num_workers = mesh.shape[axis]
     ex = make_exchange(
-        ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis), backend
+        ExchangeSpec(num_lanes=num_workers, capacity=capacity, axis=axis,
+                     topology=topology),
+        backend,
     )
     fills = (KEY_SENTINEL, 0, 0)
 
@@ -188,7 +197,12 @@ def make_shuffle_step(
         overflow = jax.lax.psum(started.send.overflow, axis)
         lane_overflow = jax.lax.psum(started.send.lane_overflow, axis)
         shipped = jax.lax.psum(started.shipped_rows, axis)
-        start = ShuffleStart(loads, hk[None], hc[None], overflow, lane_overflow, shipped)
+        by_class = started.shipped_rows_by_class
+        if by_class is None:  # flat spec: no topology, keep zeros
+            by_class = jnp.zeros(DISTANCE_CLASSES, jnp.int32)
+        by_class = jax.lax.psum(by_class, axis)
+        start = ShuffleStart(loads, hk[None], hc[None], overflow, lane_overflow,
+                             shipped, by_class)
         return _pack_pending(started), start
 
     def _finish_local(pending):
@@ -200,7 +214,8 @@ def make_shuffle_step(
         pending, start = _start_local(tables, keys, vals, valid)
         rk, rv, rva, rp = _finish_local(pending)
         return (rk, rv, rva, rp, start.loads, start.hist_keys, start.hist_counts,
-                start.overflow, start.lane_overflow, start.shipped_rows)
+                start.overflow, start.lane_overflow, start.shipped_rows,
+                start.shipped_rows_by_class)
 
     in_specs = (
         (P(), P(), P(), P()),  # partitioner tables replicated
@@ -210,12 +225,13 @@ def make_shuffle_step(
     )
     mapped = shard_map(
         _local, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis), P(), P(), P()),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis),
+                   P(), P(), P(), P()),
         check_vma=False,
     )
     start_mapped = shard_map(
         _start_local, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(axis), ShuffleStart(P(), P(axis), P(axis), P(), P(), P())),
+        out_specs=(P(axis), ShuffleStart(P(), P(axis), P(axis), P(), P(), P(), P())),
         check_vma=False,
     )
     finish_mapped = shard_map(
@@ -256,6 +272,7 @@ def make_migrate_step(
     axis: str = "data",
     spec: ExchangeSpec | None = None,
     backend: str | ExchangeBackend | None = None,
+    topology: ExchangeTopology | None = None,
 ):
     """Jitted operator-state migration for a partitioner swap.
 
@@ -285,7 +302,8 @@ def make_migrate_step(
     num_workers = mesh.shape[axis]
     if spec is None:
         cap = state_capacity if lane_capacity is None else min(lane_capacity, state_capacity)
-        spec = ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis)
+        spec = ExchangeSpec(num_lanes=num_workers, capacity=cap, axis=axis,
+                            topology=topology)
     ex = make_exchange(spec, backend)
     fills = (KEY_SENTINEL, 0)
 
@@ -331,6 +349,10 @@ def make_migrate_step(
         overflow = jax.lax.psum(started.send.overflow, axis)
         lane_overflow = jax.lax.psum(started.send.lane_overflow, axis)
         shipped = jax.lax.psum(started.shipped_rows, axis)
+        by_class = started.shipped_rows_by_class
+        if by_class is None:  # flat spec: no topology, keep zeros
+            by_class = jnp.zeros(DISTANCE_CLASSES, jnp.int32)
+        by_class = jax.lax.psum(by_class, axis)
         return (
             _pack_pending(started),
             kept_keys[None],
@@ -341,6 +363,7 @@ def make_migrate_step(
             overflow,
             lane_overflow,
             shipped,
+            by_class,
         )
 
     def _finish_local(pending):
@@ -349,21 +372,21 @@ def make_migrate_step(
         return rk[None], rv[None], rva[None]
 
     def _local(new_tables, state_keys, state_vals):
-        pending, kk, vv, kva, moved, total, ov, lov, shipped = _start_local(
+        pending, kk, vv, kva, moved, total, ov, lov, shipped, by = _start_local(
             new_tables, state_keys, state_vals
         )
         rk, rv, rva = _finish_local(pending)
-        return kk, vv, kva, rk, rv, rva, moved, total, ov, lov, shipped
+        return kk, vv, kva, rk, rv, rva, moved, total, ov, lov, shipped, by
 
     in_specs = ((P(), P(), P(), P()), P(axis), P(axis))
     mapped = shard_map(
         _local, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(axis),) * 6 + (P(), P(), P(), P(), P()),
+        out_specs=(P(axis),) * 6 + (P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )
     start_mapped = shard_map(
         _start_local, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(axis),) * 4 + (P(), P(), P(), P(), P()),
+        out_specs=(P(axis),) * 4 + (P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )
     finish_mapped = shard_map(
@@ -421,6 +444,9 @@ def shuffle_stats(
     """
     shipped = int(np.asarray(res.shipped_rows)) // num_workers
     occupied = max(int(np.asarray(res.loads).sum()) - int(res.overflow), 0) // num_workers
+    by_class = None
+    if spec.topology is not None and res.shipped_rows_by_class is not None:
+        by_class = np.asarray(res.shipped_rows_by_class, np.int64) // num_workers
     return ExchangeStats(
         rows=shipped,
         wall_s=wall_s,
@@ -430,6 +456,7 @@ def shuffle_stats(
         count_wall_s=count_wall_s,
         backend=backend,
         replica_rows=replica_rows,
+        rows_by_class=by_class,
     )
 
 
@@ -443,13 +470,19 @@ def migrate_stats(
     lane_overflow=None,
     wall_s: float = 0.0,
     backend: str | None = None,
+    shipped_rows_by_class=None,
 ) -> ExchangeStats:
     """:class:`ExchangeStats` for one state migration.
 
     ``buffer_rows`` is the per-worker lane provision (``W * lane_cap``),
     ``moved_rows`` the rows that actually crossed workers (globally summed,
-    like ``shipped_rows`` and ``overflow``).
+    like ``shipped_rows`` and ``overflow``); ``shipped_rows_by_class`` the
+    globally-summed per-distance-class split (``None`` on a flat spec).
     """
+    by_class = None
+    if shipped_rows_by_class is not None:
+        by_class = np.asarray(shipped_rows_by_class, np.int64)
+        by_class = None if not by_class.any() else by_class // num_workers
     return ExchangeStats(
         rows=int(np.asarray(shipped_rows)) // num_workers,
         wall_s=wall_s,
@@ -457,4 +490,5 @@ def migrate_stats(
         occupied_rows=max(int(moved_rows) - int(overflow), 0) // num_workers,
         lane_overflow=None if lane_overflow is None else np.asarray(lane_overflow),
         backend=backend,
+        rows_by_class=by_class,
     )

@@ -104,7 +104,13 @@ from repro.core.shuffle import (
     shuffle_stats,
 )
 from repro.core.state import empty_state, merge_into
-from repro.exchange import ExchangeSpec, ExchangeStats, resolve_backend
+from repro.exchange import (
+    ExchangeSpec,
+    ExchangeStats,
+    ExchangeTopology,
+    resolve_backend,
+)
+from repro.exchange.spec import DISTANCE_CLASSES
 
 __all__ = ["StreamingJob", "BatchMetrics"]
 
@@ -133,6 +139,9 @@ class BatchMetrics:
                                   # — the ship is hidden behind host work)
     overlapped: bool = False    # the batch ran the split-phase pipeline
     split_keys: int = 0         # hot keys replicated after this safe point
+    shipped_rows_by_class: tuple = (0, 0, 0)  # shipped_rows split by lane
+                                # distance class (self / intra-host /
+                                # inter-host, per worker); zeros on flat jobs
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -162,6 +171,7 @@ class StreamingJob:
         hist_k: int = 64,
         seed: int = 0,
         exchange_backend: str | None = None,
+        topology: ExchangeTopology | None = None,
     ):
         self.mesh = mesh or _default_mesh()
         self.num_workers = self.mesh.shape["data"]
@@ -178,12 +188,18 @@ class StreamingJob:
         # the DRM gets the same backend so policy costing prices the plan
         # by what this job's transport would actually move
         self.exchange_backend = resolve_backend(exchange_backend or "dense")
+        # lane locality (``exchange_topology_of(mesh)``): rides every
+        # ExchangeSpec the job builds, splits shipped-row telemetry by
+        # distance class, and makes the DRM's plan pricing locality-aware.
+        # ``None`` keeps the flat world — everything behaves as before.
+        self.exchange_topology = topology
         cfg = dr or DRConfig()
         heavy_cap = heavy_capacity_for(cfg.lam, self.num_partitions)
         part = initial or uniform_partitioner(
             self.num_partitions, DEFAULT_NUM_HOSTS, seed, heavy_capacity=heavy_cap
         )
-        self.drm = DRMaster(part, cfg, exchange_backend=self.exchange_backend)
+        self.drm = DRMaster(part, cfg, exchange_backend=self.exchange_backend,
+                            exchange_topology=topology)
         self.telemetry = Telemetry("stream")
         self._shuffle = None
         self._shuffle_sig = None  # (capacity, num_partitions) the step was built for
@@ -261,7 +277,10 @@ class StreamingJob:
         if self._shuffle is not None and sig == self._shuffle_sig:
             return
         self._shuffle_sig = sig
-        self._shuffle_spec = ExchangeSpec(num_lanes=self.num_workers, capacity=cap, axis="data")
+        self._shuffle_spec = ExchangeSpec(
+            num_lanes=self.num_workers, capacity=cap, axis="data",
+            topology=self.exchange_topology,
+        )
         self._shuffle = make_shuffle_step(
             self.mesh,
             num_partitions=self.num_partitions,
@@ -270,6 +289,7 @@ class StreamingJob:
             num_hosts=self.drm.partitioner.num_hosts,
             seed=self.seed,
             backend=self.exchange_backend,
+            topology=self.exchange_topology,
         )
 
     def _migrate_step(self, lane_capacity: int):
@@ -290,7 +310,8 @@ class StreamingJob:
                 state_capacity=self.state_capacity,
                 num_hosts=self.drm.partitioner.num_hosts,
                 seed=self.seed,
-                spec=ExchangeSpec(num_lanes=self.num_workers, capacity=cap, axis="data"),
+                spec=ExchangeSpec(num_lanes=self.num_workers, capacity=cap,
+                                  axis="data", topology=self.exchange_topology),
                 backend=self.exchange_backend,
             )
         return self._migrate_steps[cap], cap
@@ -400,14 +421,14 @@ class StreamingJob:
         # backend switch rebuilds the steps the in-flight finish came from.
         if action.taken:
             self._drain_inflight()
-        rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
-            0.0, 0, 0, 0, 0, 0
+        (rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved,
+         mig_by_class) = 0.0, 0, 0, 0, 0, 0, None
         if isinstance(action, Resize):
-            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
-                self._apply_resize(action.target)
+            (rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped,
+             mig_moved, mig_by_class) = self._apply_resize(action.target)
         elif isinstance(action, Repartition):
-            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
-                self._migrate_state(action.prev)
+            (rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped,
+             mig_moved, mig_by_class) = self._migrate_state(action.prev)
         elif isinstance(action, Unsplit):
             # combiner-side merge: the DRM already removed the key from the
             # replica table; a home-routed migration off the still-split
@@ -415,8 +436,9 @@ class StreamingJob:
             # the key's home, where merge_into sums them.  The home diff is
             # empty (homes never changed) so the plan can't size the lanes —
             # full_lanes provisions for the off-home partials it can't see.
-            rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved = \
-                self._migrate_state(action.prev, full_lanes=True)
+            (rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped,
+             mig_moved, mig_by_class) = self._migrate_state(
+                action.prev, full_lanes=True)
         elif isinstance(action, SwitchBackend):
             # the DRM already installed the new transport (note_backend_switch);
             # the job adopts it and rebuilds its jitted steps, exactly like a
@@ -431,8 +453,17 @@ class StreamingJob:
                 moved_rows=mig_moved,
                 overflow=mig_overflow,
                 num_workers=w,
+                shipped_rows_by_class=mig_by_class,
             ))
             self.telemetry.record_overflow(migration=mig_overflow)
+
+        # per-class shipped rows (shuffle + migration, per worker) for the
+        # locality benches; zeros when the job carries no topology
+        by_class = np.zeros(DISTANCE_CLASSES, np.int64)
+        if stats.rows_by_class is not None:
+            by_class += stats.rows_by_class
+        if mig_by_class is not None:
+            by_class += np.asarray(mig_by_class, np.int64) // w
 
         m = BatchMetrics(
             batch=len(self.metrics),
@@ -462,6 +493,7 @@ class StreamingJob:
             exchange_wall_s=exchange_wall,
             overlapped=overlap,
             split_keys=len(self.drm.split_keys),
+            shipped_rows_by_class=tuple(int(x) for x in by_class),
         )
         # the host wall since the count sync ran under this batch's (or the
         # migration's) in-flight ship — that's the latency the overlap hid.
@@ -510,7 +542,7 @@ class StreamingJob:
         self._shuffle_sig = None
         self._migrate_steps.clear()
 
-    def _apply_resize(self, n: int) -> tuple[float, int, int, int, int, int]:
+    def _apply_resize(self, n: int):
         """Execute a resize at a safe point: re-plan cross-size, migrate
         state through freshly sized exchange lanes, rebuild the step cache."""
         old = self.drm.partitioner
@@ -524,17 +556,19 @@ class StreamingJob:
         return stats
 
     def _migrate_state(self, old_part: Partitioner, *,
-                       full_lanes: bool = False) -> tuple[float, int, int, int, int, int]:
+                       full_lanes: bool = False):
         """Ship keyed state to where ``self.drm.partitioner`` now maps it.
 
         Plans on the driver (``plan_migration`` diffs the partitioners over
         the live keys — cross-size safe), sizes the exchange lanes from the
         plan (``migration_capacity``), and folds received rows back into the
         local state tables.  Returns ``(relative_migration, overflow,
-        buffer_rows, planned_lane_rows, shipped_rows, moved_rows)`` —
-        ``buffer_rows`` is the per-worker provision, ``shipped_rows`` what
-        the backend measured moving, ``moved_rows`` the rows that actually
-        crossed workers (the occupancy side of the telemetry).
+        buffer_rows, planned_lane_rows, shipped_rows, moved_rows,
+        shipped_rows_by_class)`` — ``buffer_rows`` is the per-worker
+        provision, ``shipped_rows`` what the backend measured moving,
+        ``moved_rows`` the rows that actually crossed workers (the occupancy
+        side of the telemetry), ``shipped_rows_by_class`` the globally
+        summed per-distance-class split (all zeros on a flat spec).
 
         ``full_lanes`` (and any installed split key) forces full-state
         lane provisioning: split partial aggregates live *off home*, so the
@@ -558,7 +592,7 @@ class StreamingJob:
             # batch's host work — bit-identical to the fused step, which
             # is the two phases traced back to back
             (pending, kk, vv, kv_valid, moved, total,
-             mig_ov, mig_lane_ov, mig_shipped) = migrate.start(
+             mig_ov, mig_lane_ov, mig_shipped, mig_by) = migrate.start(
                 tables, self._sk, self._sv)
             kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
             # interim state = kept rows only; the pending merge adds the
@@ -575,7 +609,7 @@ class StreamingJob:
         else:
             out = migrate(tables, self._sk, self._sv)
             (kk, vv, kv_valid, rk, rv, rva, moved, total,
-             mig_ov, mig_lane_ov, mig_shipped) = out
+             mig_ov, mig_lane_ov, mig_shipped, mig_by) = out
             kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
             self._sk, self._sv, _ = self._merge(kept_keys, vv, rk, rv, rva)
         rel_mig = float(moved) / max(float(total), 1e-9)
@@ -587,7 +621,8 @@ class StreamingJob:
             rows=0, lane_overflow=np.asarray(mig_lane_ov)
         ))
         return (rel_mig, int(mig_ov), mig_rows, plan_rows,
-                int(np.asarray(mig_shipped)) // self.num_workers, int(moved))
+                int(np.asarray(mig_shipped)) // self.num_workers, int(moved),
+                np.asarray(mig_by, np.int64))
 
     # ------------------------------------------------------------------
     def run(self, batches: Iterable[np.ndarray]) -> list[BatchMetrics]:
@@ -624,6 +659,13 @@ class StreamingJob:
             self.exchange_backend = self.drm.exchange_backend
         else:  # legacy snapshot predating backends: job's transport stands
             self.drm.exchange_backend = self.exchange_backend
+        if self.drm.exchange_topology is not None:
+            # snapshots carry the lane topology: a restore resumes with the
+            # same locality view (by-class telemetry + plan pricing) the
+            # snapshotted job had, whatever this object was built with
+            self.exchange_topology = self.drm.exchange_topology
+        else:  # legacy / flat snapshot: construction-time topology stands
+            self.drm.exchange_topology = self.exchange_topology
         # resume the snapshotted topology: the snapshot may have been taken
         # after an elastic resize or a backend switch, in which case this
         # job's construction-time partition count / transport is stale and

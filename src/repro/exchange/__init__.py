@@ -5,6 +5,7 @@ and :mod:`repro.exchange.backends` (transports)."""
 from repro.exchange.backends import (
     DenseBackend,
     ExchangeBackend,
+    HierarchicalBackend,
     LocalBackend,
     RaggedBackend,
     backend_name,
@@ -15,6 +16,7 @@ from repro.exchange.plane import (
     ExchangeResult,
     ExchangeSpec,
     ExchangeStats,
+    ExchangeTopology,
     Payload,
     PendingExchange,
     SendInfo,
@@ -31,6 +33,8 @@ __all__ = [
     "ExchangeResult",
     "ExchangeSpec",
     "ExchangeStats",
+    "ExchangeTopology",
+    "HierarchicalBackend",
     "LocalBackend",
     "Payload",
     "PendingExchange",

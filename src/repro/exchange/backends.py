@@ -32,6 +32,12 @@ ship:
   rows with no second count phase.
 * :class:`LocalBackend` — the ``axis=None`` single-host fast path: pure
   bucketize, no collective, zero shipped rows.
+* :class:`HierarchicalBackend` — the topology-aware two-tier exchange:
+  a dense all-to-all *within* each host followed by a stride-grouped hop
+  *across* hosts (:func:`_two_hop_a2a`), composing to the flat collective's
+  permutation bit for bit while every link round stays inside one tier.
+  Traffic is accounted per distance class — the intra tier dense-priced,
+  the inter tier by measured row counts.
 
 ``cost(spec, plan_rows)`` is each backend's sizing rule on a candidate
 migration plan — what the control plane's
@@ -52,7 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import ragged_all_to_all
-from repro.exchange.spec import ExchangeResult, ExchangeSpec, Payload, SendInfo
+from repro.exchange.spec import (
+    DISTANCE_CLASSES,
+    ExchangeResult,
+    ExchangeSpec,
+    Payload,
+    SendInfo,
+)
 from repro.kernels import ref as kref
 
 __all__ = [
@@ -60,6 +72,7 @@ __all__ = [
     "DenseBackend",
     "RaggedBackend",
     "LocalBackend",
+    "HierarchicalBackend",
     "resolve_backend",
     "backend_name",
 ]
@@ -197,6 +210,38 @@ def _count_phase_rows(spec: ExchangeSpec, payloads: tuple) -> int:
     return int(np.ceil(4 * spec.num_lanes / _row_bytes(payloads)))
 
 
+def _me(spec: ExchangeSpec) -> jax.Array:
+    """This worker's lane index, clipped into the lane range so degenerate
+    test meshes (axis size 1 simulating L lanes) stay in bounds."""
+    return jnp.minimum(jax.lax.axis_index(spec.axis), spec.num_lanes - 1)
+
+
+def _by_class_dense(spec: ExchangeSpec) -> jax.Array:
+    """Dense-priced per-class traffic: every lane ships its full capacity,
+    so the split is just (lanes of each class from this worker) x capacity.
+    The class tables are cached numpy constants on the topology — computed
+    once at spec construction, closed over by the jitted step."""
+    counts = jnp.asarray(spec.topology.class_lane_counts)[_me(spec)]
+    return (counts * spec.capacity).astype(jnp.int32)
+
+
+def _by_class_counts(spec: ExchangeSpec, counts: jax.Array) -> jax.Array:
+    """Count-priced per-class traffic: the measured per-lane occupancy
+    reduced over each distance class (one matmul against the cached
+    per-worker one-hot class masks)."""
+    onehot = jnp.asarray(spec.topology.class_onehot)[_me(spec)]  # [C, L]
+    return (onehot @ counts.astype(jnp.int32)).astype(jnp.int32)
+
+
+def _count_phase_class(spec: ExchangeSpec) -> int:
+    """Which distance class the ragged count phase is charged to: the count
+    all-to-all crosses the full axis, so its traffic rides the slowest tier
+    the topology has (statically known)."""
+    if spec.topology.num_hosts > 1:
+        return 2
+    return 1 if spec.num_lanes > 1 else 0
+
+
 def _ragged_ship(
     spec: ExchangeSpec,
     arrays_with_fill: Sequence[tuple[jax.Array, int | float]],
@@ -243,16 +288,22 @@ class DenseBackend:
         so control-plane reads never have to wait for the row ship."""
         if spec.axis is None:
             return buffers
-        return buffers._replace(shipped_rows=jnp.asarray(spec.rows, jnp.int32))
+        by = _by_class_dense(spec) if spec.topology is not None else None
+        return buffers._replace(
+            shipped_rows=jnp.asarray(spec.rows, jnp.int32),
+            shipped_rows_by_class=by,
+        )
 
     def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         """Exchange lane-major buffers across ``spec.axis`` (row j -> shard j)."""
         if spec.axis is None:
             return buffers
+        by = _by_class_dense(spec) if spec.topology is not None else None
         return buffers._replace(
             valid=_a2a(buffers.valid, spec.axis),
             payloads=tuple(_a2a(b, spec.axis) for b in buffers.payloads),
             shipped_rows=jnp.asarray(spec.rows, jnp.int32),  # the whole pad
+            shipped_rows_by_class=by,
         )
 
     def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
@@ -335,10 +386,17 @@ class RaggedBackend:
         recv_counts = _a2a(counts, spec.axis)
         # measured traffic: the rows this worker's lanes actually hold plus
         # the count phase itself, priced in bytes-normalized row units
-        shipped = (jnp.sum(counts)
-                   + _count_phase_rows(spec, buffers.payloads)).astype(jnp.int32)
+        phase_rows = _count_phase_rows(spec, buffers.payloads)
+        shipped = (jnp.sum(counts) + phase_rows).astype(jnp.int32)
+        by = None
+        if spec.topology is not None:
+            # the count phase crosses the whole axis: charge it to the
+            # slowest tier present so by-class totals still sum to shipped
+            by = _by_class_counts(spec, counts).at[_count_phase_class(spec)].add(
+                jnp.asarray(phase_rows, jnp.int32))
         return buffers._replace(
             shipped_rows=shipped, lane_counts=counts, recv_counts=recv_counts,
+            shipped_rows_by_class=by,
         )
 
     def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
@@ -388,6 +446,150 @@ class RaggedBackend:
         return float(plan_rows.sum()) / plan_rows.size * slack
 
 
+def _two_hop_a2a(x: jax.Array, axis: str, num_hosts: int,
+                 lanes_per_host: int) -> jax.Array:
+    """The hierarchical all-to-all: intra-host hop, then inter-host hop.
+
+    ``x`` is a lane-major ``[L, capacity, ...]`` send buffer over
+    ``L = num_hosts * lanes_per_host`` lanes, lane ``j`` on host
+    ``j // lanes_per_host`` at rank ``j % lanes_per_host``.  Hop 1 exchanges
+    within each host over the *rank*-destination dimension, so afterwards
+    worker ``(h, r)`` holds every row its host sends to rank ``r`` of any
+    host; hop 2 exchanges across hosts (stride-``lanes_per_host`` groups)
+    over the *host*-destination dimension, completing the permutation.  The
+    composition lands row ``B_src[dst]`` at worker ``dst`` position ``src``
+    — exactly the flat tiled all-to-all's layout, bit for bit — while each
+    link round stays inside one tier of the mesh.  Applying it twice is the
+    identity (each tiled hop is an involution and the transposes cancel),
+    so the backhaul rides the same function.
+    """
+    h, g = num_hosts, lanes_per_host
+    tail = x.shape[1:]
+    intra = [[hh * g + r for r in range(g)] for hh in range(h)]
+    inter = [[hh * g + r for hh in range(h)] for r in range(g)]
+    perm = (1, 0) + tuple(range(2, x.ndim + 1))
+    t = x.reshape((h, g) + tail).transpose(perm).reshape((g * h,) + tail)
+    t = jax.lax.all_to_all(t, axis, 0, 0, tiled=True, axis_index_groups=intra)
+    t = t.reshape((g, h) + tail).transpose(perm).reshape((h * g,) + tail)
+    return jax.lax.all_to_all(t, axis, 0, 0, tiled=True, axis_index_groups=inter)
+
+
+class HierarchicalBackend:
+    """Two-tier transport: dense intra-host hop, count-priced inter-host hop.
+
+    Composes the existing collectives as a two-level exchange over the
+    spec's :class:`~repro.exchange.spec.ExchangeTopology`: hop 1 is a dense
+    all-to-all *within* each host (cheap tier — padding is fine there),
+    hop 2 crosses hosts in stride groups (slow tier).  The composed
+    permutation is bit-identical to the flat all-to-all (see
+    :func:`_two_hop_a2a`), so unpacked rows and overflow accounting match
+    the flat backends exactly; only the *measured traffic* differs —
+    ``shipped_rows_by_class`` prices the intra tier dense (the hop-1 pad)
+    and the inter tier by real row counts, the same semantic-traffic
+    convention the ragged fallback uses on jax 0.4.x.
+
+    Without a usable topology (no topology on the spec, lanes not divisible
+    by ``lanes_per_host``, a single host, or a mesh whose axis size differs
+    from the lane count) the collective falls back to the flat dense
+    all-to-all — still bit-identical, just untiered.
+    """
+
+    name = "hierarchical"
+
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
+
+    def _plan(self, spec: ExchangeSpec) -> tuple[int, int] | None:
+        """``(num_hosts, lanes_per_host)`` when the two-hop collective
+        applies, else ``None`` — the flat dense collective."""
+        topo, l = spec.topology, spec.num_lanes
+        if topo is None:
+            return None
+        g = min(topo.lanes_per_host, l)
+        if g <= 1 or g >= l or l % g:
+            return None
+        if _static_axis_size(spec.axis) != l:
+            return None
+        return l // g, g
+
+    def _ship(self, spec: ExchangeSpec, x: jax.Array) -> jax.Array:
+        plan = self._plan(spec)
+        if plan is None:
+            return _a2a(x, spec.axis)
+        return _two_hop_a2a(x, spec.axis, *plan)
+
+    def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        """Like dense, no count phase blocks the control plane — the traffic
+        accounting is local: the intra tier ships its (statically known)
+        pad, the inter tier only the measured per-lane occupancy."""
+        if spec.axis is None:
+            return buffers
+        by = None
+        if spec.topology is not None:
+            counts = buffers.lane_counts
+            if counts is None:
+                counts = jnp.sum(buffers.valid, axis=1, dtype=jnp.int32)
+            inter = _by_class_counts(spec, counts)[2]
+            cap = spec.capacity
+            by = jnp.stack([
+                jnp.asarray(cap, jnp.int32),
+                jnp.asarray((spec.num_lanes - 1) * cap, jnp.int32),
+                inter,
+            ])
+            shipped = jnp.sum(by).astype(jnp.int32)
+        else:
+            shipped = jnp.asarray(spec.rows, jnp.int32)
+        return buffers._replace(shipped_rows=shipped, shipped_rows_by_class=by)
+
+    def a2a_finish(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        """Move the rows through the two-hop permutation (validity mask
+        included — it is what the flat dense collective would have
+        exchanged, hop-composed instead)."""
+        if spec.axis is None:
+            return buffers
+        return buffers._replace(
+            valid=self._ship(spec, buffers.valid),
+            payloads=tuple(self._ship(spec, b) for b in buffers.payloads),
+        )
+
+    def all_to_all(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
+        return self.a2a_finish(self.a2a_start(spec, buffers))
+
+    def backhaul(self, spec: ExchangeSpec, buffers: jax.Array, *,
+                 send_counts: jax.Array | None = None,
+                 recv_counts: jax.Array | None = None,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Responses ride the two-hop permutation backward — which is the
+        same permutation (it is an involution), so the forward function
+        ships the return trip.  Accounting mirrors the forward hop: dense
+        intra pad plus counted inter rows when counts are known."""
+        if spec.axis is None:
+            z = jnp.zeros((), jnp.int32)
+            return buffers, z, z
+        pad = jnp.asarray(spec.rows, jnp.int32)
+        if spec.topology is not None and send_counts is not None:
+            # hop-1 pad (the whole buffer crosses the fast tier) + the real
+            # rows that cross hosts — same convention as the forward hop
+            inter = _by_class_counts(spec, send_counts)[2]
+            shipped = (pad + inter).astype(jnp.int32)
+            occupied = jnp.sum(send_counts).astype(jnp.int32)
+        else:
+            shipped, occupied = pad, (jnp.sum(send_counts).astype(jnp.int32)
+                                      if send_counts is not None else pad)
+        return self._ship(spec, buffers), shipped, occupied
+
+    def cost(self, spec: ExchangeSpec | None, plan_rows: np.ndarray,
+             slack: float = 1.25) -> float:
+        """Sizing rule: the intra tier still pads every lane to the peak
+        (dense rule) — the locality discount comes from
+        :func:`repro.core.migration.exchange_lane_cost` weighting the plan
+        by distance class before this rule prices it."""
+        plan_rows = np.asarray(plan_rows, np.float64)
+        if plan_rows.size == 0:
+            return 0.0
+        return float(plan_rows.max()) * slack
+
+
 class LocalBackend:
     """``axis=None`` fast path: bucketize only, no collective, nothing ships."""
 
@@ -427,6 +629,7 @@ _BACKENDS = {
     "dense": DenseBackend,
     "ragged": RaggedBackend,
     "local": LocalBackend,
+    "hierarchical": HierarchicalBackend,
 }
 
 

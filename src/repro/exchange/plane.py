@@ -46,6 +46,7 @@ from repro.exchange.spec import (
     ExchangeResult,
     ExchangeSpec,
     ExchangeStats,
+    ExchangeTopology,
     Payload,
     SendInfo,
     take_from,
@@ -55,6 +56,7 @@ from repro.kernels import ref as kref
 __all__ = [
     "ExchangeSpec",
     "ExchangeStats",
+    "ExchangeTopology",
     "Payload",
     "SendInfo",
     "ExchangeResult",

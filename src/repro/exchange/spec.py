@@ -21,6 +21,7 @@ Vocabulary:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -28,13 +29,110 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "DISTANCE_CLASSES",
     "ExchangeSpec",
     "ExchangeStats",
+    "ExchangeTopology",
     "Payload",
     "SendInfo",
     "ExchangeResult",
     "take_from",
 ]
+
+# distance classes a lane can sit at, relative to the sending worker:
+# 0 = the worker itself (nothing crosses a link), 1 = another lane on the
+# same host (fast interconnect), 2 = a lane on another host (slow tier)
+DISTANCE_CLASSES = 3
+
+
+@functools.lru_cache(maxsize=64)
+def _class_tables(num_lanes: int, lanes_per_host: int):
+    """Static numpy lookups for one (L, G) topology, computed once and
+    cached — jitted steps close over these instead of rebuilding them per
+    batch.  Returns ``(class_matrix, class_lane_counts, class_onehot)``:
+
+    * ``class_matrix`` — int8[L, L]: distance class of lane ``j`` as seen
+      from worker ``i`` (0 self, 1 same host ``i // G == j // G``, 2 other
+      host),
+    * ``class_lane_counts`` — int32[L, C]: how many lanes of each class
+      worker ``i`` sees,
+    * ``class_onehot`` — int32[L, C, L]: per-worker one-hot masks, so a
+      per-class reduction of a per-lane vector is one matmul.
+    """
+    lanes = np.arange(num_lanes)
+    host = lanes // max(lanes_per_host, 1)
+    cm = np.where(host[:, None] == host[None, :], 1, 2).astype(np.int8)
+    np.fill_diagonal(cm, 0)
+    onehot = np.stack(
+        [(cm == c).astype(np.int32) for c in range(DISTANCE_CLASSES)], axis=1
+    )  # [L, C, L]
+    counts = onehot.sum(axis=2).astype(np.int32)  # [L, C]
+    for a in (cm, onehot, counts):
+        a.setflags(write=False)
+    return cm, counts, onehot
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeTopology:
+    """Lane -> distance-class map for one exchange: which lanes share the
+    sender's host and what each distance class costs.
+
+    Lanes are host-major (lane ``j`` lives on host ``j // lanes_per_host``)
+    — the mesh builders' device order, see
+    :func:`repro.launch.mesh.exchange_topology_of`.  ``class_weights`` price
+    one row crossing each distance class (self, intra-host, inter-host) and
+    feed :func:`repro.core.migration.exchange_lane_cost`; the default makes
+    an inter-host row 10x an intra-host one (the usual DCN vs. ICI gap) and
+    a same-worker row free.
+
+    Hashable (only ints and a tuple), so it rides ``ExchangeSpec`` through
+    jit closures; the per-lane class tables are cached numpy constants
+    (:func:`_class_tables`) computed once per (L, G), not per batch.
+    """
+
+    num_lanes: int
+    lanes_per_host: int
+    class_weights: tuple[float, ...] = (0.0, 1.0, 10.0)
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "class_weights", tuple(float(w) for w in self.class_weights)
+        )
+        assert self.num_lanes >= 1 and self.lanes_per_host >= 1, self
+        assert len(self.class_weights) == DISTANCE_CLASSES, self.class_weights
+
+    @property
+    def num_hosts(self) -> int:
+        return -(-self.num_lanes // self.lanes_per_host)
+
+    @property
+    def class_matrix(self) -> np.ndarray:
+        """int8[L, L] — distance class of lane ``j`` seen from worker ``i``."""
+        return _class_tables(self.num_lanes, self.lanes_per_host)[0]
+
+    @property
+    def class_lane_counts(self) -> np.ndarray:
+        """int32[L, C] — lanes of each class seen from worker ``i``."""
+        return _class_tables(self.num_lanes, self.lanes_per_host)[1]
+
+    @property
+    def class_onehot(self) -> np.ndarray:
+        """int32[L, C, L] — per-worker one-hot class masks."""
+        return _class_tables(self.num_lanes, self.lanes_per_host)[2]
+
+    def weight_matrix(self, num_lanes: int | None = None) -> np.ndarray:
+        """float64[n, n] per-(src, dst) row weights — ``class_weights``
+        broadcast through the class matrix.  ``num_lanes`` re-derives for a
+        different lane count (a worker-folded transfer matrix narrower than
+        the partition count) keeping ``lanes_per_host``."""
+        topo = self if num_lanes is None else self.resized(num_lanes)
+        return np.asarray(topo.class_weights, np.float64)[topo.class_matrix]
+
+    def resized(self, num_lanes: int) -> "ExchangeTopology":
+        """Re-derive for a grown/shrunk lane count: hosts keep their width
+        (``lanes_per_host``), so an 8-lane/4-per-host topology shrunk to 4
+        lanes is one host, grown to 16 is four."""
+        return dataclasses.replace(self, num_lanes=int(num_lanes))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +157,9 @@ class ExchangeStats:
     * ``backend`` — transport name the measurements belong to.
     * ``replica_rows`` — rows landed per partition from *split* hot keys
       (int array) or ``None`` when no key is split.
+    * ``rows_by_class`` — ``rows`` split by lane distance class
+      (int array of length :data:`DISTANCE_CLASSES`: self / intra-host /
+      inter-host) or ``None`` when the exchange carried no topology.
     """
 
     rows: int
@@ -71,6 +172,7 @@ class ExchangeStats:
     hidden_wall_s: float | None = None
     backend: str | None = None
     replica_rows: np.ndarray | None = None
+    rows_by_class: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,11 +183,23 @@ class ExchangeSpec:
     ``axis=None`` is a *local* exchange: records are bucketized into
     ``[num_lanes, capacity]`` buffers with no collective (MoE's second
     dispatch hop — per-expert batching on the receiving shard).
+
+    ``topology`` localizes the lanes (:class:`ExchangeTopology`): which
+    lanes share the sender's host and what each distance class costs.
+    ``None`` (the default) is the flat pre-topology world — every backend
+    behaves exactly as before and no per-class accounting is produced.
     """
 
     num_lanes: int
     capacity: int
     axis: str | None = None
+    topology: ExchangeTopology | None = None
+
+    def __post_init__(self):
+        if self.topology is not None and self.topology.num_lanes != self.num_lanes:
+            object.__setattr__(
+                self, "topology", self.topology.resized(self.num_lanes)
+            )
 
     @property
     def rows(self) -> int:
@@ -105,6 +219,9 @@ class ExchangeSpec:
         and re-capacitating (a migration whose planned peak transfer differs
         from the last one) are both one-spec changes: everything downstream —
         bucketize buffers, the collective, unpack — follows from the spec.
+        A carried :class:`ExchangeTopology` survives the resize: it is
+        re-derived for the new lane count keeping ``lanes_per_host`` (see
+        :meth:`ExchangeTopology.resized` — ``__post_init__`` snaps it).
         """
         return dataclasses.replace(
             self,
@@ -158,6 +275,10 @@ class ExchangeResult(NamedTuple):
     # with) so a ragged transport can initialize its receive buffers
     # bit-identically to what the dense collective would have shipped
     fills: tuple = ()
+    # ``shipped_rows`` split by lane distance class (int32[DISTANCE_CLASSES]:
+    # self / intra-host / inter-host), stamped by the backend's start phase
+    # when the spec carries an ExchangeTopology; None on a flat spec
+    shipped_rows_by_class: jax.Array = None
 
     def unpack(self):
         """Flatten lane-major buffers to record-major ``[L*capacity, ...]``."""
@@ -184,6 +305,8 @@ class ExchangeResult(NamedTuple):
         host-side split accounting.  Blocks on the device scalars.
         """
         rows = int(self.shipped_rows) if self.shipped_rows is not None else 0
+        by_class = (None if self.shipped_rows_by_class is None
+                    else np.asarray(self.shipped_rows_by_class, np.int64))
         if self.lane_counts is not None:
             occupied = int(np.sum(np.asarray(self.lane_counts)))
         else:
@@ -203,6 +326,7 @@ class ExchangeResult(NamedTuple):
             hidden_wall_s=hidden_wall_s,
             backend=backend,
             replica_rows=replica_rows,
+            rows_by_class=by_class,
         )
 
 

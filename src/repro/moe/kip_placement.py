@@ -124,7 +124,8 @@ class PlacementController:
     def __init__(self, num_experts: int, n_shards: int, *, eps: float = 0.02,
                  alpha: float = 0.5, trigger: float = 1.15, min_steps_between: int = 1,
                  expert_weight_bytes: float = 0.0, cost_weight: float = 1.0,
-                 exchange_backend: str | object | None = None):
+                 exchange_backend: str | object | None = None,
+                 exchange_topology=None):
         self.placement = ExpertPlacement.identity(num_experts, n_shards)
         self.e, self.n = num_experts, n_shards
         self.eps, self.alpha, self.trigger = eps, alpha, trigger
@@ -132,6 +133,10 @@ class PlacementController:
         self.expert_weight_bytes = float(expert_weight_bytes)
         self.cost_weight = float(cost_weight)
         self.exchange_backend = resolve_backend(exchange_backend)
+        # EP-shard locality (ExchangeTopology over the shards): weight-move
+        # candidates are priced per distance class, so two placements with
+        # equal balance tie-break toward the one keeping experts on-host
+        self.exchange_topology = exchange_topology
         self.loads_ewma = np.zeros(num_experts)
         self.steps = 0
         self.last_update = -(10**9)
@@ -208,8 +213,12 @@ class PlacementController:
             "moved": int((perm != np.arange(self.e)).sum()),
             "planned_imbalance": float(new_sl.max() / max(new_sl.mean(), 1e-12)),
             # weight bytes through the active transport's sizing rule — the
-            # same cost model the streaming RepartitionPolicy prices with
-            "est_migration": exchange_lane_cost(plan, backend=self.exchange_backend),
+            # same (locality-priced) cost model the streaming
+            # RepartitionPolicy prices with
+            "est_migration": exchange_lane_cost(
+                plan, backend=self.exchange_backend,
+                topology=self.exchange_topology,
+            ),
         }
 
     def plan_candidates(self) -> list[dict]:

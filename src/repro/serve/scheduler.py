@@ -44,7 +44,8 @@ class ReplicaState:
 class DRScheduler:
     def __init__(self, num_replicas: int, *, dr: DRConfig | None = None, seed: int = 0,
                  migration_token_cost: float = 64.0,
-                 exchange_backend: str | None = None):
+                 exchange_backend: str | None = None,
+                 topology=None):
         self.replicas = [ReplicaState(i) for i in range(num_replicas)]
         cfg = dr or DRConfig(lam=4.0, imbalance_trigger=1.25)
         # the same tile-padded sizing rule the kernels' heavy tables use —
@@ -53,9 +54,13 @@ class DRScheduler:
         init = uniform_partitioner(num_replicas, DEFAULT_NUM_HOSTS, seed,
                                    heavy_capacity=heavy_cap)
         # the transport KV-cache migrations would ride; its sizing rule
-        # prices session-move plans inside the policy stack
+        # prices session-move plans inside the policy stack.  ``topology``
+        # (an ExchangeTopology over the replica set) makes that pricing
+        # locality-aware: moving a session's KV cache between replicas on
+        # one host is cheaper than shipping it across hosts.
         self.drm = DRMaster(init, cfg, consumer="serve",
-                            exchange_backend=exchange_backend or "dense")
+                            exchange_backend=exchange_backend or "dense",
+                            exchange_topology=topology)
         self.telemetry = Telemetry("serve")
         self.migration_token_cost = migration_token_cost
         self.migrations = 0

@@ -253,6 +253,99 @@ def test_overlap_matches_serial_on_8_devices():
     assert "OVERLAP-OK" in out.stdout, out.stdout + "\n" + out.stderr
 
 
+HIERARCHICAL_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core.drm import DRConfig
+    from repro.core.streaming import StreamingJob
+    from repro.data.generators import drifting_zipf
+    from repro.exchange import ExchangeSpec, ExchangeTopology, Payload, make_exchange
+    from repro.exchange.backends import _two_hop_a2a
+
+    mesh = jax.make_mesh((8,), ("data",))
+
+    # 0. the collective itself: the two-tier (intra-host, then inter-host)
+    #    all_to_all must equal the flat tiled all_to_all bit for bit, and be
+    #    its own inverse (the backhaul reuses the forward permutation)
+    x = jnp.arange(8 * 8 * 4, dtype=jnp.int32).reshape(8, 8, 4)
+    def body(x):
+        flat = jax.lax.all_to_all(x[0], "data", 0, 0, tiled=True)
+        two = _two_hop_a2a(x[0], "data", num_hosts=2, lanes_per_host=4)
+        back = _two_hop_a2a(two, "data", num_hosts=2, lanes_per_host=4)
+        return flat[None], two[None], back[None]
+    flat, two, back = shard_map(
+        body, mesh=mesh, in_specs=(P("data"),),
+        out_specs=(P("data"), P("data"), P("data")), check_vma=False,
+    )(x)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(two))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+    # two hosts x four lanes: lanes 0-3 on host 0, lanes 4-7 on host 1
+    topo = ExchangeTopology(num_lanes=8, lanes_per_host=4)
+    batches = list(drifting_zipf(5, 8192, num_keys=2000, exponent=1.5,
+                                 drift_every=2, drift_fraction=0.4, seed=3))
+    jobs = {}
+    for name, kw in (
+        ("flat", dict(exchange_backend="dense")),
+        ("dense", dict(exchange_backend="dense", topology=topo)),
+        ("hier", dict(exchange_backend="hierarchical", topology=topo)),
+    ):
+        job = StreamingJob(
+            mesh=mesh, num_partitions=8, state_capacity=4096,
+            dr=DRConfig(imbalance_trigger=1.05, migration_cost_weight=0.0),
+            **kw,
+        )
+        jobs[name] = (job, job.run(batches))
+
+    # 1. bit-identity across a real two-tier exchange: exact aggregation,
+    #    identical overflow, identical control-plane decisions
+    all_keys = np.concatenate(batches)
+    for key in np.unique(all_keys)[:32]:
+        got = {n: job.state_count(int(key)) for n, (job, _) in jobs.items()}
+        want = float((all_keys == key).sum())
+        assert all(g == want for g in got.values()), (key, got, want)
+    ov = {n: [m.overflow for m in ms] for n, (_, ms) in jobs.items()}
+    assert ov["flat"] == ov["dense"] == ov["hier"], ov
+    acts = {n: [m.action for m in ms] for n, (_, ms) in jobs.items()}
+    assert acts["flat"] == acts["dense"] == acts["hier"], acts
+    assert any(m.repartitioned for m in jobs["flat"][1])
+
+    # 2. per-class accounting: the flat job reports no classes; the
+    #    topology jobs' classes sum to the scalar; hierarchical ships
+    #    strictly fewer inter-host rows than the flat dense pad
+    assert all(m.shipped_rows_by_class == (0, 0, 0) for m in jobs["flat"][1])
+    by = {n: np.sum([m.shipped_rows_by_class for m in ms], axis=0)
+          for n, (_, ms) in jobs.items() if n != "flat"}
+    tot = {n: sum(m.shipped_rows for m in ms) for n, (_, ms) in jobs.items()}
+    for n in ("dense", "hier"):
+        assert by[n].sum() == tot[n], (n, by[n], tot[n])
+    assert by["hier"][2] < by["dense"][2], by
+    assert by["hier"][2] > 0, by  # rows did cross the host boundary
+    assert jobs["hier"][0].telemetry.snapshot(
+        loads=np.ones(8)).inter_host_fraction < 0.5
+
+    print("HIERARCHICAL-OK", dict(tot), {n: v.tolist() for n, v in by.items()})
+    """
+)
+
+
+@pytest.mark.slow
+def test_hierarchical_backend_on_8_devices():
+    """Two-tier exchange on 8 real shards (2 hosts x 4 lanes): bit-identical
+    state + overflow, strictly fewer inter-host rows than flat dense."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", HIERARCHICAL_SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "HIERARCHICAL-OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
 MOE_BACKHAUL_SCRIPT = textwrap.dedent(
     """
     import os

@@ -315,12 +315,14 @@ def test_record_exchange_takes_stats_record():
     np.testing.assert_array_equal(s.exchange_replica_rows, [1, 3, 3])
 
 
-def test_record_exchange_legacy_kwargs_deprecated():
+def test_record_exchange_legacy_kwargs_removed():
+    # the loose-kwargs deprecation shim is gone: the only accepted call is
+    # one plane-constructed ExchangeStats record
     t = Telemetry("test")
-    with pytest.warns(DeprecationWarning, match="plane-constructed"):
+    with pytest.raises(TypeError, match="plane-constructed"):
         t.record_exchange(10, 0.5, padded_rows=40)
-    s = t.snapshot(loads=np.ones(2))
-    assert s.exchange_rows == 10 and s.exchange_padded_rows == 40
+    with pytest.raises(TypeError, match="plane-constructed"):
+        t.record_exchange({"rows": 10})  # not an ExchangeStats record
 
 
 def test_record_exchange_rejects_stats_plus_kwargs():
