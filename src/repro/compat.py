@@ -34,14 +34,23 @@ version shims they mirror:
   before batch N's row ship drains.  The two paths are bit-identical — the
   serial step *is* the split-phase pipeline run back to back — so this is a
   debugging/benching lever, not a correctness switch.
+
+Host-sync instrumentation (``host_fetch`` / ``safe_point`` /
+``host_sync_count``) also lives here: the streaming driver routes its
+device->host conversions through :func:`host_fetch`, which counts fetches
+of device arrays performed outside a ``with safe_point():`` region.  The
+counter is how benches prove the depth-2 pipeline's "zero blocking
+transfers between safe points" contract.
 """
 from __future__ import annotations
 
+import contextlib
 import inspect
 import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 try:  # jax >= 0.6: top-level export
     from jax import shard_map as _shard_map  # type: ignore[attr-defined]
@@ -58,7 +67,55 @@ __all__ = [
     "ragged_all_to_all",
     "has_ragged_all_to_all",
     "overlap_enabled",
+    "host_fetch",
+    "host_sync_count",
+    "reset_host_sync_count",
+    "safe_point",
 ]
+
+# --- host-sync instrumentation -------------------------------------------
+#
+# The streaming driver's sync-free contract says device->host transfers
+# happen only at *safe points* (the per-batch decision section, where the
+# control plane must look at the counts anyway).  Every D2H conversion in
+# the steady-state loop goes through :func:`host_fetch`; fetches of device
+# arrays outside a ``with safe_point():`` region increment
+# ``host_sync_count``.  Benches and tests read the counter to prove the
+# depth-2 pipeline performs zero blocking transfers between safe points —
+# a nonzero delta on a no-action batch pinpoints a leaked sync.
+
+_sync_state = {"count": 0, "depth": 0}
+
+
+def host_sync_count() -> int:
+    """Device->host fetches observed *outside* safe-point regions."""
+    return _sync_state["count"]
+
+
+def reset_host_sync_count() -> None:
+    """Zero the counter (benches call this before a measured segment)."""
+    _sync_state["count"] = 0
+
+
+@contextlib.contextmanager
+def safe_point():
+    """Mark a region where blocking device->host fetches are sanctioned."""
+    _sync_state["depth"] += 1
+    try:
+        yield
+    finally:
+        _sync_state["depth"] -= 1
+
+
+def host_fetch(x):
+    """``np.asarray`` that audits device->host transfers.
+
+    Fetching a ``jax.Array`` outside a :func:`safe_point` region counts as a
+    blocking sync; host values (ints, floats, numpy) pass through uncounted.
+    """
+    if isinstance(x, jax.Array) and _sync_state["depth"] == 0:
+        _sync_state["count"] += 1
+    return np.asarray(x)
 
 
 def overlap_enabled() -> bool:

@@ -224,6 +224,15 @@ class SplitPolicy:
     (``Partitioner.with_splits``) on a taken :class:`Split`, and the driver
     executes a taken :class:`Unsplit` as a home-routed state migration
     whose ``merge_into`` is the combiner-side merge.
+
+    How a split key's records spread over its replicas is the *route's*
+    business, not this policy's: the default is the stateless fmix32 pick
+    (kernel and jnp twin, bit-identical), and ``DRConfig.split_least_load``
+    upgrades the twin to Partial-Key-Grouping's two-choice least-load
+    tiebreak fed with the previous batch's measured loads at safe points
+    (``kernels.ref.split_choice_ref``).  The policy's decision inputs —
+    sketch shares, fair budget, streaks — are identical either way, so a
+    split fires at the same safe point under both picks.
     """
 
     def evaluate(self, host, signals: Signals) -> Action:

@@ -18,6 +18,7 @@ import time
 
 import numpy as np
 
+from repro.compat import host_fetch, safe_point
 from repro.core.migration import fold_to_workers
 from repro.exchange.spec import ExchangeStats
 
@@ -198,6 +199,10 @@ class Telemetry:
         self._replica_rows: np.ndarray | None = None
         self._rows_by_class: np.ndarray | None = None
         self._queues: np.ndarray | None = None
+        # exchanges recorded this window whose count fields may still live
+        # on device — folded (one host fetch each) at the next snapshot, so
+        # recording never blocks the pipeline between safe points
+        self._pending_stats: list[ExchangeStats] = []
         # the window clock starts at the first recording, not at reset:
         # setup/idle time between construction (or a checkpoint) and the
         # next batch must not read as a throughput collapse
@@ -217,7 +222,7 @@ class Telemetry:
         """Accumulate a per-lane/per-partition vector across the window; a
         width change mid-window (elastic resize) folds both onto the wider
         vector so nothing is lost."""
-        v = np.asarray(v, np.int64)
+        v = np.asarray(host_fetch(v), np.int64)
         if acc is None:
             return v.copy()
         if len(v) == len(acc):
@@ -243,6 +248,13 @@ class Telemetry:
         per-backend wall EWMA (``wall_ewma``) the BackendPolicy reads as
         measured evidence.
 
+        Sync-free: the count fields (``rows`` / ``occupied_rows`` /
+        ``lane_overflow`` / ...) may be *device* scalars and vectors —
+        recording only queues the record; the host fetch happens at the
+        next :meth:`snapshot` (the safe point), so the steady-state loop
+        never blocks here.  The wall fields are host-measured floats and
+        fold eagerly (the EWMA stays observable between snapshots).
+
         The historical keyword-pile form ``record_exchange(rows,
         wall_s=..., padded_rows=..., ...)`` was removed after its one
         deprecation release (the kwargs mapped 1:1 onto
@@ -257,15 +269,6 @@ class Telemetry:
                 "the measurements on the ExchangeStats record"
             )
         self._touch()
-        self._exchange_rows += int(stats.rows)
-        self._exchange_padded_rows += int(
-            stats.rows if stats.padded_rows is None else stats.padded_rows
-        )
-        add = int(stats.rows if stats.occupied_rows is None else stats.occupied_rows)
-        self._exchange_occupied_rows = (
-            add if self._exchange_occupied_rows is None
-            else self._exchange_occupied_rows + add
-        )
         self._exchange_wall_s += float(stats.wall_s)
         if stats.count_wall_s is not None:
             self._count_wall_s += float(stats.count_wall_s)
@@ -280,18 +283,41 @@ class Telemetry:
                 if prev is None
                 else 0.7 * prev + 0.3 * float(stats.wall_s)
             )
-        if stats.lane_overflow is not None:
-            self._lane_overflow = self._fold_vector(
-                self._lane_overflow, stats.lane_overflow
-            )
-        if stats.replica_rows is not None:
-            self._replica_rows = self._fold_vector(
-                self._replica_rows, stats.replica_rows
-            )
-        if stats.rows_by_class is not None:
-            self._rows_by_class = self._fold_vector(
-                self._rows_by_class, stats.rows_by_class
-            )
+        self._pending_stats.append(stats)
+
+    def _flush_pending(self) -> None:
+        """Fold the queued exchange records' count fields — the one place
+        device telemetry becomes host ints, inside a sanctioned safe-point
+        region."""
+        if not self._pending_stats:
+            return
+        with safe_point():
+            for stats in self._pending_stats:
+                rows = int(host_fetch(stats.rows))
+                self._exchange_rows += rows
+                self._exchange_padded_rows += (
+                    rows if stats.padded_rows is None
+                    else int(host_fetch(stats.padded_rows))
+                )
+                add = (rows if stats.occupied_rows is None
+                       else int(host_fetch(stats.occupied_rows)))
+                self._exchange_occupied_rows = (
+                    add if self._exchange_occupied_rows is None
+                    else self._exchange_occupied_rows + add
+                )
+                if stats.lane_overflow is not None:
+                    self._lane_overflow = self._fold_vector(
+                        self._lane_overflow, stats.lane_overflow
+                    )
+                if stats.replica_rows is not None:
+                    self._replica_rows = self._fold_vector(
+                        self._replica_rows, stats.replica_rows
+                    )
+                if stats.rows_by_class is not None:
+                    self._rows_by_class = self._fold_vector(
+                        self._rows_by_class, stats.rows_by_class
+                    )
+        self._pending_stats.clear()
 
     def record_overflow(self, shuffle: int = 0, migration: int = 0) -> None:
         self._touch()
@@ -311,6 +337,7 @@ class Telemetry:
         state_rows: int = 0,
         at_safe_point: bool = True,
     ) -> Signals:
+        self._flush_pending()
         sig = Signals(
             loads=np.asarray(loads, np.float64),
             num_workers=int(num_workers),

@@ -136,6 +136,17 @@ def _unpack_pending(pending: _Pending, fills: tuple) -> ExchangeResult:
     )
 
 
+def _pool_sharding(mesh: Mesh, axis: str):
+    """Sharding for freshly allocated send-buffer sets: identical to what
+    the jitted ``start`` emits for its pending buffers (lane axis over the
+    mesh; jit canonicalizes a size-1 axis out of the spec).  Committing the
+    fresh set at allocation keeps the jit signature stable when the
+    ping-pong pool first supplies a recycled (committed) set — otherwise
+    the first pool hit recompiles the start program mid-stream."""
+    spec = P(axis) if mesh.shape[axis] > 1 else P()
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
 def make_shuffle_step(
     mesh: Mesh,
     *,
@@ -147,6 +158,7 @@ def make_shuffle_step(
     axis: str = "data",
     backend: str | ExchangeBackend | None = None,
     topology: ExchangeTopology | None = None,
+    least_load: bool = False,
 ):
     """Build the jitted shuffle step for a fixed mesh/capacity/topology.
 
@@ -164,6 +176,19 @@ def make_shuffle_step(
     (the migrate step does *not* — it routes at worker granularity, see
     :func:`make_migrate_step`).  ``backend`` selects the exchange transport
     (dense / ragged / an :class:`ExchangeBackend` instance).
+
+    The split-phase halves double-buffer their ``[L, cap]`` send buffers:
+    ``finish`` recycles each drained pending's buffer set into a two-set
+    ping-pong pool and the next ``start`` scatters into a recycled set
+    (donated, so XLA rewrites it in place) instead of allocating fresh —
+    at pipeline depth 2 one set is still in flight while the other is
+    being filled.  Values are bit-identical to the fresh path.
+
+    ``least_load=True`` (static) switches the split-key replica pick to
+    the two-choice least-load tiebreak: ``step``/``step.start`` accept a
+    ``part_loads`` vector (fed from ``Signals`` at safe points) and route
+    on the jnp twin — the Pallas kernel keeps the stateless hash, so the
+    gate is per-factory, never per-batch.
     """
     num_workers = mesh.shape[axis]
     ex = make_exchange(
@@ -173,7 +198,7 @@ def make_shuffle_step(
     )
     fills = (KEY_SENTINEL, 0, 0)
 
-    def _start_local(tables, keys, vals, valid):
+    def _start_core(tables, keys, vals, valid, bufs, part_loads):
         # keys [n] local records of this worker; the fused route pass
         # produces partition ids, slots, per-lane counts AND the bucketized
         # send buffers in one chain (one Pallas kernel on TPU) — bucketize
@@ -186,6 +211,8 @@ def make_shuffle_step(
         part, buffers = route_bucketize(
             ex, tables, keys, valid, vals, num_hosts=num_hosts, seed=seed,
             num_partitions=num_partitions,
+            buffers=None if bufs is None else (bufs[0][0], tuple(b[0] for b in bufs[1])),
+            part_loads=part_loads if least_load else None,
         )
         dest = jnp.where(valid, part, 0)
         started = ex.start_from(buffers).buffers
@@ -205,13 +232,19 @@ def make_shuffle_step(
                              shipped, by_class)
         return _pack_pending(started), start
 
+    def _start_local(tables, keys, vals, valid, bufs, part_loads):
+        return _start_core(tables, keys, vals, valid, bufs, part_loads)
+
     def _finish_local(pending):
         res = ex.finish(PendingExchange(_unpack_pending(pending, fills)))
         rva, (rk, rv, rp) = res.unpack()
         return rk[None], rv[None], rva[None], rp[None]
 
-    def _local(tables, keys, vals, valid):
-        pending, start = _start_local(tables, keys, vals, valid)
+    def _local(tables, keys, vals, valid, part_loads):
+        # the fused serial step's send buffers never cross the jit boundary,
+        # so there is nothing to recycle — fresh transient buffers (bufs
+        # None) keep the trace identical to the pre-reuse step
+        pending, start = _start_core(tables, keys, vals, valid, None, part_loads)
         rk, rv, rva, rp = _finish_local(pending)
         return (rk, rv, rva, rp, start.loads, start.hist_keys, start.hist_counts,
                 start.overflow, start.lane_overflow, start.shipped_rows,
@@ -223,14 +256,15 @@ def make_shuffle_step(
         P(axis),
         P(axis),
     )
+    bufs_spec = (P(axis), (P(axis), P(axis), P(axis)))
     mapped = shard_map(
-        _local, mesh=mesh, in_specs=in_specs,
+        _local, mesh=mesh, in_specs=in_specs + (P(),),
         out_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(axis), P(axis),
                    P(), P(), P(), P()),
         check_vma=False,
     )
     start_mapped = shard_map(
-        _start_local, mesh=mesh, in_specs=in_specs,
+        _start_local, mesh=mesh, in_specs=in_specs + (bufs_spec, P()),
         out_specs=(P(axis), ShuffleStart(P(), P(axis), P(axis), P(), P(), P(), P())),
         check_vma=False,
     )
@@ -241,21 +275,53 @@ def make_shuffle_step(
     )
 
     # donate the per-batch buffers so the exchange compaction reuses them
-    # instead of double-allocating (CPU has no donation — skip the warning)
+    # instead of double-allocating; the recycled send-buffer set (arg 4 of
+    # start) is donated too — its reset+scatter rewrites it in place.  The
+    # finish phase must NOT donate: each drained pending's buffers re-enter
+    # the ping-pong pool, so they have to survive the ship.  (CPU has no
+    # donation — skip the warning.)
     donate = () if jax.default_backend() == "cpu" else (1, 2, 3)
-    finish_donate = () if jax.default_backend() == "cpu" else (0,)
+    start_donate = () if jax.default_backend() == "cpu" else (1, 2, 3, 4)
     jstep = jax.jit(mapped, donate_argnums=donate)
-    jstart = jax.jit(start_mapped, donate_argnums=donate)
-    jfinish = jax.jit(finish_mapped, donate_argnums=finish_donate)
+    jstart = jax.jit(start_mapped, donate_argnums=start_donate)
+    jfinish = jax.jit(finish_mapped)
 
-    def step(tables: PartitionerTables, keys, vals, valid) -> ShuffleResult:
-        return ShuffleResult(*jstep(tuple(tables), keys, vals, valid))
+    zero_loads = jnp.zeros(num_partitions, jnp.float32)
+    recycled: list = []  # drained send-buffer sets, ping-pong pool (<= 2)
+    buf_sharding = _pool_sharding(mesh, axis)
 
-    def start(tables: PartitionerTables, keys, vals, valid):
-        return jstart(tuple(tables), keys, vals, valid)
+    def _fresh_bufs(vals):
+        shape = (num_workers, num_workers, capacity)
+        return jax.device_put((
+            jnp.zeros(shape, bool),
+            (jnp.full(shape, KEY_SENTINEL, jnp.int32),
+             jnp.zeros(shape + vals.shape[1:], vals.dtype),
+             jnp.zeros(shape, jnp.int32)),
+        ), buf_sharding)
+
+    def step(tables: PartitionerTables, keys, vals, valid,
+             part_loads=None) -> ShuffleResult:
+        pl = zero_loads if part_loads is None else part_loads
+        return ShuffleResult(*jstep(tuple(tables), keys, vals, valid, pl))
+
+    def start(tables: PartitionerTables, keys, vals, valid, part_loads=None):
+        bufs = recycled.pop() if recycled else None
+        if bufs is not None and (bufs[1][1].shape[3:] != vals.shape[1:]
+                                 or bufs[1][1].dtype != vals.dtype):
+            bufs = None  # payload width changed: the set cannot be reused
+        if bufs is None:
+            bufs = _fresh_bufs(vals)
+        pl = zero_loads if part_loads is None else part_loads
+        return jstart(tuple(tables), keys, vals, valid, bufs, pl)
 
     def finish(pending: _Pending):
-        return jfinish(pending)
+        out = jfinish(pending)
+        if len(recycled) < 2:
+            # the drained pending's buffers become the next idle set — two
+            # sets bound the pool because at most two exchanges are in
+            # flight (pipeline depth 2)
+            recycled.append((pending.valid, pending.payloads))
+        return out
 
     step.start = start
     step.finish = finish
@@ -307,7 +373,7 @@ def make_migrate_step(
     ex = make_exchange(spec, backend)
     fills = (KEY_SENTINEL, 0)
 
-    def _start_local(new_tables, state_keys, state_vals):
+    def _start_core(new_tables, state_keys, state_vals, bufs):
         # state tables arrive stacked [1, S] / [1, S, D] per shard
         state_keys, state_vals = state_keys[0], state_vals[0]
         new_tables = PartitionerTables(*new_tables)
@@ -340,6 +406,7 @@ def make_migrate_step(
             ],
             slot=slot,
             counts=counts,
+            buffers=None if bufs is None else (bufs[0][0], tuple(b[0] for b in bufs[1])),
         )
         started = ex.start_from(buffers).buffers
 
@@ -366,26 +433,30 @@ def make_migrate_step(
             by_class,
         )
 
+    def _start_local(new_tables, state_keys, state_vals, bufs):
+        return _start_core(new_tables, state_keys, state_vals, bufs)
+
     def _finish_local(pending):
         res = ex.finish(PendingExchange(_unpack_pending(pending, fills)))
         rva, (rk, rv) = res.unpack()
         return rk[None], rv[None], rva[None]
 
     def _local(new_tables, state_keys, state_vals):
-        pending, kk, vv, kva, moved, total, ov, lov, shipped, by = _start_local(
-            new_tables, state_keys, state_vals
+        pending, kk, vv, kva, moved, total, ov, lov, shipped, by = _start_core(
+            new_tables, state_keys, state_vals, None
         )
         rk, rv, rva = _finish_local(pending)
         return kk, vv, kva, rk, rv, rva, moved, total, ov, lov, shipped, by
 
     in_specs = ((P(), P(), P(), P()), P(axis), P(axis))
+    bufs_spec = (P(axis), (P(axis), P(axis)))
     mapped = shard_map(
         _local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(axis),) * 6 + (P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )
     start_mapped = shard_map(
-        _start_local, mesh=mesh, in_specs=in_specs,
+        _start_local, mesh=mesh, in_specs=in_specs + (bufs_spec,),
         out_specs=(P(axis),) * 4 + (P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )
@@ -396,21 +467,44 @@ def make_migrate_step(
     )
 
     # donate the state tables: the kept/received outputs alias them, so the
-    # exchange compaction doesn't double-allocate the state (CPU: no-op)
+    # exchange compaction doesn't double-allocate the state; the recycled
+    # send-buffer set (arg 3 of start) is donated and rewritten in place.
+    # finish keeps its pending alive — drained sets re-enter the ping-pong
+    # pool (CPU: no donation at all).
     donate = () if jax.default_backend() == "cpu" else (1, 2)
-    finish_donate = () if jax.default_backend() == "cpu" else (0,)
+    start_donate = () if jax.default_backend() == "cpu" else (1, 2, 3)
     jmig = jax.jit(mapped, donate_argnums=donate)
-    jstart = jax.jit(start_mapped, donate_argnums=donate)
-    jfinish = jax.jit(finish_mapped, donate_argnums=finish_donate)
+    jstart = jax.jit(start_mapped, donate_argnums=start_donate)
+    jfinish = jax.jit(finish_mapped)
+
+    recycled: list = []  # drained send-buffer sets, ping-pong pool (<= 2)
+    buf_sharding = _pool_sharding(mesh, axis)
+
+    def _fresh_bufs(state_vals):
+        shape = (num_workers, spec.num_lanes, spec.capacity)
+        return jax.device_put((
+            jnp.zeros(shape, bool),
+            (jnp.full(shape, KEY_SENTINEL, jnp.int32),
+             jnp.zeros(shape + state_vals.shape[2:], state_vals.dtype)),
+        ), buf_sharding)
 
     def migrate(new_tables, state_keys, state_vals):
         return jmig(tuple(new_tables), state_keys, state_vals)
 
     def start(new_tables, state_keys, state_vals):
-        return jstart(tuple(new_tables), state_keys, state_vals)
+        bufs = recycled.pop() if recycled else None
+        if bufs is not None and (bufs[1][1].shape[3:] != state_vals.shape[2:]
+                                 or bufs[1][1].dtype != state_vals.dtype):
+            bufs = None  # payload width changed: the set cannot be reused
+        if bufs is None:
+            bufs = _fresh_bufs(state_vals)
+        return jstart(tuple(new_tables), state_keys, state_vals, bufs)
 
     def finish(pending: _Pending):
-        return jfinish(pending)
+        out = jfinish(pending)
+        if len(recycled) < 2:
+            recycled.append((pending.valid, pending.payloads))
+        return out
 
     migrate.start = start
     migrate.finish = finish
@@ -440,19 +534,31 @@ def shuffle_stats(
     reads (loads / overflow / lane_overflow / shipped_rows), so the serial
     and overlapped drivers construct identical records.  Rows are per worker
     (the globally-psummed counters divided by ``num_workers``); ``padded``
-    is the spec's per-worker provision.  Blocks on the device scalars.
+    is the spec's per-worker provision.
+
+    Sync-free: device inputs stay device-side — the per-worker arithmetic
+    runs as (async) jnp ops and the record carries device scalars, which
+    ``Telemetry.record_exchange`` accepts and folds to host ints only at
+    ``snapshot()`` (the safe point).  Host inputs produce a host record as
+    before.
     """
-    shipped = int(np.asarray(res.shipped_rows)) // num_workers
-    occupied = max(int(np.asarray(res.loads).sum()) - int(res.overflow), 0) // num_workers
+    dev = isinstance(res.shipped_rows, jax.Array)
+    if dev:
+        shipped = res.shipped_rows // num_workers
+        occupied = jnp.maximum(jnp.sum(res.loads) - res.overflow, 0) // num_workers
+    else:
+        shipped = int(np.asarray(res.shipped_rows)) // num_workers
+        occupied = max(int(np.asarray(res.loads).sum()) - int(res.overflow), 0) // num_workers
     by_class = None
     if spec.topology is not None and res.shipped_rows_by_class is not None:
-        by_class = np.asarray(res.shipped_rows_by_class, np.int64) // num_workers
+        by_class = (res.shipped_rows_by_class // num_workers if dev
+                    else np.asarray(res.shipped_rows_by_class, np.int64) // num_workers)
     return ExchangeStats(
         rows=shipped,
         wall_s=wall_s,
         padded_rows=spec.rows,
         occupied_rows=occupied,
-        lane_overflow=np.asarray(res.lane_overflow),
+        lane_overflow=res.lane_overflow if dev else np.asarray(res.lane_overflow),
         count_wall_s=count_wall_s,
         backend=backend,
         replica_rows=replica_rows,
@@ -478,17 +584,23 @@ def migrate_stats(
     ``moved_rows`` the rows that actually crossed workers (globally summed,
     like ``shipped_rows`` and ``overflow``); ``shipped_rows_by_class`` the
     globally-summed per-distance-class split (``None`` on a flat spec).
+
+    Migrations only happen at safe points (the driver drains before acting),
+    so the host conversions here are sanctioned — they route through
+    :func:`repro.compat.host_fetch` so the sync audit sees them.
     """
+    from repro.compat import host_fetch
+
     by_class = None
     if shipped_rows_by_class is not None:
-        by_class = np.asarray(shipped_rows_by_class, np.int64)
+        by_class = np.asarray(host_fetch(shipped_rows_by_class), np.int64)
         by_class = None if not by_class.any() else by_class // num_workers
     return ExchangeStats(
-        rows=int(np.asarray(shipped_rows)) // num_workers,
+        rows=int(host_fetch(shipped_rows)) // num_workers,
         wall_s=wall_s,
         padded_rows=int(buffer_rows),
         occupied_rows=max(int(moved_rows) - int(overflow), 0) // num_workers,
-        lane_overflow=None if lane_overflow is None else np.asarray(lane_overflow),
+        lane_overflow=None if lane_overflow is None else host_fetch(lane_overflow),
         backend=backend,
         rows_by_class=by_class,
     )

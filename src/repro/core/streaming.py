@@ -66,6 +66,28 @@ count phase blocks.  Per-phase walls land in telemetry
 (``Signals.exchange_count_wall_s`` / ``exchange_ship_wall_s`` /
 ``exchange_hidden_wall_s`` -> ``overlap_fraction``); the hidden wall of a
 batch is recorded when the batch ends, so it lands one window late.
+
+**Depth-2 pipeline** (``DRConfig.pipeline_depth = 2``; overlap must be
+active): ``run`` gives the driver one batch of lookahead, and
+``process_batch`` enqueues the *next* batch's route + bucketize + count
+phase right after this batch's count sync — behind the in-flight ship —
+so at steady state two stages live on the device queue: batch N's ship +
+merge and batch N+1's start.  The send buffers ping-pong between two
+persistent sets (``repro.core.shuffle``), so the pipeline re-fills
+buffers in place instead of allocating per batch.  The staged start
+routes with today's partitioner; when the safe point takes an action
+(resize / repartition / split / backend switch) the driver drains both
+in-flight stages, discards the staged start, and the pre-routed batch
+replays under the new partitioner when it arrives — trajectories stay
+bit-identical to the serial driver.  ``REPRO_DISABLE_OVERLAP=1`` forces
+serial whatever the configured depth.
+
+**Host-sync discipline**: every device->host read in the driver routes
+through :func:`repro.compat.host_fetch` inside a
+:func:`repro.compat.safe_point` region — the count-phase sync and the
+decision section it feeds.  Between safe points the driver performs no
+blocking transfers; ``compat.host_sync_count()`` stays flat across
+steady-state batches (the bench gate ``fig6/host_syncs_per_batch``).
 """
 from __future__ import annotations
 
@@ -78,7 +100,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.compat import overlap_enabled
+from repro.compat import host_fetch, overlap_enabled, safe_point
 from repro.control import (
     NoOp,
     Repartition,
@@ -138,6 +160,11 @@ class BatchMetrics:
                                   # (overlapped batches: the count phase only
                                   # — the ship is hidden behind host work)
     overlapped: bool = False    # the batch ran the split-phase pipeline
+    pipelined: bool = False     # the batch consumed a depth-2 staged start
+                                # (its route ran behind the previous ship)
+    overlap_fraction: float = 0.0  # hidden / (hidden + ship) wall this
+                                # window (lags one batch: the hidden wall is
+                                # only known at batch end); 0.0 when serial
     split_keys: int = 0         # hot keys replicated after this safe point
     shipped_rows_by_class: tuple = (0, 0, 0)  # shipped_rows split by lane
                                 # distance class (self / intra-host /
@@ -217,6 +244,17 @@ class StreamingJob:
         self._inflight = None
         self._hidden_since: float | None = None
         self._last_state_rows = 0
+        # depth-2 pipeline (``DRConfig.pipeline_depth == 2``): ``run`` parks
+        # the lookahead batch here, ``process_batch`` stages its start behind
+        # the current ship, and a taken action discards the staged route so
+        # the batch replays under the new partitioner
+        self._next_batch: np.ndarray | None = None
+        self._staged: tuple | None = None  # (src, partitioner, step, pending, ShuffleStart)
+        # least-load split routing (``DRConfig.split_least_load``): the
+        # previous batch's measured per-partition loads, fed to the route at
+        # safe points; None until the first batch lands (and after a resize
+        # changes the vector's width)
+        self._part_loads: jax.Array | None = None
         self.metrics: list[BatchMetrics] = []
         self._merge = jax.jit(jax.vmap(lambda sk, sv, bk, bv, bva: merge_into(sk, sv, bk, bv, bva)))
 
@@ -242,6 +280,64 @@ class StreamingJob:
     def _overlap_active(self) -> bool:
         return self.drm.config.overlap_exchange and overlap_enabled()
 
+    def _depth2_active(self) -> bool:
+        # the env kill switch wins over the configured depth too: serial
+        # means serial, whatever the pipeline was asked to do
+        return self._overlap_active() and self.drm.config.pipeline_depth >= 2
+
+    def _discard_staged(self) -> None:
+        """Drop the staged lookahead start (its device work completes in the
+        background; the outputs are never read).  The popped send-buffer set
+        is lost to the ping-pong pool — the next start allocates fresh and
+        the pool refills from drained pendings."""
+        self._staged = None
+
+    def _take_staged(self, raw_keys, has_values: bool):
+        """Claim the staged start if it still routes ``raw_keys`` correctly.
+
+        Valid only when it was staged for this exact batch (object identity
+        — ``run`` hands the same array back), no caller-supplied values
+        (staging assumes the implicit all-ones payload), and the partitioner
+        *and* jitted step are the very objects the staged route used — a
+        taken action swaps the partitioner, a resize / backend switch
+        rebuilds the step, so staleness cannot slip through.  An invalid
+        stage is discarded; the caller re-routes fresh (the replay)."""
+        st, self._staged = self._staged, None
+        if st is None:
+            return None
+        src, part, step, pending, res = st
+        if (not has_values and src is raw_keys
+                and part is self.drm.partitioner and step is self._shuffle):
+            return pending, res
+        return None
+
+    def _stage_next(self, raw: np.ndarray) -> None:
+        """Enqueue the lookahead batch's route + bucketize + count phase
+        behind the current in-flight ship (pipeline depth 2).
+
+        Routes with *today's* partitioner: if the safe point this overlaps
+        takes an action, :meth:`_take_staged` rejects the stage and the
+        batch re-routes under the new partitioner.  Skipped when the
+        lookahead's capacity signature differs from the live step's — the
+        rebuild must not race the batch still using it (that boundary runs
+        at depth 1)."""
+        n = len(raw)
+        w = self.num_workers
+        total = int(np.ceil(n / w)) * w
+        cap = int(np.ceil(self.capacity_factor * total / w / 8.0) * 8)
+        if (cap, self.num_partitions) != self._shuffle_sig:
+            return
+        k = np.concatenate(
+            [raw, np.full(total - n, KEY_SENTINEL, np.int64)]).astype(np.int32)
+        v = np.ones((len(k), self.payload_dim), np.float32)
+        shuffle = self._shuffle
+        pending, res = shuffle.start(
+            self.drm.partitioner.tables(), jnp.asarray(k),
+            jnp.asarray(v, jnp.float32), jnp.asarray(k != KEY_SENTINEL),
+            self._part_loads,
+        )
+        self._staged = (raw, self.drm.partitioner, shuffle, pending, res)
+
     def _consume_inflight(self) -> None:
         """Enqueue the pending finish + merge (no sync)."""
         fin, self._inflight = self._inflight, None
@@ -263,9 +359,10 @@ class StreamingJob:
             ship_wall_s=time.perf_counter() - t,
             hidden_wall_s=hidden,
         ))
-        self._last_state_rows = int(np.asarray(
-            jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self._sk)
-        ).sum())
+        with safe_point():  # a drain IS a safe point: the fetch is sanctioned
+            self._last_state_rows = int(host_fetch(
+                jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self._sk)
+            ).sum())
 
     # ------------------------------------------------------------------
     def _build(self, local_n: int):
@@ -320,6 +417,8 @@ class StreamingJob:
     def process_batch(self, keys: np.ndarray, values: np.ndarray | None = None) -> BatchMetrics:
         """Run one micro-batch through shuffle + stateful reduce + DR."""
         t0 = time.perf_counter()
+        raw_keys = keys
+        has_values = values is not None
         n = len(keys)
         w = self.num_workers
         local_n = int(np.ceil(n / w))
@@ -333,20 +432,27 @@ class StreamingJob:
         self._build(local_n * w)
         batch_backend = self.exchange_backend.name  # the transport this batch rode
         overlap = self._overlap_active()
+        pipelined = False
 
         t_ex = time.perf_counter()
-        tables = self.drm.partitioner.tables()
-        kj = jnp.asarray(keys)
-        vj = jnp.asarray(values, jnp.float32)
-        vaj = jnp.asarray(valid)
         if overlap:
-            # split-phase pipeline: enqueue this batch's start, then the
+            # split-phase pipeline: enqueue this batch's start (unless the
+            # depth-2 lookahead already staged it last batch), then the
             # previous batch's ship + merge behind it, and block only on the
             # start outputs — devices drain their queue in order, so the
             # loads sync below waits for the count phase, not the ship,
             # which runs while the host works through the decision section
             shuffle = self._shuffle
-            pending, res = shuffle.start(tables, kj, vj, vaj)
+            staged = self._take_staged(raw_keys, has_values)
+            if staged is not None:
+                pending, res = staged
+                pipelined = True
+            else:
+                pending, res = shuffle.start(
+                    self.drm.partitioner.tables(), jnp.asarray(keys),
+                    jnp.asarray(values, jnp.float32), jnp.asarray(valid),
+                    self._part_loads,
+                )
             self._consume_inflight()
 
             def _fin_shuffle(fin=shuffle.finish, pending=pending):
@@ -354,20 +460,37 @@ class StreamingJob:
                 self._sk, self._sv, _ = self._merge(self._sk, self._sv, rk, rv, rva)
 
             self._inflight = _fin_shuffle
-            loads = np.asarray(res.loads)  # forces the start phase only
+            with safe_point():
+                loads = host_fetch(res.loads)  # forces the start phase only
             exchange_wall = time.perf_counter() - t_ex
             count_wall = exchange_wall
         else:
+            self._discard_staged()  # overlap turned off mid-stream: re-route
             if self._inflight is not None:
                 self._drain_inflight()
-            res = self._shuffle(tables, kj, vj, vaj)
+            res = self._shuffle(
+                self.drm.partitioner.tables(), jnp.asarray(keys),
+                jnp.asarray(values, jnp.float32), jnp.asarray(valid),
+                self._part_loads,
+            )
             # stateful reduce: fold received records into per-worker state
             self._sk, self._sv, _ = self._merge(
                 self._sk, self._sv, res.keys, res.values, res.valid
             )
-            loads = np.asarray(res.loads)  # forces the batch's device work
+            with safe_point():
+                loads = host_fetch(res.loads)  # forces the batch's device work
             exchange_wall = time.perf_counter() - t_ex
             count_wall = None
+        # the route reads the *previous* batch's measured loads (identical
+        # in serial / depth-1 / depth-2: all route batch N+1 on batch N's
+        # vector, set here before any lookahead stages)
+        if self.drm.config.split_least_load:
+            self._part_loads = jnp.asarray(loads, jnp.float32)
+        # depth-2: enqueue the lookahead batch's start now, behind this
+        # batch's in-flight ship — its route + bucketize + count phase run
+        # on the device while the host works through the decision section
+        if self._next_batch is not None and self._depth2_active():
+            self._stage_next(self._next_batch)
         # everything the decision section reads below comes out of the
         # start phase (res is ShuffleStart when overlapped, ShuffleResult
         # serially — the control fields are shared)
@@ -378,25 +501,32 @@ class StreamingJob:
         # padded what the spec provisioned, occupied the rows actually live
         # in the lanes (backend-independent — the BackendPolicy's signal;
         # under dense shipped == padded while occupied tracks the real load).
-        stats = shuffle_stats(
-            res, self._shuffle_spec, w,
-            wall_s=exchange_wall,
-            count_wall_s=count_wall,
-            backend=batch_backend,
-            # per-replica routing of the split keys (host twin of the fused
-            # kernels' pick — exact, no extra device pass); only computed
-            # while splits are installed
-            replica_rows=(split_replica_rows(self.drm.partitioner, keys, w, valid)
-                          if self.drm.split_keys else None),
-        )
-        shuffle_shipped = stats.rows
-        self.telemetry.record_exchange(stats)
-        self.telemetry.record_overflow(shuffle=int(res.overflow))
-        self.telemetry.record_batch(float(loads.sum()))
+        with safe_point():
+            stats = shuffle_stats(
+                res, self._shuffle_spec, w,
+                wall_s=exchange_wall,
+                count_wall_s=count_wall,
+                backend=batch_backend,
+                # per-replica routing of the split keys (host twin of the
+                # fused kernels' pick — exact, no extra device pass); only
+                # computed while splits are installed, and only for the
+                # stateless pick — the least-load tiebreak reads a load
+                # vector the host twin doesn't see
+                replica_rows=(split_replica_rows(self.drm.partitioner, keys, w, valid)
+                              if self.drm.split_keys
+                              and not self.drm.config.split_least_load else None),
+            )
+            # every fetch below reads a start-phase output the loads sync
+            # already forced — no new device work blocks here
+            shuffle_shipped = int(host_fetch(stats.rows))
+            overflow_i = int(host_fetch(res.overflow))
+            self.telemetry.record_exchange(stats)
+            self.telemetry.record_overflow(shuffle=overflow_i)
+            self.telemetry.record_batch(float(loads.sum()))
 
-        # DRM: ingest DRW histograms + run the policy stack at the safe point
-        self.drm.observe(np.asarray(res.hist_keys), np.asarray(res.hist_counts),
-                         total_records=float(loads.sum()))
+            # DRM: ingest DRW histograms + run the policy stack at the safe point
+            self.drm.observe(host_fetch(res.hist_keys), host_fetch(res.hist_counts),
+                             total_records=float(loads.sum()))
         at_checkpoint = (len(self.metrics) + 1) % self.checkpoint_interval == 0
         requested = None
         if at_checkpoint and self._pending_resize is not None:
@@ -416,11 +546,16 @@ class StreamingJob:
                                    policies_enabled=self.dr_enabled)
 
         # execute the action (state only moves here, at the safe point).
-        # Any taken action drains first: a migration must see this batch's
-        # rows merged (bit-identical to the serial trajectory), and a
-        # backend switch rebuilds the steps the in-flight finish came from.
+        # Any taken action drains *both* in-flight stages first: the
+        # pending finish completes — a migration must see this batch's rows
+        # merged (bit-identical to the serial trajectory), and a backend
+        # switch rebuilds the steps the in-flight finish came from — and
+        # the depth-2 staged start is discarded, because its route used the
+        # partitioner this action replaces: the pre-routed batch replays
+        # under the new one when it arrives, exactly as serial would run it.
         if action.taken:
             self._drain_inflight()
+            self._discard_staged()
         (rel_mig, mig_overflow, mig_rows, plan_rows, mig_shipped, mig_moved,
          mig_by_class) = 0.0, 0, 0, 0, 0, 0, None
         if isinstance(action, Resize):
@@ -446,24 +581,25 @@ class StreamingJob:
             self._apply_backend_switch()
         # a taken Split needs no execution here: the DRM stamped the replica
         # table and the very next batch's route kernels fan the key out
-        if mig_rows:
-            self.telemetry.record_exchange(migrate_stats(
-                shipped_rows=mig_shipped * w,  # helper re-divides per worker
-                buffer_rows=mig_rows,
-                moved_rows=mig_moved,
-                overflow=mig_overflow,
-                num_workers=w,
-                shipped_rows_by_class=mig_by_class,
-            ))
-            self.telemetry.record_overflow(migration=mig_overflow)
+        with safe_point():  # migrations only fire at safe points
+            if mig_rows:
+                self.telemetry.record_exchange(migrate_stats(
+                    shipped_rows=mig_shipped * w,  # helper re-divides per worker
+                    buffer_rows=mig_rows,
+                    moved_rows=mig_moved,
+                    overflow=mig_overflow,
+                    num_workers=w,
+                    shipped_rows_by_class=mig_by_class,
+                ))
+                self.telemetry.record_overflow(migration=mig_overflow)
 
-        # per-class shipped rows (shuffle + migration, per worker) for the
-        # locality benches; zeros when the job carries no topology
-        by_class = np.zeros(DISTANCE_CLASSES, np.int64)
-        if stats.rows_by_class is not None:
-            by_class += stats.rows_by_class
-        if mig_by_class is not None:
-            by_class += np.asarray(mig_by_class, np.int64) // w
+            # per-class shipped rows (shuffle + migration, per worker) for
+            # the locality benches; zeros when the job carries no topology
+            by_class = np.zeros(DISTANCE_CLASSES, np.int64)
+            if stats.rows_by_class is not None:
+                by_class += np.asarray(host_fetch(stats.rows_by_class), np.int64)
+            if mig_by_class is not None:
+                by_class += np.asarray(mig_by_class, np.int64) // w
 
         m = BatchMetrics(
             batch=len(self.metrics),
@@ -474,7 +610,7 @@ class StreamingJob:
             # this flag's sum)
             repartitioned=action.taken and action.moves_state,
             relative_migration=rel_mig,
-            overflow=int(res.overflow) + mig_overflow,
+            overflow=overflow_i + mig_overflow,
             # overlapped: the count as of the last drain (exact state rows
             # would sync the in-flight merge; serial keeps today's numbers)
             state_rows=(self._last_state_rows if overlap else
@@ -492,6 +628,8 @@ class StreamingJob:
             backend=batch_backend,
             exchange_wall_s=exchange_wall,
             overlapped=overlap,
+            pipelined=pipelined,
+            overlap_fraction=signals.overlap_fraction,
             split_keys=len(self.drm.split_keys),
             shipped_rows_by_class=tuple(int(x) for x in by_class),
         )
@@ -510,9 +648,10 @@ class StreamingJob:
     def _state_rows(self) -> int:
         """Live keyed-state rows across all workers (the migration scale).
         Drains any in-flight exchange (via the ``state_keys`` property)."""
-        self._last_state_rows = int(np.asarray(
-            jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)
-        ).sum())
+        with safe_point():
+            self._last_state_rows = int(host_fetch(
+                jax.vmap(lambda k: jnp.sum(k != KEY_SENTINEL))(self.state_keys)
+            ).sum())
         return self._last_state_rows
 
     # -- elastic resize -------------------------------------------------
@@ -550,9 +689,11 @@ class StreamingJob:
         stats = self._migrate_state(old)
         self.num_partitions = n
         # the shuffle step's lane count / loads vector followed the old
-        # topology; _build re-derives the spec on the next batch
+        # topology; _build re-derives the spec on the next batch, and the
+        # least-load vector is re-seeded at the new width
         self._shuffle = None
         self._shuffle_sig = None
+        self._part_loads = None
         return stats
 
     def _migrate_state(self, old_part: Partitioner, *,
@@ -576,7 +717,8 @@ class StreamingJob:
         ships every one of them back to its key's home — undersized lanes
         would silently drop the partials being merged.
         """
-        sk = np.asarray(self.state_keys).reshape(-1)
+        with safe_point():  # migrations are safe points: the plan reads state
+            sk = host_fetch(self.state_keys).reshape(-1)
         live = sk[sk != KEY_SENTINEL].astype(np.int64)
         plan = plan_migration(old_part, self.drm.partitioner, live)
         if full_lanes or self.drm.split_keys:
@@ -612,21 +754,42 @@ class StreamingJob:
              mig_ov, mig_lane_ov, mig_shipped, mig_by) = out
             kept_keys = jnp.where(kv_valid, kk, KEY_SENTINEL)
             self._sk, self._sv, _ = self._merge(kept_keys, vv, rk, rv, rva)
-        rel_mig = float(moved) / max(float(total), 1e-9)
+        # every control output below left the migrate start phase; fetching
+        # them at this safe point blocks on work already forced (the ship
+        # itself stays in flight on the overlap path)
+        with safe_point():
+            moved_i = int(host_fetch(moved))
+            total_i = int(host_fetch(total))
+            mig_by_np = np.asarray(host_fetch(mig_by), np.int64)
+            mig_shipped_i = int(host_fetch(mig_shipped))
+            mig_ov_i = int(host_fetch(mig_ov))
+        rel_mig = float(moved_i) / max(float(total_i), 1e-9)
         mig_rows = self.num_workers * lane_cap  # rows received per worker
         # rows/wall are recorded by process_batch (one call per migration);
         # the hot-lane vector is only available here, so it rides a
-        # zero-row record into the same telemetry window
+        # zero-row record into the same telemetry window (device array —
+        # Telemetry folds it at the next snapshot, not here)
         self.telemetry.record_exchange(ExchangeStats(
-            rows=0, lane_overflow=np.asarray(mig_lane_ov)
+            rows=0, lane_overflow=mig_lane_ov
         ))
-        return (rel_mig, int(mig_ov), mig_rows, plan_rows,
-                int(np.asarray(mig_shipped)) // self.num_workers, int(moved),
-                np.asarray(mig_by, np.int64))
+        return (rel_mig, mig_ov_i, mig_rows, plan_rows,
+                mig_shipped_i // self.num_workers, moved_i, mig_by_np)
 
     # ------------------------------------------------------------------
     def run(self, batches: Iterable[np.ndarray]) -> list[BatchMetrics]:
-        return [self.process_batch(b) for b in batches]
+        # depth-2 needs one batch of lookahead: park batch N+1 where
+        # process_batch can stage its start behind batch N's ship.  The
+        # check re-runs per batch so a mid-stream env/config flip degrades
+        # to depth 1 instead of staging work nobody will claim.
+        out: list[BatchMetrics] = []
+        seq = list(batches)
+        for i, b in enumerate(seq):
+            self._next_batch = (seq[i + 1]
+                                if self._depth2_active() and i + 1 < len(seq)
+                                else None)
+            out.append(self.process_batch(b))
+        self._next_batch = None
+        return out
 
     # -- state inspection ----------------------------------------------
     def state_count(self, key: int) -> float:
@@ -645,9 +808,13 @@ class StreamingJob:
         }
 
     def restore(self, snap: dict) -> None:
-        # any in-flight finish belongs to the state being replaced: discard
+        # any in-flight finish belongs to the state being replaced: discard,
+        # along with any staged lookahead start (its route used the replaced
+        # partitioner) and the least-load vector (measured pre-restore)
         self._inflight = None
         self._hidden_since = None
+        self._staged = None
+        self._part_loads = None
         self.state_keys = jnp.asarray(snap["state_keys"])
         self.state_vals = jnp.asarray(snap["state_vals"])
         drm_snap = {k[4:]: v for k, v in snap.items() if k.startswith("drm_")}

@@ -98,6 +98,7 @@ class ExchangeBackend(Protocol):
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
         counts: jax.Array | None = None,
+        buffers: tuple | None = None,
     ) -> ExchangeResult: ...
 
     def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult: ...
@@ -126,6 +127,7 @@ def _bucketize(
     payloads: Sequence[Payload],
     slot: jax.Array | None = None,
     counts: jax.Array | None = None,
+    buffers: tuple | None = None,
 ) -> ExchangeResult:
     """Scatter records into ``[L, capacity]`` buffers; count overflow.
 
@@ -135,6 +137,15 @@ def _bucketize(
     otherwise they are derived with ``dispatch_count``.  With per-lane
     ``counts`` in hand the capacity drops per lane are just the excess over
     capacity — no second O(n) scatter pass.
+
+    ``buffers`` is the reuse seam for the double-buffered pipeline: a
+    ``(valid_buf, payload_bufs)`` set from a previous exchange (shapes and
+    dtypes must match this call's buffers).  When provided, the scatter
+    resets the passed-in set to its fill values and writes into it instead
+    of materializing fresh ``zeros``/``full`` buffers — under a jit that
+    donates the set, XLA performs both in place, so the steady-state loop
+    never reallocates its ``[L, cap]`` send buffers.  The produced values
+    are bit-identical to the fresh-allocation path by construction.
     """
     lane = jnp.where(valid, lane, 0).astype(jnp.int32)
     if slot is None:
@@ -166,12 +177,26 @@ def _bucketize(
     # silently.
     s = jnp.where(ok, slot, spec.capacity)
     shape = (spec.num_lanes, spec.capacity)
-    buf_valid = jnp.zeros(shape, bool).at[lane, s].set(ok, mode="drop")
-    bufs = tuple(
-        jnp.full(shape + p.data.shape[1:], p.fill, p.data.dtype)
-        .at[lane, s].set(p.data, mode="drop")
-        for p in payloads
-    )
+    if buffers is None:
+        buf_valid = jnp.zeros(shape, bool).at[lane, s].set(ok, mode="drop")
+        bufs = tuple(
+            jnp.full(shape + p.data.shape[1:], p.fill, p.data.dtype)
+            .at[lane, s].set(p.data, mode="drop")
+            for p in payloads
+        )
+    else:
+        prev_valid, prev_bufs = buffers
+        assert prev_valid.shape == shape and len(prev_bufs) == len(payloads), (
+            prev_valid.shape, shape, len(prev_bufs), len(payloads))
+        # reset-then-scatter on the recycled set: same values as the fresh
+        # path, but expressed as in-place updates so a donated set is
+        # rewritten rather than reallocated
+        buf_valid = prev_valid.at[:].set(False).at[lane, s].set(ok, mode="drop")
+        bufs = tuple(
+            b.at[:].set(jnp.asarray(p.fill, b.dtype))
+            .at[lane, s].set(p.data, mode="drop")
+            for b, p in zip(prev_bufs, payloads)
+        )
     return ExchangeResult(
         buf_valid, bufs, SendInfo(lane, slot, ok, overflow, lane_overflow),
         shipped_rows=jnp.zeros((), jnp.int32),
@@ -280,8 +305,10 @@ class DenseBackend:
 
     name = "dense"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None,
+                  buffers=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts,
+                          buffers=buffers)
 
     def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         """No count phase to run — only stamp the (statically known) traffic
@@ -338,8 +365,10 @@ class RaggedBackend:
 
     name = "ragged"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None,
+                  buffers=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts,
+                          buffers=buffers)
 
     def _ship(self, spec: ExchangeSpec, buffers: ExchangeResult,
               recv_counts: jax.Array) -> ExchangeResult:
@@ -496,8 +525,10 @@ class HierarchicalBackend:
 
     name = "hierarchical"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None,
+                  buffers=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts,
+                          buffers=buffers)
 
     def _plan(self, spec: ExchangeSpec) -> tuple[int, int] | None:
         """``(num_hosts, lanes_per_host)`` when the two-hop collective
@@ -595,8 +626,10 @@ class LocalBackend:
 
     name = "local"
 
-    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None):
-        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts)
+    def bucketize(self, spec, lane, valid, payloads, slot=None, counts=None,
+                  buffers=None):
+        return _bucketize(spec, lane, valid, payloads, slot=slot, counts=counts,
+                          buffers=buffers)
 
     def a2a_start(self, spec: ExchangeSpec, buffers: ExchangeResult) -> ExchangeResult:
         assert spec.axis is None, (

@@ -98,6 +98,7 @@ def route_dispatch(
     num_lanes: int,
     num_partitions: int = 0,
     use_pallas: bool | None = None,
+    part_loads: jax.Array | None = None,
 ):
     """Fused key -> partition lookup + lane slot assignment.
 
@@ -113,10 +114,21 @@ def route_dispatch(
     ``tables.heavy_repl > 1`` fan out over their replica partitions.  Leave
     it 0 (the default) to route every key to its home — the state-migration
     path *must*, since homes are where split partials converge and merge.
+
+    ``part_loads`` (a ``[num_partitions]`` load vector, jnp path only)
+    switches the split-replica pick from the stateless hash offset to the
+    two-choice least-load tiebreak — see
+    :func:`repro.kernels.ref.split_choice_ref`.  The Pallas kernel keeps
+    the hash, so callers must gate ``use_pallas=False`` statically when
+    they feed loads (asserted here).
     """
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        use_pallas = jax.default_backend() == "tpu" and part_loads is None
     if use_pallas:
+        assert part_loads is None, (
+            "the Pallas route kernel keeps the stateless hash replica pick; "
+            "pass use_pallas=False to use the least-load tiebreak"
+        )
         from repro.kernels import ops
 
         part, slot, counts = ops.route_slots(
@@ -129,6 +141,7 @@ def route_dispatch(
             seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
             heavy_repl=tables.heavy_repl if num_partitions > 0 else None,
             num_partitions=num_partitions,
+            part_loads=part_loads if num_partitions > 0 else None,
         )
     return part, slot, counts
 
@@ -145,6 +158,8 @@ def route_bucketize(
     key_fill: int = KEY_SENTINEL,
     num_partitions: int = 0,
     use_pallas: bool | None = None,
+    buffers: tuple | None = None,
+    part_loads: jax.Array | None = None,
 ):
     """Fused route -> bucketize for the shuffle's ``(keys, vals, part)``
     payload triple.
@@ -157,11 +172,23 @@ def route_bucketize(
     VMEM between the route and the scatter; elsewhere it is
     :func:`route_dispatch` + ``bucketize`` — bit-identical by the kernel's
     ref-twin contract.
+
+    ``buffers`` is the double-buffer reuse seam (see
+    :meth:`Exchange.bucketize`): a recycled ``(valid_buf, payload_bufs)``
+    set the jnp scatter resets and writes into.  The Pallas kernel writes
+    its own kernel-managed outputs, so the seam is a no-op on that path —
+    still bit-identical, just without the realloc saving.  ``part_loads``
+    is the least-load split-replica feed (jnp path only, see
+    :func:`route_dispatch`).
     """
     spec = exchange.spec
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        use_pallas = jax.default_backend() == "tpu" and part_loads is None
     if use_pallas:
+        assert part_loads is None, (
+            "least-load replica pick requires the jnp route path "
+            "(use_pallas=False)"
+        )
         from repro.kernels import ops
 
         part, slot, counts, buf_valid, bk, bv, bp = ops.route_bucketize(
@@ -188,13 +215,13 @@ def route_bucketize(
         part, slot, counts = route_dispatch(
             tables, keys, valid, num_hosts=num_hosts, seed=seed,
             num_lanes=spec.num_lanes, num_partitions=num_partitions,
-            use_pallas=False,
+            use_pallas=False, part_loads=part_loads,
         )
         dest = jnp.where(valid, part, 0)
         buffers = exchange.bucketize(
             dest % spec.num_lanes, valid,
             [Payload(keys, key_fill), Payload(vals, 0), Payload(dest, 0)],
-            slot=slot, counts=counts,
+            slot=slot, counts=counts, buffers=buffers,
         )
     return part, buffers
 
@@ -222,9 +249,18 @@ class Exchange:
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
         counts: jax.Array | None = None,
+        buffers: tuple | None = None,
     ) -> ExchangeResult:
+        """Build the lane-major send buffers.
+
+        ``buffers`` is the double-buffer reuse seam: a recycled
+        ``(valid_buf, payload_bufs)`` set from a drained exchange that the
+        scatter resets and writes into instead of allocating fresh — values
+        bit-identical either way (see ``backends._bucketize``).
+        """
         return self.backend.bucketize(
-            self.spec, lane, valid, payloads, slot=slot, counts=counts
+            self.spec, lane, valid, payloads, slot=slot, counts=counts,
+            buffers=buffers,
         )
 
     # -- step 3: the collective (split-phase) ------------------------------
@@ -235,6 +271,7 @@ class Exchange:
         payloads: Sequence[Payload],
         slot: jax.Array | None = None,
         counts: jax.Array | None = None,
+        buffers: tuple | None = None,
     ) -> PendingExchange:
         """Bucketize + run the transport's control phase; rows stay local.
 
@@ -242,8 +279,11 @@ class Exchange:
         ``lane_counts``, ``recv_counts``) is final on the returned
         :class:`PendingExchange`; :meth:`finish` ships the payload rows.
         ``finish(start(...))`` is bit-identical to calling the exchange.
+        ``buffers`` recycles a drained send-buffer set (see
+        :meth:`bucketize`).
         """
-        return self.start_from(self.bucketize(lane, valid, payloads, slot=slot, counts=counts))
+        return self.start_from(self.bucketize(
+            lane, valid, payloads, slot=slot, counts=counts, buffers=buffers))
 
     def start_from(self, buffers: ExchangeResult) -> PendingExchange:
         """Start the collective from already-bucketized buffers (the fused

@@ -60,6 +60,12 @@ def route_slots(keys: jax.Array, valid: jax.Array, tables, *, num_hosts: int,
     Returns ``(part[n], slot[n], counts[num_lanes])`` — the slot ranks each
     valid record within its ``part % num_lanes`` lane.  ``num_partitions >
     0`` activates the split-key replica pick from ``tables.heavy_repl``.
+
+    The kernel's replica pick is the stateless fmix32 offset; the jnp twin
+    additionally supports the load-aware two-choice pick (``part_loads`` in
+    ``kernels.ref``) — drivers that enable it must gate the Pallas path off
+    statically (``use_pallas=False`` in the exchange plane), never per
+    batch, so kernel and twin cannot diverge at runtime.
     """
     k, n = _pad_to(keys.astype(jnp.int32), ROUTE_BLK)
     v, _ = _pad_to(valid.astype(jnp.int32), ROUTE_BLK)

@@ -38,7 +38,8 @@ def sketch_update_ref(keys, valid, *, depth=4, width=2048):
     return jnp.stack(rows)
 
 
-def split_choice_ref(keys, heavy_keys, heavy_repl, *, seed=0, num_partitions=0):
+def split_choice_ref(keys, heavy_keys, heavy_repl, *, seed=0, num_partitions=0,
+                     home=None, part_loads=None):
     """Replica pick for split heavy keys (bit-identical to the fused kernels).
 
     Returns ``(hit & split, offset)``: whether each record's key is in the
@@ -46,7 +47,17 @@ def split_choice_ref(keys, heavy_keys, heavy_repl, *, seed=0, num_partitions=0):
     ``[0, d)``.  The hash folds the record's (shard-local) index into the
     key mix so one hot key fans out over its d consecutive partitions; with
     ``d = 1`` the offset is identically 0, so unsplit trajectories are
-    untouched bit-for-bit."""
+    untouched bit-for-bit.
+
+    With ``home`` (per-record home partitions) and ``part_loads`` (a
+    ``[num_partitions]`` load vector, fed from ``Signals`` at safe points)
+    the pick becomes Partial-Key-Grouping's two-choice least-load tiebreak:
+    a second independent hash proposes an alternate replica and the record
+    goes to whichever of the two target partitions carries the lower load
+    (ties keep the first hash — with an all-equal load vector the routing
+    is value-identical to the stateless pick).  The Pallas kernel keeps the
+    single-hash path; callers gate this statically (jnp twin only).
+    """
     keys = keys.astype(jnp.int32)
     mixed = _fmix32(keys.astype(jnp.uint32) ^ jnp.uint32((seed * 0x9E3779B9) & 0xFFFFFFFF))
     idx = jnp.arange(keys.shape[0], dtype=jnp.uint32)
@@ -57,20 +68,30 @@ def split_choice_ref(keys, heavy_keys, heavy_repl, *, seed=0, num_partitions=0):
     # where a sentinel record's eq-matmul over pad rows sums repl to 0)
     d = jnp.maximum(heavy_repl[bidx].astype(jnp.int32), 1)
     offset = (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32) % d
+    if part_loads is not None and home is not None and num_partitions > 0:
+        h2 = _fmix32(h + jnp.uint32(0x85EBCA6B))
+        offset2 = (h2 & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32) % d
+        loads = jnp.asarray(part_loads, jnp.float32)
+        p1 = (home.astype(jnp.int32) + offset) % num_partitions
+        p2 = (home.astype(jnp.int32) + offset2) % num_partitions
+        offset = jnp.where(loads[p2] < loads[p1], offset2, offset)
     return hit, offset
 
 
 def lookup_dispatch_ref(keys, valid, heavy_keys, heavy_parts, host_to_part, *,
                         seed=0, num_hosts=4096, num_lanes,
-                        heavy_repl=None, num_partitions=0):
+                        heavy_repl=None, num_partitions=0, part_loads=None):
     """Fused twin: partition lookup + lane slot in one call (bit-identical
     to ``kernels.lookup_dispatch``).  With ``heavy_repl`` and a positive
-    ``num_partitions`` the route also applies the split-key replica pick."""
+    ``num_partitions`` the route also applies the split-key replica pick;
+    ``part_loads`` upgrades that pick to the two-choice least-load tiebreak
+    (jnp twin only — see :func:`split_choice_ref`)."""
     part = partition_apply_ref(keys, heavy_keys, heavy_parts, host_to_part,
                                seed=seed, num_hosts=num_hosts)
     if heavy_repl is not None and num_partitions > 0 and heavy_keys.shape[0] > 0:
         hit, offset = split_choice_ref(
-            keys, heavy_keys, heavy_repl, seed=seed, num_partitions=num_partitions
+            keys, heavy_keys, heavy_repl, seed=seed, num_partitions=num_partitions,
+            home=part, part_loads=part_loads,
         )
         part = jnp.where(hit, (part + offset) % num_partitions, part).astype(jnp.int32)
     slot, counts = dispatch_count_ref(part % num_lanes, valid, num_parts=num_lanes)
@@ -79,7 +100,7 @@ def lookup_dispatch_ref(keys, valid, heavy_keys, heavy_parts, host_to_part, *,
 
 def route_bucketize_ref(keys, valid, vals, heavy_keys, heavy_parts, host_to_part, *,
                         seed=0, num_hosts=4096, num_lanes, capacity, key_fill,
-                        heavy_repl=None, num_partitions=0):
+                        heavy_repl=None, num_partitions=0, part_loads=None):
     """Fused twin of ``kernels.route_bucketize``: route + slot + scatter into
     the ``[L, capacity]`` send buffers, bit-identical to the kernel (and to
     ``route_dispatch`` + the exchange plane's ``_bucketize``)."""
@@ -87,6 +108,7 @@ def route_bucketize_ref(keys, valid, vals, heavy_keys, heavy_parts, host_to_part
         keys, valid, heavy_keys, heavy_parts, host_to_part,
         seed=seed, num_hosts=num_hosts, num_lanes=num_lanes,
         heavy_repl=heavy_repl, num_partitions=num_partitions,
+        part_loads=part_loads,
     )
     lane = jnp.where(valid, part % num_lanes, 0).astype(jnp.int32)
     ok = valid & (slot >= 0) & (slot < capacity)

@@ -353,3 +353,103 @@ def test_streaming_telemetry_carries_replica_rows():
     rr = seen[-1].exchange_replica_rows
     assert rr is not None and rr.sum() > 0
     assert (rr > 0).sum() > 1  # the hot key really landed on >1 partition
+
+
+# ---------------------------------------------------------------------------
+# least-load replica pick (DRConfig.split_least_load)
+# ---------------------------------------------------------------------------
+
+
+def test_least_load_two_choice_ref():
+    """The two-choice pick steers split traffic off an overloaded replica
+    partition, never leaves the replica set, and with an all-equal load
+    vector is value-identical to the stateless pick (ties keep hash 1)."""
+    n_parts = 8
+    keys = np.full(512, 7, np.int32)
+    part = uniform_partitioner(n_parts, 4096, 0, heavy_capacity=128)
+    part = part.with_splits({7: 4})
+    t = part.tables()
+    home = int(part.lookup_np(np.array([7], np.int32))[0])
+    homes = jnp.full(512, home, jnp.int32)
+    kw = dict(seed=part.seed, num_partitions=n_parts)
+
+    _, off0 = ref.split_choice_ref(jnp.asarray(keys), t.heavy_keys,
+                                   t.heavy_repl, **kw)
+    # all-equal loads: bit-identical routing to the stateless pick
+    _, off_eq = ref.split_choice_ref(jnp.asarray(keys), t.heavy_keys,
+                                     t.heavy_repl, home=homes,
+                                     part_loads=jnp.ones(n_parts), **kw)
+    np.testing.assert_array_equal(np.asarray(off0), np.asarray(off_eq))
+    # no loads / no home: the load-aware block is inert
+    _, off_nl = ref.split_choice_ref(jnp.asarray(keys), t.heavy_keys,
+                                     t.heavy_repl, home=homes, **kw)
+    np.testing.assert_array_equal(np.asarray(off0), np.asarray(off_nl))
+
+    # overload the stateless pick's favourite replica: traffic moves off it
+    dest0 = (home + np.asarray(off0)) % n_parts
+    hot_rep = np.bincount(dest0, minlength=n_parts).argmax()
+    loads = np.ones(n_parts, np.float32)
+    loads[hot_rep] = 1e9
+    _, off_l = ref.split_choice_ref(jnp.asarray(keys), t.heavy_keys,
+                                    t.heavy_repl, home=homes,
+                                    part_loads=jnp.asarray(loads), **kw)
+    dest_l = (home + np.asarray(off_l)) % n_parts
+    assert (dest_l == hot_rep).sum() < (dest0 == hot_rep).sum()
+    # both hashes stay inside the key's consecutive replica window
+    assert set(np.unique(dest_l).tolist()) <= {
+        (home + j) % n_parts for j in range(4)
+    }
+
+
+def test_least_load_gates_pallas_statically():
+    """part_loads is jnp-twin only: the plane refuses to route it through
+    the Pallas kernel (the kernel keeps the stateless pick), and the
+    default use_pallas resolution turns the kernel off when a load vector
+    is present."""
+    from repro.exchange import ExchangeSpec, make_exchange
+    from repro.exchange.plane import route_dispatch
+
+    n_parts = 8
+    part = uniform_partitioner(n_parts, 4096, 0, heavy_capacity=128)
+    part = part.with_splits({7: 4})
+    keys = jnp.asarray(np.full(64, 7, np.int32))
+    valid = jnp.ones(64, bool)
+    loads = jnp.ones(n_parts, jnp.float32)
+    with pytest.raises(AssertionError):
+        route_dispatch(part.tables(), keys, valid, num_hosts=part.num_hosts,
+                       seed=part.seed, num_lanes=4, num_partitions=n_parts,
+                       part_loads=loads, use_pallas=True)
+    # default resolution: loads present -> jnp twin, no raise
+    p_l, _, _ = route_dispatch(part.tables(), keys, valid,
+                               num_hosts=part.num_hosts, seed=part.seed,
+                               num_lanes=4, num_partitions=n_parts,
+                               part_loads=loads)
+    p_0, _, _ = route_dispatch(part.tables(), keys, valid,
+                               num_hosts=part.num_hosts, seed=part.seed,
+                               num_lanes=4, num_partitions=n_parts)
+    # equal loads route identically to the stateless pick
+    np.testing.assert_array_equal(np.asarray(p_l), np.asarray(p_0))
+
+
+def test_least_load_job_bit_identical_across_drivers():
+    """split_least_load end-to-end: serial, depth-1 and depth-2 drivers all
+    feed the same previous-batch load vector to the route at safe points,
+    so their trajectories and final state stay bit-identical — and the
+    split answer stays exact."""
+    batches = _hot_batches(6, 4096, hot_frac=0.5)
+    out = {}
+    for name, (overlap, depth) in {"serial": (False, 1), "d1": (True, 1),
+                                   "d2": (True, 2)}.items():
+        cfg = DRConfig(split_keys_enabled=True, split_patience=1,
+                       imbalance_trigger=100.0, split_least_load=True,
+                       overlap_exchange=overlap, pipeline_depth=depth)
+        job = StreamingJob(state_capacity=8192, dr=cfg, seed=0)
+        ms = job.run(batches)
+        out[name] = (job, [(m.action, m.reason, m.overflow, m.shipped_rows,
+                            m.padded_rows, m.backend, m.split_keys,
+                            round(m.imbalance, 9)) for m in ms])
+    assert out["serial"][1] == out["d1"][1] == out["d2"][1]
+    assert any(t[0] == "split" for t in out["d2"][1])
+    true = float(sum((b == 7).sum() for b in batches))
+    for name in out:
+        assert out[name][0].state_count(7) == true, name
