@@ -177,6 +177,8 @@ def run(batches: int = 6, batch_size: int = 16_384):
     rows.extend(_auto_backend(batches, batch_size, state_capacity))
     rows.extend(_hot_key(batches, batch_size, state_capacity))
     rows.extend(_topology(batches, batch_size))
+    rows.extend(_fault_free_identity(batches, batch_size, state_capacity))
+    rows.extend(_failure(batches, batch_size))
     return rows
 
 
@@ -651,6 +653,146 @@ def _topology_decisions():
         ("fig6/topology_decisions/flipped", flips,
          "safe points where locality pricing changed the recorded choice"),
     ]
+
+
+_FAILURE_SCRIPT = textwrap.dedent(
+    """
+    import json, os, sys, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.core.drm import DRConfig
+    from repro.core.streaming import StreamingJob
+    from repro.data.generators import drifting_zipf
+    from repro.exchange import FaultPlan, FaultyBackend, LaneFault
+
+    batches, batch_size = int(sys.argv[1]), int(sys.argv[2])
+    stream = list(drifting_zipf(batches, batch_size, num_keys=2_000,
+                                exponent=1.3, drift_every=100, seed=0))
+    total_records = float(sum(len(b) for b in stream))
+
+    def run(backend=None):
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = {"exchange_backend": backend} if backend is not None else {}
+        job = StreamingJob(mesh=mesh, num_partitions=8, state_capacity=8_192,
+                           dr=DRConfig(imbalance_trigger=1e9,
+                                       snapshot_interval=3), **kw)
+        ms = job.run(stream)
+        return job, ms
+
+    ref_job, _ = run()
+    # kill lane 5 at exchange tick 4: one gap batch sits in the replay
+    # buffer (snapshots refresh every 3 batches), so the recovery must
+    # restore, replay the gap, and retry the lost batch on 7 workers
+    plan = FaultPlan(faults=(LaneFault(4, 5, "kill"),))
+    job, ms = run(FaultyBackend("dense", plan))
+    assert len(job.recoveries) == 1, job.recoveries
+    rec = job.recoveries[0]
+    assert rec.kind == "evict", rec
+
+    got = float(np.asarray(job.state_vals).sum())
+    want = float(np.asarray(ref_job.state_vals).sum())
+    assert want == total_records, (want, total_records)
+    # exact per-key conservation, every key — the zero-loss claim
+    all_keys = np.concatenate(stream)
+    for key in np.unique(all_keys):
+        a = job.state_count(int(key))
+        b = float((all_keys == key).sum())
+        assert a == b, (int(key), a, b)
+    out = {
+        "rows_lost": int(round(want - got)),
+        "recovery_wall_ms": rec.wall_s * 1e3,
+        "replayed": rec.replayed,
+        "workers_after": rec.workers,
+        "lane": rec.lane,
+        "kills": job.exchange_backend.kills,
+    }
+    print("FAILURE-RESULT " + json.dumps(out))
+    """
+)
+
+
+def _failure(batches: int, batch_size: int):
+    """Kill-a-worker scenario (Fig 6 failure domain): 8 real shards, hard
+    loss of lane 5 mid-stream, zero-loss recovery through the safe-point
+    protocol — restore the auto-snapshot, replay the gap, resume on the
+    shrunk 7-worker topology.  Subprocess: the device count must be fixed
+    before jax initializes.  Emits the recovery wall and the row-loss
+    count; the CI smoke gate greps for ``fig6/rows_lost`` being exactly
+    zero."""
+    n = max(batches, 6)  # the kill tick needs stream to outlive it
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _FAILURE_SCRIPT, str(n), str(batch_size)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    marker = "FAILURE-RESULT "
+    line = next((l for l in proc.stdout.splitlines() if l.startswith(marker)),
+                None)
+    if proc.returncode != 0 or line is None:
+        raise AssertionError(
+            f"kill-a-worker subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    out = json.loads(line[len(marker):])
+    assert out["rows_lost"] == 0, out
+    assert out["workers_after"] == 7, out
+    assert out["kills"] == 1, out
+    return [
+        ("fig6/rows_lost", out["rows_lost"],
+         f"rows lost across a hard loss of lane {out['lane']} "
+         f"(protocol contract: exactly 0)"),
+        ("fig6/recovery_wall_ms", out["recovery_wall_ms"],
+         f"restore + replay of {out['replayed']} gap batch(es) + retry "
+         f"onto {out['workers_after']} surviving workers"),
+    ]
+
+
+def _fault_free_identity(batches: int, batch_size: int, state_capacity: int):
+    """An installed, never-firing FaultPlan must be bit-identical to no
+    seam at all — serial, depth-1 and depth-2 drivers alike (the seam
+    fires at the host boundary; the traced program is untouched).  Runs
+    in-process on the single-device mesh; the 8-shard version gates in
+    tests/test_distributed.py."""
+    from repro.exchange import FaultPlan, FaultyBackend
+
+    stream = [zipf_keys(batch_size, num_keys=2_000, exponent=1.3, seed=s)
+              for s in range(max(batches, 4))]
+    rows = []
+    modes = {
+        "serial": dict(dr=dict(pipeline_depth=1), env="1"),
+        "depth1": dict(dr=dict(pipeline_depth=1), env=None),
+        "depth2": dict(dr=dict(pipeline_depth=2), env=None),
+    }
+    for mode, spec in modes.items():
+        prev = os.environ.get("REPRO_DISABLE_OVERLAP")
+        if spec["env"] is not None:
+            os.environ["REPRO_DISABLE_OVERLAP"] = spec["env"]
+        try:
+            acts = {}
+            for tag, backend in (("plain", "dense"),
+                                 ("seamed", FaultyBackend("dense",
+                                                          FaultPlan()))):
+                job = StreamingJob(
+                    num_partitions=8, state_capacity=state_capacity,
+                    dr=DRConfig(imbalance_trigger=1.1,
+                                migration_cost_weight=0.2, **spec["dr"]),
+                    exchange_backend=backend,
+                )
+                ms = job.run(stream)
+                acts[tag] = ([(m.action, m.reason, m.overflow,
+                               m.shipped_rows) for m in ms],
+                             float(np.asarray(job.state_vals).sum()))
+            assert acts["plain"] == acts["seamed"], (mode, acts)
+        finally:
+            if spec["env"] is not None:
+                if prev is None:
+                    os.environ.pop("REPRO_DISABLE_OVERLAP", None)
+                else:
+                    os.environ["REPRO_DISABLE_OVERLAP"] = prev
+        rows.append((f"fig6/fault_free_identity/{mode}", 1,
+                     "never-firing FaultPlan bit-identical to no seam "
+                     "(trajectory + state mass)"))
+    return rows
 
 
 def _resize_cost(base_n: int, target_n: int, batch_size: int, state_capacity: int):

@@ -16,6 +16,11 @@ gain.  This package is where every such decision lives:
   :class:`PlacementPolicy`, :class:`BackendPolicy`, :class:`SplitPolicy`)
   sharing one exchange-lane cost model and one :class:`CooldownGuard`
   hysteresis rule.
+* :mod:`repro.control.health` — the failure-domain layer: per-lane
+  :class:`LaneHealth` (EWMA straggle + failure streaks) and the
+  :class:`HealthPolicy` emitting :class:`Quarantine` / :class:`Evict` /
+  :class:`Recover` — first in the evaluate precedence, because a sick lane
+  invalidates every load-based signal downstream.
 * :mod:`repro.control.log` — the :class:`DecisionLog` recording every
   decision, including declined ones, with reasons.
 
@@ -24,7 +29,10 @@ that feed signals in and execute the returned actions.
 """
 from repro.control.actions import (
     Action,
+    Evict,
     NoOp,
+    Quarantine,
+    Recover,
     Repartition,
     Replace,
     Resize,
@@ -32,6 +40,7 @@ from repro.control.actions import (
     SwitchBackend,
     Unsplit,
 )
+from repro.control.health import HealthPolicy, LaneHealth
 from repro.control.log import Decision, DecisionLog
 from repro.control.policy import (
     BackendPolicy,
@@ -49,8 +58,13 @@ __all__ = [
     "CooldownGuard",
     "Decision",
     "DecisionLog",
+    "Evict",
+    "HealthPolicy",
+    "LaneHealth",
     "NoOp",
     "PlacementPolicy",
+    "Quarantine",
+    "Recover",
     "Repartition",
     "RepartitionPolicy",
     "Replace",

@@ -15,7 +15,10 @@ from repro.core.partitioner import Partitioner
 
 __all__ = [
     "Action",
+    "Evict",
     "NoOp",
+    "Quarantine",
+    "Recover",
     "Repartition",
     "Resize",
     "Replace",
@@ -132,6 +135,49 @@ class Unsplit(Action):
     key: int = 0
     prev: Partitioner = None
     kind: ClassVar[str] = "unsplit"
+
+
+@dataclasses.dataclass(frozen=True)
+class Quarantine(Action):
+    """Circuit-break a sick lane: fold its partitions onto the healthy
+    workers (the modulo placement re-folds them once the lane leaves the
+    collective) and park the device for a possible :class:`Recover`.
+
+    Executing it *is* a state migration — every row the sick lane held
+    re-lands on a surviving worker — priced like any other move
+    (``est_migration``, the fold's exchange-lane cost under the active
+    transport).  ``lane`` is the *current* lane index; the driver maps it
+    to the physical device."""
+
+    lane: int = 0
+    straggle_ms: float = 0.0       # the lane's EWMA straggle the decision keyed on
+    failures: int = 0              # consecutive failed windows at decision time
+    est_migration: float = 0.0     # priced fold (exchange-lane cost units)
+    kind: ClassVar[str] = "quarantine"
+
+
+@dataclasses.dataclass(frozen=True)
+class Evict(Action):
+    """Remove a lane for good (permanent loss): hard worker loss discovered
+    by the recovery protocol, or a lane whose exchanges keep failing past
+    the retry budget.  Like :class:`Quarantine` the surviving workers adopt
+    the lane's state, but the device is never re-admitted."""
+
+    lane: int = 0
+    failures: int = 0
+    kind: ClassVar[str] = "evict"
+
+
+@dataclasses.dataclass(frozen=True)
+class Recover(Action):
+    """Re-admit the oldest quarantined lane after its probe timer expires
+    (the circuit breaker's half-open transition).  Priced: the fold-back
+    migration (``est_migration``) must pay for the capacity the extra
+    worker regains."""
+
+    lane: int = -1                 # original lane label (diagnostic)
+    est_migration: float = 0.0
+    kind: ClassVar[str] = "recover"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -74,6 +74,14 @@ class Signals:
                                            # when no exchange carried a
                                            # topology this window
     queue_depths: np.ndarray | None = None # serving replica queue depths
+    lane_straggle_s: np.ndarray | None = None  # float64[L] injected/observed
+                                           # per-lane straggle seconds this
+                                           # window (None: no fault evidence)
+    lane_retries: np.ndarray | None = None # int64[L] exchange retries per lane
+                                           # this window (transient failures)
+    degenerate_walls: int = 0              # NaN/negative wall samples clamped
+                                           # this window (a faulted batch's
+                                           # clock can run backwards)
     state_rows: int = 0                    # live keyed-state rows (migration scale)
     at_safe_point: bool = True             # decisions may act only when True
     consumer: str = ""                     # which runtime emitted this
@@ -182,6 +190,9 @@ class Telemetry:
         # backend -> EWMA of exchange wall per call; survives window resets
         # (evidence accumulated over the job's life, not one window)
         self.wall_ewma: dict[str, float] = {}
+        # lifetime count of degenerate (NaN / negative) wall samples clamped
+        # to zero; the per-window count rides Signals.degenerate_walls
+        self.degenerate_walls_total = 0
         self._reset()
 
     def _reset(self) -> None:
@@ -199,6 +210,9 @@ class Telemetry:
         self._replica_rows: np.ndarray | None = None
         self._rows_by_class: np.ndarray | None = None
         self._queues: np.ndarray | None = None
+        self._lane_straggle: np.ndarray | None = None
+        self._lane_retries: np.ndarray | None = None
+        self._degenerate_walls = 0
         # exchanges recorded this window whose count fields may still live
         # on device — folded (one host fetch each) at the next snapshot, so
         # recording never blocks the pipeline between safe points
@@ -269,21 +283,32 @@ class Telemetry:
                 "the measurements on the ExchangeStats record"
             )
         self._touch()
-        self._exchange_wall_s += float(stats.wall_s)
+        # degenerate wall samples (NaN / negative clock deltas from a
+        # faulted batch) clamp to zero and count the incident — they must
+        # not poison the windowed sums or the per-backend EWMA the
+        # BackendPolicy trusts as measured evidence
+        wall = self._clean_wall(stats.wall_s)
+        self._exchange_wall_s += wall
         if stats.count_wall_s is not None:
-            self._count_wall_s += float(stats.count_wall_s)
+            self._count_wall_s += self._clean_wall(stats.count_wall_s)
         if stats.ship_wall_s is not None:
-            self._ship_wall_s += float(stats.ship_wall_s)
+            self._ship_wall_s += self._clean_wall(stats.ship_wall_s)
         if stats.hidden_wall_s is not None:
-            self._hidden_wall_s += float(stats.hidden_wall_s)
-        if stats.backend is not None and stats.wall_s > 0.0:
+            self._hidden_wall_s += self._clean_wall(stats.hidden_wall_s)
+        if stats.backend is not None and wall > 0.0:
             prev = self.wall_ewma.get(stats.backend)
             self.wall_ewma[stats.backend] = (
-                float(stats.wall_s)
-                if prev is None
-                else 0.7 * prev + 0.3 * float(stats.wall_s)
+                wall if prev is None else 0.7 * prev + 0.3 * wall
             )
         self._pending_stats.append(stats)
+
+    def _clean_wall(self, wall) -> float:
+        w = float(wall)
+        if not np.isfinite(w) or w < 0.0:
+            self._degenerate_walls += 1
+            self.degenerate_walls_total += 1
+            return 0.0
+        return w
 
     def _flush_pending(self) -> None:
         """Fold the queued exchange records' count fields — the one place
@@ -318,6 +343,27 @@ class Telemetry:
                         self._rows_by_class, stats.rows_by_class
                     )
         self._pending_stats.clear()
+
+    def record_fault(self, lane: int, *, straggle_s: float = 0.0,
+                     retries: int = 0) -> None:
+        """Fold one lane's fault evidence for this window — injected or
+        observed straggle seconds and exchange retry counts.  The driver
+        drains its fault seam's report here; the lane-health layer reads
+        the folded vectors off the ``Signals`` snapshot."""
+        self._touch()
+        lane = int(lane)
+        width = lane + 1
+        if self._lane_straggle is None or len(self._lane_straggle) < width:
+            grown = np.zeros(width, np.float64)
+            if self._lane_straggle is not None:
+                grown[: len(self._lane_straggle)] = self._lane_straggle
+            self._lane_straggle = grown
+            grown_r = np.zeros(width, np.int64)
+            if self._lane_retries is not None:
+                grown_r[: len(self._lane_retries)] = self._lane_retries
+            self._lane_retries = grown_r
+        self._lane_straggle[lane] += max(float(straggle_s), 0.0)
+        self._lane_retries[lane] += max(int(retries), 0)
 
     def record_overflow(self, shuffle: int = 0, migration: int = 0) -> None:
         self._touch()
@@ -358,6 +404,9 @@ class Telemetry:
             exchange_replica_rows=self._replica_rows,
             exchange_rows_by_class=self._rows_by_class,
             queue_depths=self._queues,
+            lane_straggle_s=self._lane_straggle,
+            lane_retries=self._lane_retries,
+            degenerate_walls=self._degenerate_walls,
             state_rows=int(state_rows),
             at_safe_point=at_safe_point,
             consumer=self.consumer,

@@ -29,13 +29,17 @@ import numpy as np
 
 from repro.control.actions import (
     Action,
+    Evict,
     NoOp,
+    Quarantine,
+    Recover,
     Repartition,
     Resize,
     Split,
     SwitchBackend,
     Unsplit,
 )
+from repro.control.health import HealthPolicy, LaneHealth
 from repro.control.log import DecisionLog
 from repro.control.policy import (
     BackendPolicy,
@@ -147,6 +151,25 @@ class DRConfig:
                                      # for split hot keys (jnp route twin;
                                      # statically gates the Pallas kernel
                                      # off — see the class docstring)
+    # -- failure domains: auto-snapshots, replay, lane health --------------
+    snapshot_interval: int = 0       # auto-snapshot every N batches (0 = off);
+                                     # also bounds the zero-loss replay
+                                     # buffer — a worker loss restores the
+                                     # last snapshot and replays at most
+                                     # this many batches
+    health_enabled: bool = False     # let the HealthPolicy act on per-lane
+                                     # straggle/failure evidence
+    health_straggler_ms: float = 50.0  # quarantine when a lane's straggle
+                                     # EWMA stays past this many ms
+    health_failure_threshold: int = 3  # evict after this many *consecutive*
+                                     # failed windows on one lane
+    health_patience: int = 2         # consecutive sick safe points before
+                                     # a health action may fire
+    health_cooldown: int = 0         # min safe points between health
+                                     # actions (0 = off)
+    health_recover_after: int = 0    # probe (re-admit) a quarantined lane
+                                     # after this many safe points
+                                     # (0 = never re-admit)
 
     def __post_init__(self):
         if self.pipeline_depth not in (1, 2):
@@ -154,23 +177,40 @@ class DRConfig:
                 f"pipeline_depth must be 1 (ship-behind-host-work overlap) or "
                 f"2 (batch-ahead route), got {self.pipeline_depth!r}"
             )
-        if self.elastic:
-            assert self.grow_trigger > self.shrink_trigger, (
+        # knob relationships are validated unconditionally — a config whose
+        # dead zones are inverted is wrong even while its feature flag is
+        # off (it used to fail silently the day the flag turned on)
+        if self.grow_trigger <= self.shrink_trigger:
+            raise ValueError(
                 "elastic resize needs a trigger-gap dead zone: "
-                f"grow_trigger {self.grow_trigger} <= shrink_trigger {self.shrink_trigger}"
+                f"grow_trigger {self.grow_trigger} <= shrink_trigger "
+                f"{self.shrink_trigger}"
             )
-        if self.auto_backend:
-            assert self.backend_ragged_below < self.backend_dense_above, (
+        if self.backend_ragged_below >= self.backend_dense_above:
+            raise ValueError(
                 "backend auto-selection needs a threshold dead zone: "
                 f"backend_ragged_below {self.backend_ragged_below} >= "
                 f"backend_dense_above {self.backend_dense_above}"
             )
-        if self.split_keys_enabled:
-            assert self.split_trigger > self.unsplit_trigger, (
+        if self.split_trigger <= self.unsplit_trigger:
+            raise ValueError(
                 "hot-key splitting needs a trigger-gap dead zone: "
                 f"split_trigger {self.split_trigger} <= "
                 f"unsplit_trigger {self.unsplit_trigger}"
             )
+        for knob in ("min_batches_between", "resize_patience",
+                     "resize_cooldown", "backend_patience",
+                     "backend_cooldown", "split_patience", "split_cooldown",
+                     "snapshot_interval", "health_patience",
+                     "health_cooldown", "health_recover_after",
+                     "health_straggler_ms", "target_throughput"):
+            if getattr(self, knob) < 0:
+                raise ValueError(
+                    f"{knob} must be >= 0, got {getattr(self, knob)!r}")
+        if self.health_failure_threshold < 1:
+            raise ValueError(
+                "health_failure_threshold must be >= 1 (0 would evict a "
+                f"healthy lane), got {self.health_failure_threshold!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,11 +258,18 @@ class DRMaster:
         self.split_keys: dict[int, int] = dict(initial.split_map())
         self.split_streak = 0
         self.last_split = -(10**9)
+        # failure-domain state: per-live-lane health (built lazily from the
+        # first safe point's worker count), the quarantine ledger — (lane
+        # label, tick quarantined), oldest first — and the health cooldown
+        self.lane_health: LaneHealth | None = None
+        self.quarantined: list[tuple[int, int]] = []
+        self.last_health_action = -(10**9)
         # the policy stack this master hosts + its decision log
         self.repartition_policy = RepartitionPolicy()
         self.resize_policy = ResizePolicy()
         self.backend_policy = BackendPolicy()
         self.split_policy = SplitPolicy()
+        self.health_policy = HealthPolicy()
         self.decisions = DecisionLog(consumer)
 
     # -- DRW ingestion ------------------------------------------------------
@@ -280,11 +327,15 @@ class DRMaster:
         elif not policies_enabled:
             action = NoOp("dr-disabled", signals.imbalance)
         else:
-            action = self.resize_policy.evaluate(self, signals)
-            if isinstance(action, NoOp):
-                if action.reason != "elastic-disabled":
-                    detail["resize_declined"] = action.reason
-                action = self.split_policy.evaluate(self, signals)
+            # failure domains first: a sick lane invalidates every
+            # load-based signal the policies below would key on
+            action = self._evaluate_health(signals, detail)
+            if action is None:
+                action = self.resize_policy.evaluate(self, signals)
+                if isinstance(action, NoOp):
+                    if action.reason != "elastic-disabled":
+                        detail["resize_declined"] = action.reason
+                    action = self.split_policy.evaluate(self, signals)
             if isinstance(action, (Split, Unsplit)):
                 self._install_split(action)
             elif isinstance(action, NoOp):
@@ -305,6 +356,68 @@ class DRMaster:
         self.decisions.record(action, tick=self.batches_seen,
                               imbalance=signals.imbalance, detail=detail)
         return action
+
+    def _evaluate_health(self, signals: Signals, detail: dict) -> Action | None:
+        """Run the failure-domain policy first in the evaluate precedence.
+
+        Folds the window's fault evidence into :class:`LaneHealth` (built
+        lazily at the live worker count — a restore onto a shrunk topology
+        starts the health view fresh) and returns a *taken* health action,
+        bookkept, or ``None`` to fall through to the load policies."""
+        if self.config.health_enabled:
+            w = max(int(signals.num_workers), 1)
+            if self.lane_health is None or self.lane_health.num_lanes != w:
+                self.lane_health = LaneHealth(w, alpha=self.config.ewma_alpha)
+            self.lane_health.observe(signals)
+        action = self.health_policy.evaluate(self, signals)
+        if action.taken:
+            self._note_health(action)
+            return action
+        if action.reason != "health-disabled":
+            detail["health_declined"] = action.reason
+        return None
+
+    def _note_health(self, action: Action) -> None:
+        """Install a taken health action (DRM bookkeeping).  Counts as this
+        safe point's decision — advances ``batches_seen`` and stamps
+        ``last_repartition`` like every state-moving install, plus the
+        health cooldown; the *driver* reshapes the mesh and folds the
+        state."""
+        self.batches_seen += 1
+        self.last_health_action = self.batches_seen
+        self.last_repartition = self.batches_seen
+        if isinstance(action, Quarantine):
+            self.quarantined.append((int(action.lane), self.batches_seen))
+            if (self.lane_health is not None
+                    and int(action.lane) < self.lane_health.num_lanes):
+                self.lane_health.drop_lane(int(action.lane))
+        elif isinstance(action, Evict):
+            if (self.lane_health is not None
+                    and 0 <= int(action.lane) < self.lane_health.num_lanes):
+                self.lane_health.drop_lane(int(action.lane))
+        elif isinstance(action, Recover):
+            if self.quarantined:
+                self.quarantined.pop(0)
+            if self.lane_health is not None:
+                self.lane_health.add_lane()
+        self.history.append({
+            "batch": self.batches_seen,
+            "health": (action.kind, int(getattr(action, "lane", -1))),
+            "reason": action.reason,
+        })
+
+    def note_lost(self, lane: int, *, reason: str) -> None:
+        """Record a hard worker loss the recovery protocol discovered as a
+        forced :class:`Evict` — failures land in the decision log exactly
+        like policy decisions, reasons and all.  ``lane`` is the lost
+        lane's *original* label (the live mesh no longer contains it)."""
+        action = Evict(reason=reason, lane=int(lane))
+        # the label indexes the *lost* topology — drop the stale health
+        # view; the next safe point rebuilds it at the surviving width
+        self.lane_health = None
+        self._note_health(action)
+        self.decisions.record(action, tick=self.batches_seen, imbalance=1.0,
+                              detail={"forced": "worker-lost"})
 
     def _install(self, action: Repartition) -> None:
         """Swap in a taken repartition at the safe point (DRM bookkeeping)."""
@@ -492,6 +605,17 @@ class DRMaster:
                 "topology_class_weights": np.asarray(
                     self.exchange_topology.class_weights, np.float64),
             } if self.exchange_topology is not None else {}),
+            # failure-domain state rides only when the layer is live, so
+            # legacy snapshot round-trips stay byte-stable
+            **(self.lane_health.snapshot()
+               if self.lane_health is not None else {}),
+            **({
+                "quarantined_lane": np.asarray(
+                    [l for l, _ in self.quarantined], np.int64),
+                "quarantined_tick": np.asarray(
+                    [t for _, t in self.quarantined], np.int64),
+                "last_health_action": np.int64(self.last_health_action),
+            } if (self.quarantined or self.lane_health is not None) else {}),
             # decision log: a restored job keeps its decision history
             **self.decisions.to_arrays(),
         }
@@ -544,6 +668,16 @@ class DRMaster:
             ))
         drm.last_split = int(snap.get("last_split", -(10**9)))
         drm.split_streak = int(snap.get("split_streak", 0))
+        # failure-domain state (older snapshots predate the health layer)
+        if "health_num_lanes" in snap:
+            drm.lane_health = LaneHealth.restore(snap,
+                                                 alpha=config.ewma_alpha)
+        if "quarantined_lane" in snap:
+            drm.quarantined = list(zip(
+                np.asarray(snap["quarantined_lane"]).astype(int).tolist(),
+                np.asarray(snap["quarantined_tick"]).astype(int).tolist(),
+            ))
+        drm.last_health_action = int(snap.get("last_health_action", -(10**9)))
         # decision history (older snapshots predate the log — empty is fine)
         if "decisions_tick" in snap:
             drm.decisions = DecisionLog.from_arrays(snap)

@@ -61,6 +61,7 @@ from repro.exchange import (
     PendingExchange,
     SendInfo,
     make_exchange,
+    maybe_inject,
     route_bucketize,
     route_dispatch,
 )
@@ -301,10 +302,12 @@ def make_shuffle_step(
 
     def step(tables: PartitionerTables, keys, vals, valid,
              part_loads=None) -> ShuffleResult:
+        maybe_inject(ex.backend, "shuffle")  # host boundary: faults fire here
         pl = zero_loads if part_loads is None else part_loads
         return ShuffleResult(*jstep(tuple(tables), keys, vals, valid, pl))
 
     def start(tables: PartitionerTables, keys, vals, valid, part_loads=None):
+        maybe_inject(ex.backend, "shuffle")
         bufs = recycled.pop() if recycled else None
         if bufs is not None and (bufs[1][1].shape[3:] != vals.shape[1:]
                                  or bufs[1][1].dtype != vals.dtype):
@@ -489,9 +492,11 @@ def make_migrate_step(
         ), buf_sharding)
 
     def migrate(new_tables, state_keys, state_vals):
+        maybe_inject(ex.backend, "migrate")  # host boundary: faults fire here
         return jmig(tuple(new_tables), state_keys, state_vals)
 
     def start(new_tables, state_keys, state_vals):
+        maybe_inject(ex.backend, "migrate")
         bufs = recycled.pop() if recycled else None
         if bufs is not None and (bufs[1][1].shape[3:] != state_vals.shape[2:]
                                  or bufs[1][1].dtype != state_vals.dtype):

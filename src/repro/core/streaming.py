@@ -102,7 +102,10 @@ from jax.sharding import Mesh
 
 from repro.compat import host_fetch, overlap_enabled, safe_point
 from repro.control import (
+    Evict,
     NoOp,
+    Quarantine,
+    Recover,
     Repartition,
     Resize,
     Split,
@@ -130,11 +133,13 @@ from repro.exchange import (
     ExchangeSpec,
     ExchangeStats,
     ExchangeTopology,
+    FaultyBackend,
+    WorkerLostError,
     resolve_backend,
 )
 from repro.exchange.spec import DISTANCE_CLASSES
 
-__all__ = ["StreamingJob", "BatchMetrics"]
+__all__ = ["StreamingJob", "BatchMetrics", "RecoveryStats"]
 
 
 @dataclasses.dataclass
@@ -169,6 +174,23 @@ class BatchMetrics:
     shipped_rows_by_class: tuple = (0, 0, 0)  # shipped_rows split by lane
                                 # distance class (self / intra-host /
                                 # inter-host, per worker); zeros on flat jobs
+    lanes: int = 0              # live workers after this batch (a health
+                                # action or a loss shrinks this mid-stream)
+
+
+@dataclasses.dataclass
+class RecoveryStats:
+    """One zero-loss recovery: the lane lost, how the job survived it
+    (``evict`` = shrunk onto the survivors; ``restart`` = restored in place
+    — the single-worker fallback), how many gap batches the replay buffer
+    re-ran, the worker count after, and the end-to-end recovery wall
+    (drain + restore + replay, up to the lost batch's successful retry)."""
+
+    lane: int
+    kind: str                   # "evict" | "restart"
+    replayed: int
+    workers: int
+    wall_s: float = 0.0
 
 
 def _default_mesh(axis: str = "data") -> Mesh:
@@ -197,7 +219,7 @@ class StreamingJob:
         initial: Partitioner | None = None,
         hist_k: int = 64,
         seed: int = 0,
-        exchange_backend: str | None = None,
+        exchange_backend: str | object | None = None,
         topology: ExchangeTopology | None = None,
     ):
         self.mesh = mesh or _default_mesh()
@@ -255,6 +277,15 @@ class StreamingJob:
         # safe points; None until the first batch lands (and after a resize
         # changes the vector's width)
         self._part_loads: jax.Array | None = None
+        # failure domains: current -> original lane map (plan lanes are
+        # original ids), quarantined (original id, device) pairs oldest
+        # first, the auto-snapshot + bounded replay buffer
+        # (``DRConfig.snapshot_interval``), and the recovery record
+        self._lane_ids: list[int] = list(range(self.num_workers))
+        self._parked: list[tuple[int, object]] = []
+        self._auto_snap: dict | None = None
+        self._replay: list[tuple[np.ndarray, np.ndarray | None]] = []
+        self.recoveries: list[RecoveryStats] = []
         self.metrics: list[BatchMetrics] = []
         self._merge = jax.jit(jax.vmap(lambda sk, sv, bk, bv, bva: merge_into(sk, sv, bk, bv, bva)))
 
@@ -415,7 +446,71 @@ class StreamingJob:
 
     # ------------------------------------------------------------------
     def process_batch(self, keys: np.ndarray, values: np.ndarray | None = None) -> BatchMetrics:
-        """Run one micro-batch through shuffle + stateful reduce + DR."""
+        """Run one micro-batch through shuffle + stateful reduce + DR.
+
+        With ``DRConfig.snapshot_interval > 0`` this is also the zero-loss
+        recovery protocol's outer loop: an initial auto-snapshot is taken
+        lazily, every processed batch lands in the bounded replay buffer,
+        and a :class:`~repro.exchange.WorkerLostError` surfacing from the
+        exchange seam triggers recovery — quiesce the surviving in-flight
+        stages, evict the lost lane (shrinking the mesh; a single-worker
+        job restarts in place), restore the last snapshot, replay the gap
+        batches, then retry this batch on the surviving topology.  No row
+        is lost: every batch since the snapshot either replays or retries.
+        With ``snapshot_interval == 0`` a loss propagates (failure stays an
+        abort, the pre-PR-10 behavior).
+        """
+        cfg = self.drm.config
+        if cfg.snapshot_interval > 0 and self._auto_snap is None:
+            # lazy initial snapshot: the zero state is trivially consistent
+            self._auto_snap = self.snapshot()
+            self._replay = []
+        pending_rec: tuple[RecoveryStats, float] | None = None
+        replaying: list = []  # gap batches still to re-run before this one
+        budget = self.num_workers + 1
+        while True:
+            try:
+                while replaying:
+                    rk, rv = replaying[0]
+                    self._process_batch_inner(rk, rv)
+                    replaying.pop(0)
+                    # a completed batch is progress: the backstop budget
+                    # guards against recovery that can't advance, not
+                    # against a stream that keeps losing (distinct) workers
+                    budget = self.num_workers + 1
+                m = self._process_batch_inner(keys, values)
+                break
+            except WorkerLostError as loss:
+                budget -= 1
+                if budget <= 0 or cfg.snapshot_interval <= 0:
+                    raise
+                t_rec = time.perf_counter()
+                kind = self._recover_from_loss(loss)
+                replaying = list(self._replay)
+                rec = RecoveryStats(lane=loss.lane, kind=kind,
+                                    replayed=len(replaying),
+                                    workers=self.num_workers)
+                self.recoveries.append(rec)
+                pending_rec = (rec, t_rec)
+        if pending_rec is not None:
+            rec, t_rec = pending_rec
+            rec.wall_s = time.perf_counter() - t_rec
+            rec.workers = self.num_workers
+        if cfg.snapshot_interval > 0:
+            if m.action in ("quarantine", "evict", "recover"):
+                # the topology changed under the snapshot: re-snapshot now
+                # so a later restore lands on the live worker layout
+                self._auto_snap = self.snapshot()
+                self._replay = []
+            else:
+                self._replay.append((keys, values))
+                if len(self._replay) >= cfg.snapshot_interval:
+                    self._auto_snap = self.snapshot()
+                    self._replay = []
+        return m
+
+    def _process_batch_inner(self, keys: np.ndarray,
+                             values: np.ndarray | None = None) -> BatchMetrics:
         t0 = time.perf_counter()
         raw_keys = keys
         has_values = values is not None
@@ -523,6 +618,20 @@ class StreamingJob:
             self.telemetry.record_exchange(stats)
             self.telemetry.record_overflow(shuffle=overflow_i)
             self.telemetry.record_batch(float(loads.sum()))
+            # fault evidence: drain the seam's per-lane report (straggle
+            # seconds, retries) into ordinary telemetry — the lane-health
+            # layer's input.  Plans are keyed by original lane id; the
+            # report re-maps onto current positions.  A plain transport has
+            # no report; a never-firing plan drains empty — both leave the
+            # telemetry bit-identical to a no-faults run.
+            drain = getattr(self.exchange_backend, "drain_report", None)
+            if drain is not None:
+                for orig, rec in drain().items():
+                    if orig in self._lane_ids:
+                        self.telemetry.record_fault(
+                            self._lane_ids.index(orig),
+                            straggle_s=rec.get("straggle_s", 0.0),
+                            retries=rec.get("retries", 0))
 
             # DRM: ingest DRW histograms + run the policy stack at the safe point
             self.drm.observe(host_fetch(res.hist_keys), host_fetch(res.hist_counts),
@@ -579,6 +688,16 @@ class StreamingJob:
             # the job adopts it and rebuilds its jitted steps, exactly like a
             # resize rebuilds them for a new lane count.  No state moves.
             self._apply_backend_switch()
+        elif isinstance(action, Quarantine):
+            # circuit breaker open: the sick lane leaves the collective, its
+            # device parks for a possible Recover, and the survivors adopt
+            # its state (the modulo placement re-folds the partitions)
+            self._apply_lane_removal(action.lane, park=True)
+        elif isinstance(action, Evict):
+            self._apply_lane_removal(action.lane, park=False)
+        elif isinstance(action, Recover):
+            # half-open probe: re-admit the oldest parked lane
+            self._apply_recover()
         # a taken Split needs no execution here: the DRM stamped the replica
         # table and the very next batch's route kernels fan the key out
         with safe_point():  # migrations only fire at safe points
@@ -632,6 +751,7 @@ class StreamingJob:
             overlap_fraction=signals.overlap_fraction,
             split_keys=len(self.drm.split_keys),
             shipped_rows_by_class=tuple(int(x) for x in by_class),
+            lanes=self.num_workers,
         )
         # the host wall since the count sync ran under this batch's (or the
         # migration's) in-flight ship — that's the latency the overlap hid.
@@ -675,11 +795,149 @@ class StreamingJob:
 
         The jitted shuffle/migrate steps were built for the old backend, so
         both caches drop — the next batch rebuilds them for the new
-        transport (the same rebuild contract as an elastic resize)."""
-        self.exchange_backend = self.drm.exchange_backend
+        transport (the same rebuild contract as an elastic resize).  A
+        fault seam stays armed across the switch: the wrapper re-points
+        its inner transport instead of being replaced."""
+        new = self.drm.exchange_backend
+        if (isinstance(self.exchange_backend, FaultyBackend)
+                and not isinstance(new, FaultyBackend)):
+            self.exchange_backend.inner = resolve_backend(new)
+            self.drm.exchange_backend = self.exchange_backend
+        else:
+            self.exchange_backend = new
         self._shuffle = None
         self._shuffle_sig = None
         self._migrate_steps.clear()
+
+    # -- failure domains: lane removal / re-admission / recovery ---------
+    def _set_workers(self, devices: list) -> None:
+        """Rebuild the mesh over ``devices`` and drop everything keyed to
+        the old topology: jitted step caches (their shard_maps bound the old
+        mesh), the in-flight/staged pipeline stages, and the least-load
+        vector.  The partitioner is untouched — partitions re-fold onto the
+        new worker count through the modulo placement."""
+        self.mesh = Mesh(np.asarray(devices), ("data",))
+        self.num_workers = len(devices)
+        self._shuffle = None
+        self._shuffle_sig = None
+        self._migrate_steps.clear()
+        self._part_loads = None
+        self._inflight = None
+        self._hidden_since = None
+        self._staged = None
+
+    def _apply_lane_removal(self, lane: int, *, park: bool) -> None:
+        """Execute a Quarantine (``park=True``) or Evict at a safe point:
+        fetch the state (the pre-action drain already completed), remove
+        the lane from the collective, and fold its rows onto the
+        survivors."""
+        with safe_point():
+            sk = np.asarray(host_fetch(self._sk))
+            sv = np.asarray(host_fetch(self._sv))
+        devices = list(self.mesh.devices.flat)
+        device = devices.pop(lane)
+        orig = self._lane_ids.pop(lane)
+        if park:
+            self._parked.append((orig, device))
+        backend = self.exchange_backend
+        if isinstance(backend, FaultyBackend):
+            (backend.note_quarantined if park else backend.note_evicted)(orig)
+        self._set_workers(devices)
+        self._adopt_state(sk, sv)
+
+    def _apply_recover(self) -> None:
+        """Execute a Recover at a safe point: re-admit the oldest parked
+        device and spread the state back over the grown collective."""
+        if not self._parked:
+            # a restored ledger can outlive the physical parked list (the
+            # snapshot predated the quarantine): reconcile and decline
+            self.drm.quarantined.clear()
+            return
+        with safe_point():
+            sk = np.asarray(host_fetch(self._sk))
+            sv = np.asarray(host_fetch(self._sv))
+        orig, device = self._parked.pop(0)
+        self._lane_ids.append(orig)
+        backend = self.exchange_backend
+        if isinstance(backend, FaultyBackend):
+            backend.note_recovered(orig)
+        self._set_workers(list(self.mesh.devices.flat) + [device])
+        self._adopt_state(sk, sv)
+
+    def _adopt_state(self, sk: np.ndarray, sv: np.ndarray) -> None:
+        """Redistribute host-side state tables onto the *current* worker
+        count: merge duplicate keys (split partial aggregates from
+        different source workers co-land here — the keyed reduce is a sum,
+        so merging early is the combiner-side merge), route every key to
+        its home partition's worker, and rebuild the stacked tables.
+        Capacity overflow is surfaced through telemetry, never silent."""
+        w, cap = self.num_workers, self.state_capacity
+        keys = np.asarray(sk).reshape(-1)
+        vals = np.asarray(sv).reshape(-1, np.asarray(sv).shape[-1])
+        live = keys != KEY_SENTINEL
+        keys, vals = keys[live], vals[live]
+        uniq, inv = np.unique(keys, return_inverse=True)
+        acc = np.zeros((len(uniq),) + vals.shape[1:], vals.dtype)
+        np.add.at(acc, inv, vals)
+        dest = self.drm.partitioner.lookup_np(uniq.astype(np.int32)) % w
+        new_k = np.full((w, cap), KEY_SENTINEL, np.int32)
+        new_v = np.zeros((w, cap) + vals.shape[1:], np.float32)
+        overflow = 0
+        for worker in range(w):
+            rows = np.nonzero(dest == worker)[0]
+            if len(rows) > cap:
+                overflow += len(rows) - cap
+                rows = rows[:cap]
+            new_k[worker, : len(rows)] = uniq[rows]
+            new_v[worker, : len(rows)] = acc[rows]
+        self._sk = jnp.asarray(new_k)
+        self._sv = jnp.asarray(new_v)
+        self._last_state_rows = int((new_k != KEY_SENTINEL).sum())
+        if overflow:
+            self.telemetry.record_overflow(migration=overflow)
+
+    def _recover_from_loss(self, loss: WorkerLostError) -> str:
+        """Zero-loss recovery from a hard worker loss (the safe-point
+        protocol's failure branch).  Quiesce the surviving in-flight
+        stages, evict the lost lane (shrinking the mesh; the last worker
+        restarts in place instead), restore the last auto-snapshot onto
+        the surviving topology, and record the forced eviction.  The
+        caller replays the gap and retries the lost batch."""
+        try:
+            self._drain_inflight()  # quiesce survivors (state is discarded
+        except Exception:           # below, but the device queue must empty)
+            self._inflight = None
+            self._hidden_since = None
+        self._discard_staged()
+        backend = self.exchange_backend
+        kind = "evict"
+        if self.num_workers > 1 and loss.lane in self._lane_ids:
+            lane = self._lane_ids.index(loss.lane)
+            devices = list(self.mesh.devices.flat)
+            devices.pop(lane)
+            self._lane_ids.pop(lane)
+            self._set_workers(devices)
+            if isinstance(backend, FaultyBackend):
+                backend.note_evicted(loss.lane)
+        else:
+            kind = "restart"  # single worker (or already-removed lane):
+            #                   restore + replay in place.  The restarted
+            #                   lane stays fault-eligible — only the
+            #                   standing death clears
+            if isinstance(backend, FaultyBackend):
+                backend.note_restarted(loss.lane)
+        snap = self._auto_snap
+        assert snap is not None, "recovery requires snapshot_interval > 0"
+        self.restore(snap, _keep_recovery_log=True)
+        # the restored DRM predates the loss: log the forced eviction so
+        # the decision trail carries the failure, and reconcile its
+        # quarantine ledger with the physically parked devices
+        self.drm.note_lost(loss.lane, reason=str(loss))
+        while len(self.drm.quarantined) > len(self._parked):
+            self.drm.quarantined.pop()
+        while len(self.drm.quarantined) < len(self._parked):
+            self.drm.quarantined.append((-1, self.drm.batches_seen))
+        return kind
 
     def _apply_resize(self, n: int):
         """Execute a resize at a safe point: re-plan cross-size, migrate
@@ -807,7 +1065,7 @@ class StreamingJob:
             **{f"drm_{k}": v for k, v in self.drm.snapshot().items()},
         }
 
-    def restore(self, snap: dict) -> None:
+    def restore(self, snap: dict, *, _keep_recovery_log: bool = False) -> None:
         # any in-flight finish belongs to the state being replaced: discard,
         # along with any staged lookahead start (its route used the replaced
         # partitioner) and the least-load vector (measured pre-restore)
@@ -815,15 +1073,31 @@ class StreamingJob:
         self._hidden_since = None
         self._staged = None
         self._part_loads = None
-        self.state_keys = jnp.asarray(snap["state_keys"])
-        self.state_vals = jnp.asarray(snap["state_vals"])
         drm_snap = {k[4:]: v for k, v in snap.items() if k.startswith("drm_")}
         self.drm = DRMaster.restore(drm_snap, self.drm.config)
+        snap_keys = np.asarray(snap["state_keys"])
+        if snap_keys.shape[0] != self.num_workers:
+            # cross-topology restore: the snapshot was cut on a different
+            # worker count (recovery shrank the mesh since, or the snapshot
+            # rode over a quarantine) — re-fold the rows onto the live
+            # layout instead of adopting the stale stacking
+            self._adopt_state(snap_keys, np.asarray(snap["state_vals"]))
+        else:
+            self.state_keys = jnp.asarray(snap_keys)
+            self.state_vals = jnp.asarray(snap["state_vals"])
         if "exchange_backend" in drm_snap:
             # the snapshot's *active* transport wins: a BackendPolicy switch
             # taken before the snapshot survives the restore, whatever
-            # backend this job object was constructed with
-            self.exchange_backend = self.drm.exchange_backend
+            # backend this job object was constructed with — but an armed
+            # fault seam survives too: the wrapper re-points its inner
+            # transport rather than being dropped by the restore
+            restored = self.drm.exchange_backend
+            if (isinstance(self.exchange_backend, FaultyBackend)
+                    and not isinstance(restored, FaultyBackend)):
+                self.exchange_backend.inner = resolve_backend(restored)
+                self.drm.exchange_backend = self.exchange_backend
+            else:
+                self.exchange_backend = restored
         else:  # legacy snapshot predating backends: job's transport stands
             self.drm.exchange_backend = self.exchange_backend
         if self.drm.exchange_topology is not None:
@@ -844,4 +1118,17 @@ class StreamingJob:
         self._shuffle_sig = None
         self._migrate_steps.clear()
         self._pending_resize = None
+        if not _keep_recovery_log:
+            # an external restore starts a fresh failure epoch: the old
+            # auto-snapshot and replay buffer describe a timeline this
+            # job just left.  (The recovery protocol itself restores with
+            # ``_keep_recovery_log=True`` — the gap batches in the buffer
+            # are exactly what it is about to replay.)
+            self._auto_snap = None
+            self._replay = []
+        # the restored quarantine ledger can disagree with the physically
+        # parked devices (the snapshot predates a quarantine, or rode over
+        # one): the parked list is ground truth for what can re-admit
+        while len(self.drm.quarantined) > len(self._parked):
+            self.drm.quarantined.pop()
         self._state_rows()  # refresh the drain-time row cache

@@ -293,8 +293,12 @@ def test_replan_resize_rewarns_sketch_before_growing():
 
 
 def test_trigger_gap_dead_zone_enforced():
-    with pytest.raises(AssertionError):
+    # validated unconditionally now: an inverted dead zone is wrong even
+    # while the feature flag is off
+    with pytest.raises(ValueError):
         DRConfig(elastic=True, grow_trigger=1.2, shrink_trigger=1.3)
+    with pytest.raises(ValueError):
+        DRConfig(grow_trigger=1.2, shrink_trigger=1.3)
 
 
 # ---------------------------------------------------------------------------

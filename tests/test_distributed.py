@@ -475,3 +475,87 @@ def test_moe_ragged_backhaul_on_8_devices():
         timeout=600,
     )
     assert "MOE-BACKHAUL-OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
+FAULT_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    assert len(jax.devices()) == 8
+
+    from repro.core.drm import DRConfig
+    from repro.core.streaming import StreamingJob
+    from repro.data.generators import drifting_zipf
+    from repro.exchange import FaultPlan, FaultyBackend, LaneFault
+
+    batches = list(drifting_zipf(8, 8192, num_keys=2000, exponent=1.3,
+                                 drift_every=100, seed=0))
+    all_keys = np.concatenate(batches)
+    probe = np.unique(all_keys)[:10]
+
+    def run(dr, backend=None):
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = {"exchange_backend": backend} if backend is not None else {}
+        job = StreamingJob(mesh=mesh, num_partitions=8, state_capacity=4096,
+                           dr=dr, **kw)
+        ms = job.run(batches)
+        return job, ms
+
+    def traj(ms):
+        return [(m.action, m.reason, m.overflow, m.shipped_rows) for m in ms]
+
+    # 1. never-firing identity, serial AND depth-2: an installed FaultPlan
+    #    that never fires is bit-identical to no seam at all
+    for depth in (1, 2):
+        dr = lambda: DRConfig(imbalance_trigger=1.1,
+                              migration_cost_weight=0.1,
+                              pipeline_depth=depth)
+        ref_job, ref_ms = run(dr())
+        seam_job, seam_ms = run(dr(), FaultyBackend("dense", FaultPlan()))
+        assert traj(ref_ms) == traj(seam_ms), (depth, traj(ref_ms),
+                                               traj(seam_ms))
+        for key in probe:
+            assert ref_job.state_count(int(key)) == \\
+                seam_job.state_count(int(key)), (depth, key)
+
+    # 2. kill a worker mid-stream: recover via restore + replay onto the
+    #    shrunk topology with zero rows lost
+    ref_job, _ = run(DRConfig(imbalance_trigger=1e9))
+    plan = FaultPlan(faults=(LaneFault(4, 5, "kill"),))
+    job, ms = run(DRConfig(imbalance_trigger=1e9, snapshot_interval=3),
+                  FaultyBackend("dense", plan))
+    assert len(job.recoveries) == 1, job.recoveries
+    rec = job.recoveries[0]
+    assert rec.kind == "evict" and rec.lane == 5, rec
+    assert job.num_workers == 7
+    assert ms[-1].lanes == 7
+    for key in probe:
+        got = job.state_count(int(key))
+        want = float((all_keys == key).sum())
+        assert got == want, (key, got, want)
+    # survivors hold only keys the partitioner folds onto them
+    sk = np.asarray(job.state_keys)
+    part = job.drm.partitioner
+    for w in range(7):
+        keys_w = sk[w][sk[w] != 2**31 - 1]
+        if len(keys_w):
+            assert np.all(part.lookup_np(keys_w.astype(np.int32)) % 7 == w)
+
+    print("FAULTS-OK")
+    """
+)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_fault_recovery_on_8_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", FAULT_SCRIPT], capture_output=True, text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900,
+    )
+    assert "FAULTS-OK" in out.stdout, out.stdout + "\n" + out.stderr

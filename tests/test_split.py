@@ -190,9 +190,13 @@ def test_unsplit_fires_when_cooled():
 
 
 def test_split_config_needs_dead_zone():
-    with pytest.raises(AssertionError):
+    # validation is unconditional now (PR 10): the dead-zone requirement
+    # raises a ValueError whether or not splitting is enabled
+    with pytest.raises(ValueError, match="dead zone"):
         DRConfig(split_keys_enabled=True, split_trigger=0.7,
                  unsplit_trigger=0.8)
+    with pytest.raises(ValueError, match="dead zone"):
+        DRConfig(split_trigger=0.7, unsplit_trigger=0.8)
 
 
 # ---------------------------------------------------------------------------

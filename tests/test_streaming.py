@@ -189,3 +189,65 @@ def test_batch_replay_noop_when_uniform():
     keys = rng.integers(0, 10**6, 50_000)
     res = BatchJob(num_partitions=8).run(keys)
     assert res.imbalance_after <= res.imbalance_before + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# legacy snapshot restore (forward compatibility with older checkpoints)
+# ---------------------------------------------------------------------------
+
+
+def _legacy_roundtrip(strip_prefixes):
+    """Cut a snapshot, delete newer key families, restore into a fresh job
+    and continue — per-key totals must still be conserved."""
+    mk = lambda: StreamingJob(
+        num_partitions=4, state_capacity=4096,
+        dr=DRConfig(imbalance_trigger=1e9))
+    batches = [zipf_keys(2048, num_keys=300, exponent=1.3, seed=s)
+               for s in range(3)]
+    job = mk()
+    job.process_batch(batches[0])
+    job.process_batch(batches[1])
+    snap = job.snapshot()
+    stripped = {k: v for k, v in snap.items()
+                if not any(k.startswith(p) for p in strip_prefixes)}
+    job2 = mk()
+    job2.restore(stripped)
+    job2.process_batch(batches[2])
+    all_keys = np.concatenate(batches)
+    for key in np.unique(all_keys)[:5]:
+        assert job2.state_count(int(key)) == pytest.approx(
+            float((all_keys == key).sum()))
+    return job2
+
+
+def test_restore_legacy_snapshot_without_backend_key():
+    job = _legacy_roundtrip(["drm_exchange_backend"])
+    # pre-backend snapshot: the job's construction-time transport stands
+    assert job.exchange_backend.name == "dense"
+    assert job.drm.exchange_backend is job.exchange_backend
+
+
+def test_restore_legacy_snapshot_without_topology_keys():
+    job = _legacy_roundtrip(["drm_topology"])
+    assert job.exchange_topology is None  # flat world stands
+
+
+def test_restore_legacy_snapshot_without_split_keys():
+    job = _legacy_roundtrip(["drm_split"])
+    assert job.drm.split_keys == {}  # nothing splits until re-evidenced
+
+
+def test_restore_legacy_snapshot_without_health_keys():
+    job = _legacy_roundtrip(["drm_health", "drm_quarantined",
+                             "drm_last_health_action"])
+    assert job.drm.lane_health is None
+    assert job.drm.quarantined == []
+
+
+def test_restore_legacy_snapshot_minimal():
+    # the original PR-5 era snapshot: state + partitioner/sketch only
+    job = _legacy_roundtrip(["drm_exchange_backend", "drm_topology",
+                             "drm_split", "drm_health", "drm_quarantined",
+                             "drm_last_health_action", "drm_backend_streak",
+                             "drm_last_backend_switch"])
+    assert job.drm.lane_health is None
